@@ -1,0 +1,80 @@
+"""Roofline benchmark: summarize the dry-run grid artifacts (§Roofline terms
+per arch x shape), plus measured step timings of reduced configs on CPU."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def _summarize_dryrun():
+    rows = []
+    path = os.path.join(ARTIFACTS, "dryrun_grid_v3.json")   # final parser
+    if not os.path.exists(path):
+        path = os.path.join(ARTIFACTS, "dryrun_grid.json")
+    if not os.path.exists(path):
+        rows.append(("roofline.dryrun_grid", 0.0, "MISSING (run "
+                     "`python -m repro.launch.dryrun --all --out "
+                     "benchmarks/artifacts/dryrun_grid.json`)"))
+        return rows
+    with open(path) as f:
+        recs = json.load(f)
+    ok = [r for r in recs if r.get("ok")]
+    rows.append(("roofline.pairs_ok", 0.0, f"{len(ok)}/{len(recs)}"))
+    for r in ok:
+        rl = r["roofline"]
+        tag = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}"
+        rows.append((f"{tag}.bottleneck", 0.0, rl["bottleneck"]))
+        rows.append((f"{tag}.compute_ms", 0.0, round(rl["compute_s"] * 1e3, 3)))
+        rows.append((f"{tag}.memory_ms", 0.0, round(rl["memory_s"] * 1e3, 3)))
+        rows.append((f"{tag}.collective_ms", 0.0,
+                     round(rl["collective_s"] * 1e3, 3)))
+        rows.append((f"{tag}.useful_flops_ratio", 0.0,
+                     round(rl["useful_ratio"], 3)))
+    return rows
+
+
+def _measured_step_time():
+    """Wall-clock per train step of a reduced config on CPU (sanity anchor:
+    the framework executes, not just lowers)."""
+    from repro.configs import get_reduced
+    from repro.models import init_params, loss_fn
+    from repro.optim import sgd_momentum
+    rows = []
+    cfg = get_reduced("stablelm-1.6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    opt = sgd_momentum(0.9)
+    state = opt.init(params)
+    batch = {"tokens": jnp.zeros((4, 64), jnp.int32),
+             "targets": jnp.zeros((4, 64), jnp.int32)}
+
+    @jax.jit
+    def step(params, state, batch):
+        (l, _), g = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch), has_aux=True)(params)
+        p2, s2 = opt.update(g, state, params, 1e-2)
+        return p2, s2, l
+
+    params, state, _ = step(params, state, batch)   # compile
+    t0 = time.time()
+    iters = 5
+    for _ in range(iters):
+        params, state, l = step(params, state, batch)
+    jax.block_until_ready(l)
+    us = (time.time() - t0) * 1e6 / iters
+    rows.append(("roofline.cpu_reduced_train_step", round(us, 1), "measured"))
+    return rows
+
+
+def run():
+    return _summarize_dryrun() + _measured_step_time()
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

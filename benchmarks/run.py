@@ -1,0 +1,42 @@
+"""Benchmark runner — one module per paper table/figure + roofline summary.
+
+Prints ``name,us_per_call,derived`` CSV (one line per metric).
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,fig4] [--steps N]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: table1,table2,fig3,fig4,roofline")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (fig3_loss, fig4_memory, roofline_bench,
+                            table1_comm, table2_convergence)
+    mods = {"table1": table1_comm, "table2": table2_convergence,
+            "fig3": fig3_loss, "fig4": fig4_memory,
+            "roofline": roofline_bench}
+    only = args.only.split(",") if args.only else list(mods)
+
+    print("name,us_per_call,derived")
+    failed = []
+    for name in only:
+        try:
+            for row in mods[name].run():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception as e:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name}.ERROR,0,{type(e).__name__}")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

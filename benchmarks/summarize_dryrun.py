@@ -1,0 +1,52 @@
+"""Convert dryrun_grid.json records into the EXPERIMENTS.md markdown tables.
+
+    PYTHONPATH=src python -m benchmarks.summarize_dryrun \
+        benchmarks/artifacts/dryrun_grid.json
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+GIB = 2**30
+
+
+def fmt_table(recs):
+    lines = [
+        "| arch | shape | mesh | compute | memory | collective | bottleneck "
+        "| peak/dev (corr.) | useful FLOPs | max burst |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAIL: {r.get('error','?')[:60]} |" + " |" * 6)
+            continue
+        rl = r["roofline"]
+        bpd = r["bytes_per_device"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rl['compute_s']*1e3:.1f} ms | {rl['memory_s']*1e3:.1f} ms "
+            f"| {rl['collective_s']*1e3:.1f} ms | {rl['bottleneck']} "
+            f"| {bpd['peak_est']/GIB:.1f} ({bpd.get('peak_tpu_corrected', bpd['peak_est'])/GIB:.1f}) GiB "
+            f"| {rl['useful_ratio']*100:.0f}% "
+            f"| {rl['coll_max_burst']/2**20:.0f} MiB |")
+    return "\n".join(lines)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else \
+        "benchmarks/artifacts/dryrun_grid.json"
+    with open(path) as f:
+        recs = json.load(f)
+    ok = sum(1 for r in recs if r.get("ok"))
+    print(f"## Dry-run grid: {ok}/{len(recs)} pairs lower + compile\n")
+    print(fmt_table(recs))
+    # bottleneck histogram
+    from collections import Counter
+    c = Counter(r["roofline"]["bottleneck"] for r in recs if r.get("ok"))
+    print(f"\nbottlenecks: {dict(c)}")
+
+
+if __name__ == "__main__":
+    main()

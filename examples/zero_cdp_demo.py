@@ -1,0 +1,62 @@
+"""ZeRO-CDP demo (paper Sec. 4.4): parameters stage-sharded over 8 ranks,
+streamed point-to-point around the ring (collective-permute) while each rank
+runs the cyclic schedule on its own micro-batch — vs baseline ZeRO-DP which
+all-gathers every stage. Prints the HLO collective mix for both.
+
+    PYTHONPATH=src python examples/zero_cdp_demo.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core.zero import roll_stage_params, zero_cdp_apply, zero_dp_apply
+from repro.launch.roofline import parse_collectives
+
+
+def main():
+    n, d, b = 8, 64, 4
+    mesh = jax.make_mesh((n,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    key = jax.random.PRNGKey(0)
+    stages = {"w": 0.1 * jax.random.normal(key, (n, d, d)),
+              "b": jnp.zeros((n, d))}
+    x = jax.random.normal(jax.random.PRNGKey(1), (n, b, d))
+
+    def stage_fn(p, h):
+        return jnp.tanh(h @ p["w"] + p["b"])
+
+    rolled = roll_stage_params(stages, n)
+    specs = jax.tree.map(lambda _: P("data"), stages)
+
+    def run_cdp(shard, xs):
+        my_params = jax.tree.map(lambda t: t[0], shard)   # drop shard dim
+        return zero_cdp_apply(stage_fn, my_params, xs[0], "data", n)[None]
+
+    def run_dp(shard, xs):
+        return zero_dp_apply(stage_fn,
+                             jax.tree.map(lambda t: t[0], shard),
+                             xs[0], "data", n)[None]
+
+    results = {}
+    for name, fn in (("zero_cdp", run_cdp), ("zero_dp", run_dp)):
+        f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=(specs, P("data")),
+                                  out_specs=P("data"), axis_names={"data"},
+                                  check_vma=False))
+        y = f(rolled, x)
+        stats = parse_collectives(f.lower(rolled, x).compile().as_text())
+        results[name] = y
+        print(f"{name}: collectives {stats.op_counts}  "
+              f"bytes {stats.total_bytes}  max burst {stats.max_single_op_bytes}")
+
+    np.testing.assert_allclose(np.asarray(results["zero_cdp"]),
+                               np.asarray(results["zero_dp"]), rtol=1e-5)
+    print("outputs identical; CDP uses point-to-point collective-permute, "
+          "DP uses the all-gather broadcast (paper Fig. 2d).")
+
+
+if __name__ == "__main__":
+    main()

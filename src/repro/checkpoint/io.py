@@ -1,0 +1,70 @@
+"""Pytree checkpointing: flat-keyed .npz + structure manifest.
+
+Process-local (single-host CPU container); on a real multi-host deployment
+each host writes its addressable shards — the flat-key format is unchanged.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+_SEP = "/"
+
+
+def _flatten(tree: PyTree):
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":      # npz has no bf16; restore()
+            arr = arr.astype(np.float32)      # casts back via the template
+        flat[key] = arr
+    return flat
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    tmp = path + ".tmp.npz"
+    flat = _flatten(tree)
+    np.savez(tmp, **flat)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, template: PyTree, step: Optional[int] = None,
+            shardings: Optional[PyTree] = None) -> Tuple[PyTree, int]:
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    data = np.load(path)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in paths:
+        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
+                        for k in p)
+        arr = data[key]
+        if hasattr(leaf, "dtype"):
+            arr = arr.astype(leaf.dtype)
+        leaves.append(arr)
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree, step

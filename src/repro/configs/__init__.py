@@ -1,0 +1,45 @@
+"""Architecture registry.
+
+``get_config(arch)`` returns the exact published config; ``get_reduced(arch)``
+the smoke-test variant. ``ARCHS`` lists every assigned architecture id.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (INPUT_SHAPES, InputShape, ModelConfig,
+                                reduce_config)
+
+# arch-id -> module name
+_MODULES = {
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "seamless-m4t-large-v2": "seamless_m4t_large_v2",
+    "internvl2-26b": "internvl2_26b",
+    "chatglm3-6b": "chatglm3_6b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "xlstm-350m": "xlstm_350m",
+    "zamba2-7b": "zamba2_7b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "qwen2.5-14b": "qwen2_5_14b",
+}
+
+ARCHS = tuple(_MODULES)
+
+
+def _module(arch: str):
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}")
+
+
+def get_config(arch: str) -> ModelConfig:
+    return _module(arch).CONFIG
+
+
+def get_reduced(arch: str) -> ModelConfig:
+    return _module(arch).reduced()
+
+
+__all__ = ["ARCHS", "INPUT_SHAPES", "InputShape", "ModelConfig",
+           "get_config", "get_reduced", "reduce_config"]

@@ -1,0 +1,202 @@
+"""Configuration dataclasses for all supported architectures.
+
+Every assigned architecture gets a module in this package exporting a
+``CONFIG`` (the exact published numbers, cited) and a ``reduced()`` variant
+(same family, <=2 layers, d_model<=512, <=4 experts) used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Enumerations (plain strings; keeps configs trivially serialisable)
+# ---------------------------------------------------------------------------
+
+FAMILY_DENSE = "dense"          # decoder-only transformer
+FAMILY_MOE = "moe"              # decoder-only transformer with MoE FFN
+FAMILY_SSM = "ssm"              # xLSTM-style recurrent blocks
+FAMILY_HYBRID = "hybrid"        # Mamba2 backbone + shared attention block
+FAMILY_ENCDEC = "encdec"        # encoder-decoder (audio frontend stub)
+FAMILY_VLM = "vlm"              # vision stub + decoder-only LM
+
+ATTN_GQA = "gqa"                # grouped-query attention (MHA if kv==heads)
+ATTN_MLA = "mla"                # DeepSeek multi-head latent attention
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    expert_d_ff: int
+    num_shared_experts: int = 0
+    shared_d_ff: int = 0
+    capacity_factor: float = 1.25
+    router_aux_coef: float = 0.001
+    # layers [0, first_k_dense) use a dense FFN instead of MoE (DeepSeek-V3
+    # keeps the first 3 layers dense).
+    first_k_dense: int = 0
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-V3 multi-head latent attention dims [arXiv:2412.19437]."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    """Mamba2 block dims (zamba2) or xLSTM dims (xlstm)."""
+    state_dim: int = 64           # N (SSM state per head channel)
+    conv_dim: int = 4             # depthwise conv kernel size
+    expand: int = 2               # inner dim = expand * d_model
+    head_dim: int = 64            # Mamba2 P (channels per SSM head)
+    chunk: int = 64               # chunked-scan block length
+    # xLSTM specifics
+    slstm_every: int = 0          # every k-th block is an sLSTM block (0=never)
+    mlstm_qk_dim_factor: float = 0.5
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """zamba2-style shared attention block interleave."""
+    shared_attn_every: int = 6    # apply the shared attn+MLP block every k mamba layers
+    shared_d_ff: int = 14336
+
+
+@dataclass(frozen=True)
+class EncDecConfig:
+    encoder_layers: int = 24
+    # audio frontend stub: pre-computed frame embeddings (B, T_frames, frontend_dim)
+    frontend_dim: int = 1024
+    frame_rate_divisor: int = 8   # T_frames = seq_len // divisor for dry-run shapes
+
+
+@dataclass(frozen=True)
+class VLMConfig:
+    # vision frontend stub: pre-computed patch embeddings (B, num_patches, vision_dim)
+    vision_dim: int = 3200        # InternViT-6B hidden size
+    num_patches: int = 1025
+    projector_hidden: int = 12288
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                     # 0 -> d_model // num_heads
+    attn_kind: str = ATTN_GQA
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    partial_rotary_factor: float = 1.0    # fraction of head_dim rotated
+    rope_2d: bool = False                 # chatglm-style paired-channel rope
+    norm: str = "rmsnorm"                 # rmsnorm | layernorm
+    act: str = "silu"                     # silu (swiglu) | gelu
+    tie_embeddings: bool = False
+    attn_window: int = 0                  # >0 -> sliding-window attention
+    max_seq_len: int = 524288
+    moe: Optional[MoEConfig] = None
+    mla: Optional[MLAConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    vlm: Optional[VLMConfig] = None
+    mtp: bool = False                     # DeepSeek multi-token prediction head
+    dtype: str = "bfloat16"
+    # citation for the exact numbers above
+    source: str = ""
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.num_heads
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if decode state does not grow linearly with context without bound."""
+        return self.family in (FAMILY_SSM, FAMILY_HYBRID) or self.attn_window > 0
+
+    def param_count(self) -> int:
+        """Analytic parameter count (matches models.count_params on init)."""
+        from repro.models.model import analytic_param_count
+        return analytic_param_count(self)
+
+    def active_param_count(self) -> int:
+        from repro.models.model import analytic_param_count
+        return analytic_param_count(self, active_only=True)
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.kind == "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def reduce_config(cfg: ModelConfig, *, layers: int = 2, d_model: int = 256,
+                  heads: int = 4, vocab: int = 512) -> ModelConfig:
+    """Reduced same-family variant for CPU smoke tests."""
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    # keep the head grouping ratio where possible
+    if cfg.num_kv_heads < cfg.num_heads:
+        kv = max(1, heads // max(1, cfg.num_heads // cfg.num_kv_heads))
+    d_ff = d_model * 2 if cfg.d_ff else 0
+    kw = dict(
+        num_layers=layers, d_model=d_model, num_heads=heads, num_kv_heads=kv,
+        d_ff=d_ff, vocab_size=vocab, head_dim=0, max_seq_len=1024,
+        name=cfg.name + "-reduced", dtype="float32",
+    )
+    if cfg.moe is not None:
+        kw["moe"] = replace(
+            cfg.moe, num_experts=min(4, cfg.moe.num_experts),
+            top_k=min(2, cfg.moe.top_k), expert_d_ff=d_model,
+            num_shared_experts=min(1, cfg.moe.num_shared_experts),
+            shared_d_ff=d_model if cfg.moe.num_shared_experts else 0,
+            first_k_dense=min(1, cfg.moe.first_k_dense))
+    if cfg.mla is not None:
+        kw["mla"] = MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                              qk_nope_head_dim=32, qk_rope_head_dim=16,
+                              v_head_dim=32)
+        kw["head_dim"] = 0
+    if cfg.ssm is not None:
+        kw["ssm"] = replace(cfg.ssm, state_dim=16, head_dim=32, chunk=16,
+                            slstm_every=cfg.ssm.slstm_every and 2)
+    if cfg.hybrid is not None:
+        kw["hybrid"] = replace(cfg.hybrid, shared_attn_every=2, shared_d_ff=d_model * 2)
+    if cfg.encdec is not None:
+        kw["encdec"] = replace(cfg.encdec, encoder_layers=layers,
+                               frontend_dim=d_model, frame_rate_divisor=2)
+    if cfg.vlm is not None:
+        kw["vlm"] = VLMConfig(vision_dim=d_model, num_patches=16,
+                              projector_hidden=d_model * 2)
+    if cfg.attn_window:
+        kw["attn_window"] = 64
+    return cfg.with_(**kw)

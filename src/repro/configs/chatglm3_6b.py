@@ -1,0 +1,26 @@
+"""ChatGLM3-6B [arXiv:2406.12793].
+
+28 layers, d_model 4096, 32 heads, multi-query GQA kv=2, d_ff 13696,
+vocab 65024. 2D-RoPE applied to half of each head dim
+(partial_rotary_factor=0.5), QKV bias.
+"""
+from repro.configs.base import FAMILY_DENSE, ModelConfig, reduce_config
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b",
+    family=FAMILY_DENSE,
+    num_layers=28,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    d_ff=13696,
+    vocab_size=65024,
+    qkv_bias=True,
+    partial_rotary_factor=0.5,
+    rope_2d=True,
+    source="arXiv:2406.12793",
+)
+
+
+def reduced():
+    return reduce_config(CONFIG)

@@ -1,0 +1,33 @@
+"""DeepSeek-V3 671B [arXiv:2412.19437].
+
+61 layers, d_model 7168, 128 heads (MLA), MoE with 1 shared + 256 routed
+experts (top-8, expert d_ff 2048), vocab 129280, multi-token prediction.
+First 3 layers use a dense FFN (d_ff 18432).
+"""
+from repro.configs.base import (ATTN_MLA, FAMILY_MOE, MLAConfig, ModelConfig,
+                                MoEConfig, reduce_config)
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b",
+    family=FAMILY_MOE,
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,
+    d_ff=18432,                      # dense-FFN layers (first_k_dense)
+    vocab_size=129280,
+    head_dim=192,                    # qk_nope(128) + qk_rope(64)
+    attn_kind=ATTN_MLA,
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    moe=MoEConfig(num_experts=256, top_k=8, expert_d_ff=2048,
+                  num_shared_experts=1, shared_d_ff=2048,
+                  capacity_factor=1.25, first_k_dense=3),
+    rope_theta=10000.0,
+    mtp=True,
+    source="arXiv:2412.19437",
+)
+
+
+def reduced():
+    return reduce_config(CONFIG)

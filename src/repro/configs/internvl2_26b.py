@@ -1,0 +1,27 @@
+"""InternVL2-26B [arXiv:2404.16821] — language backbone (InternLM2-20B).
+
+48 layers, d_model 6144, 48 heads, GQA kv=8, d_ff 16384, vocab 92553.
+The InternViT-6B vision encoder is a stub: ``input_specs`` supplies
+precomputed patch embeddings (B, num_patches, vision_dim); a 2-layer MLP
+projector maps them into the LM embedding space (that projector IS part of
+this model).
+"""
+from repro.configs.base import FAMILY_VLM, ModelConfig, VLMConfig, reduce_config
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family=FAMILY_VLM,
+    num_layers=48,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92553,
+    rope_theta=1000000.0,
+    vlm=VLMConfig(vision_dim=3200, num_patches=1025, projector_hidden=12288),
+    source="arXiv:2404.16821",
+)
+
+
+def reduced():
+    return reduce_config(CONFIG)

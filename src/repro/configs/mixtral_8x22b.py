@@ -1,0 +1,28 @@
+"""Mixtral-8x22B [arXiv:2401.04088].
+
+56 layers, d_model 6144, 48 heads, GQA kv=8, MoE 8 experts top-2 with expert
+d_ff 16384, vocab 32768, sliding-window attention (window 4096 per the
+Mixtral paper lineage; the assignment specifies SWA).
+"""
+from repro.configs.base import (FAMILY_MOE, ModelConfig, MoEConfig,
+                                reduce_config)
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family=FAMILY_MOE,
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16384,
+    vocab_size=32768,
+    attn_window=4096,
+    rope_theta=1000000.0,
+    moe=MoEConfig(num_experts=8, top_k=2, expert_d_ff=16384,
+                  capacity_factor=1.25),
+    source="arXiv:2401.04088",
+)
+
+
+def reduced():
+    return reduce_config(CONFIG)

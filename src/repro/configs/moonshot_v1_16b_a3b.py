@@ -1,0 +1,26 @@
+"""Moonlight-16B-A3B [hf:moonshotai/Moonlight-16B-A3B].
+
+48 layers, d_model 2048, 16 heads (kv=16), MoE 64 experts top-6 with expert
+d_ff 1408, vocab 163840, 2 shared experts (DeepSeek-style), first layer dense.
+"""
+from repro.configs.base import (FAMILY_MOE, ModelConfig, MoEConfig,
+                                reduce_config)
+
+CONFIG = ModelConfig(
+    name="moonshot-v1-16b-a3b",
+    family=FAMILY_MOE,
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=11264,                      # dense-FFN first layer
+    vocab_size=163840,
+    moe=MoEConfig(num_experts=64, top_k=6, expert_d_ff=1408,
+                  num_shared_experts=2, shared_d_ff=1408,
+                  capacity_factor=1.25, first_k_dense=1),
+    source="hf:moonshotai/Moonlight-16B-A3B",
+)
+
+
+def reduced():
+    return reduce_config(CONFIG)

@@ -1,0 +1,76 @@
+"""Analytic layer profiles for the paper's own models (ResNet-50, ViT-B/16).
+
+The paper's Fig. 4 tracks activation memory of a forward-backward pass of a
+ResNet-50 and a ViT-B/16 on ImageNet (input 224x224), removes the parameter
+memory, and extrapolates per-worker activation memory for DP vs CDP with
+N = 4, 8, 32 workers. We reproduce that with an *analytic* per-module
+activation profile (bytes of activations retained per module, fp32) —
+equivalent to what the paper measures with fvcore-based partitioning.
+
+Each profile is a list of (module_name, act_bytes, flops) triples in forward
+execution order. Stage partitioning follows the paper: split into N stages
+with (approximately) equal FLOPs.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+Profile = List[Tuple[str, int, int]]
+
+_F32 = 4
+
+
+def _conv(name, cin, cout, hw, k, stride=1) -> Tuple[str, int, int]:
+    out_hw = hw // stride
+    act = cout * out_hw * out_hw * _F32          # output retained for bwd
+    flops = 2 * cin * cout * k * k * out_hw * out_hw
+    return (name, act, flops)
+
+
+def resnet50_profile(image_hw: int = 224) -> Profile:
+    """ResNet-50 v1.5 activation/FLOPs profile per bottleneck block."""
+    prof: Profile = []
+    prof.append(_conv("stem", 3, 64, image_hw, 7, 2))
+    hw = image_hw // 4                            # after stem + maxpool
+    cin = 64
+    stage_defs = [(64, 3, 1), (128, 4, 2), (256, 6, 2), (512, 3, 2)]
+    for si, (width, blocks, stride) in enumerate(stage_defs):
+        for b in range(blocks):
+            s = stride if b == 0 else 1
+            cout = width * 4
+            name = f"layer{si+1}.{b}"
+            c1 = _conv(name + ".conv1", cin, width, hw, 1)
+            c2 = _conv(name + ".conv2", width, width, hw, 3, s)
+            hw_b = hw // s
+            c3 = _conv(name + ".conv3", width, cout, hw_b, 1)
+            prof.extend([c1, c2, c3])
+            if b == 0:
+                prof.append(_conv(name + ".down", cin, cout, hw, 1, s))
+            cin = cout
+            hw = hw_b
+    prof.append(("head", 1000 * _F32, 2 * 2048 * 1000))
+    return prof
+
+
+def vit_b16_profile(image_hw: int = 224) -> Profile:
+    """ViT-B/16: 12 homogeneous encoder blocks, d=768, 12 heads, mlp 3072."""
+    d, L, mlp = 768, 12, 3072
+    n = (image_hw // 16) ** 2 + 1                # tokens (+cls)
+    prof: Profile = [("patch_embed", n * d * _F32, 2 * 3 * 16 * 16 * d * (n - 1))]
+    attn_act = (4 * n * d + 2 * 12 * n * n) * _F32   # qkv, attn probs, out
+    attn_flops = 2 * n * d * 3 * d + 2 * n * n * d * 2 + 2 * n * d * d
+    mlp_act = (n * mlp * 2 + n * d) * _F32
+    mlp_flops = 2 * n * d * mlp * 2
+    for i in range(L):
+        prof.append((f"block{i}.attn", attn_act, attn_flops))
+        prof.append((f"block{i}.mlp", mlp_act, mlp_flops))
+    prof.append(("head", 1000 * _F32, 2 * d * 1000))
+    return prof
+
+
+def resnet50_param_bytes() -> int:
+    return 25_557_032 * _F32
+
+
+def vit_b16_param_bytes() -> int:
+    return 86_567_656 * _F32

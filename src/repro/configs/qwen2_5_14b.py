@@ -1,0 +1,24 @@
+"""Qwen2.5-14B [hf:Qwen/Qwen2.5-14B].
+
+48 layers, d_model 5120, 40 heads, GQA kv=8, d_ff 13824, vocab 152064,
+QKV bias.
+"""
+from repro.configs.base import FAMILY_DENSE, ModelConfig, reduce_config
+
+CONFIG = ModelConfig(
+    name="qwen2.5-14b",
+    family=FAMILY_DENSE,
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=13824,
+    vocab_size=152064,
+    qkv_bias=True,
+    rope_theta=1000000.0,
+    source="hf:Qwen/Qwen2.5-14B",
+)
+
+
+def reduced():
+    return reduce_config(CONFIG)

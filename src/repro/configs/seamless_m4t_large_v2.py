@@ -1,0 +1,29 @@
+"""SeamlessM4T-Large v2 [arXiv:2308.11596] — transformer backbone only.
+
+24 encoder + 24 decoder layers, d_model 1024, 16 heads, d_ff 8192,
+vocab 256206 (text unit vocabulary). The speech frontend (mel-spectrogram +
+conformer feature extractor) is a stub: ``input_specs`` supplies precomputed
+frame embeddings of shape (B, T_frames, frontend_dim).
+"""
+from repro.configs.base import (FAMILY_ENCDEC, EncDecConfig, ModelConfig,
+                                reduce_config)
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family=FAMILY_ENCDEC,
+    num_layers=24,                   # decoder layers
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=8192,
+    vocab_size=256206,
+    norm="layernorm",
+    act="gelu",
+    encdec=EncDecConfig(encoder_layers=24, frontend_dim=1024,
+                        frame_rate_divisor=8),
+    source="arXiv:2308.11596",
+)
+
+
+def reduced():
+    return reduce_config(CONFIG)

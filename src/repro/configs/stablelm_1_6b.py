@@ -1,0 +1,24 @@
+"""StableLM-2 1.6B [hf:stabilityai/stablelm-2-1_6b].
+
+24 layers, d_model 2048, 32 heads (MHA: kv=32), d_ff 5632, vocab 100352,
+partial rotary (25% of head dim), LayerNorm.
+"""
+from repro.configs.base import FAMILY_DENSE, ModelConfig, reduce_config
+
+CONFIG = ModelConfig(
+    name="stablelm-1.6b",
+    family=FAMILY_DENSE,
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=5632,
+    vocab_size=100352,
+    norm="layernorm",
+    partial_rotary_factor=0.25,
+    source="hf:stabilityai/stablelm-2-1_6b",
+)
+
+
+def reduced():
+    return reduce_config(CONFIG)

@@ -1,0 +1,25 @@
+"""xLSTM-350M [arXiv:2405.04517].
+
+24 recurrent blocks, d_model 1024, 4 mLSTM heads, vocab 50304, no separate
+FFN (d_ff=0; mLSTM blocks carry the up-projection). sLSTM block every 6th
+position (xLSTM[7:1]-style mixed stack).
+"""
+from repro.configs.base import FAMILY_SSM, ModelConfig, SSMConfig, reduce_config
+
+CONFIG = ModelConfig(
+    name="xlstm-350m",
+    family=FAMILY_SSM,
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    ssm=SSMConfig(expand=2, head_dim=256, chunk=64, slstm_every=6,
+                  mlstm_qk_dim_factor=0.5),
+    source="arXiv:2405.04517",
+)
+
+
+def reduced():
+    return reduce_config(CONFIG)

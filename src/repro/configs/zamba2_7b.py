@@ -1,0 +1,26 @@
+"""Zamba2-7B [arXiv:2411.15242].
+
+81 Mamba2 layers, d_model 3584, ssm_state 64, plus ONE shared attention+MLP
+block (32 heads, d_ff 14336) re-applied every 6 Mamba layers with shared
+weights.
+"""
+from repro.configs.base import (FAMILY_HYBRID, HybridConfig, ModelConfig,
+                                SSMConfig, reduce_config)
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family=FAMILY_HYBRID,
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm=SSMConfig(state_dim=64, conv_dim=4, expand=2, head_dim=64, chunk=64),
+    hybrid=HybridConfig(shared_attn_every=6, shared_d_ff=14336),
+    source="arXiv:2411.15242",
+)
+
+
+def reduced():
+    return reduce_config(CONFIG)

@@ -1,0 +1,9 @@
+from repro.core.schedule import (RULE_CDP_V1, RULE_CDP_V2, RULE_DP, RULES,
+                                 cdp_phase, comm_events, dp_phase,
+                                 fresh_threshold, table1, u_matrix)
+from repro.core.trainer import (TrainerConfig, init_state, jit_train_step,
+                                make_train_step)
+
+__all__ = ["RULE_CDP_V1", "RULE_CDP_V2", "RULE_DP", "RULES", "cdp_phase",
+           "comm_events", "dp_phase", "fresh_threshold", "table1", "u_matrix",
+           "TrainerConfig", "init_state", "jit_train_step", "make_train_step"]

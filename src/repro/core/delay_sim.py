@@ -1,0 +1,64 @@
+"""Single-process simulator of the three update rules (paper Sec. 5 protocol).
+
+The paper's own experiments *simulate* the CDP delays ("we simulate our
+delayed activations for DP, CDP-v1 and CDP-v2"); this module is that
+simulator: per training step it computes the N micro-batch gradients, each at
+its own theta_hat (vmapped over the freshness threshold), averages them, and
+applies SGD-with-momentum. Used by the convergence experiments
+(benchmarks/table2_convergence.py, fig3_loss.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import RULE_DP, fresh_threshold
+from repro.core.update_rules import needs_prev_params, select_params
+
+PyTree = Any
+
+
+def make_sim_step(loss_fn: Callable, stage_ids: PyTree, rule: str,
+                  n_stages: int, opt, lr_fn: Callable):
+    """loss_fn(params, microbatch) -> scalar.
+
+    Returns step(state, batch) where batch leaves have leading dim
+    [n_stages, ...] (one micro-batch per stage index).
+    """
+    thresholds = jnp.asarray(
+        [fresh_threshold(rule, i, n_stages) for i in range(n_stages)],
+        jnp.int32)
+    use_prev = needs_prev_params(rule)
+
+    def one_grad(params, params_prev, thr, microbatch):
+        theta_hat = select_params(params, params_prev, stage_ids, thr)
+        loss, g = jax.value_and_grad(loss_fn)(theta_hat, microbatch)
+        return loss, g
+
+    @jax.jit
+    def step(state, batch):
+        params = state["params"]
+        prev = state["params_prev"] if use_prev else params
+        losses, grads = jax.vmap(
+            lambda thr, mb: one_grad(params, prev, thr, mb))(thresholds, batch)
+        gbar = jax.tree.map(lambda g: g.mean(0), grads)
+        lr = lr_fn(state["step"])
+        new_params, new_opt = opt.update(gbar, state["opt"], params, lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if use_prev:
+            new_state["params_prev"] = params
+        return new_state, losses.mean()
+
+    return step
+
+
+def init_sim_state(params: PyTree, rule: str, opt) -> Dict:
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if needs_prev_params(rule):
+        state["params_prev"] = jax.tree.map(jnp.copy, params)
+    return state

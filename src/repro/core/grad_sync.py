@@ -1,0 +1,230 @@
+"""Gradient synchronisation: the paper's balanced point-to-point ring vs the
+baseline all-reduce burst.
+
+``ring_all_reduce``: bandwidth-optimal ring (reduce-scatter + all-gather as
+2*(N-1) neighbour ``lax.ppermute`` steps, [20] Patarasuk & Yuan) — this is
+exactly the communication schedule CDP spreads over the training step
+(Fig. 1c / Sec. 4.2): each tick one point-to-point chunk per worker, never a
+collective burst. In the lowered HLO these are ``collective-permute`` ops of
+size P/N, whereas the DP baseline emits a single ``all-reduce`` of size P —
+the roofline analysis reads exactly this difference.
+
+Runs inside ``jax.shard_map`` manual over the given axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten_to_vec(tree: PyTree):
+    leaves, treedef = jax.tree.flatten(tree)
+    shapes = [l.shape for l in leaves]
+    dtypes = [l.dtype for l in leaves]
+    sizes = [int(np.prod(s)) for s in shapes]
+    vec = jnp.concatenate([l.astype(jnp.float32).reshape(-1) for l in leaves])
+    return vec, (treedef, shapes, dtypes, sizes)
+
+
+def _unflatten_from_vec(vec, spec):
+    treedef, shapes, dtypes, sizes = spec
+    out, off = [], 0
+    for shape, dt, sz in zip(shapes, dtypes, sizes):
+        out.append(vec[off:off + sz].reshape(shape).astype(dt))
+        off += sz
+    return jax.tree.unflatten(treedef, out)
+
+
+def _ring_perm(n: int):
+    return [(j, (j + 1) % n) for j in range(n)]
+
+
+def ring_all_reduce_vec(vec, axis_name: str, n: int):
+    """Ring all-reduce of a flat f32 vector over a manual mesh axis.
+
+    The 2*(n-1) ppermute steps are UNROLLED (n is static) so each hop is a
+    distinct ``collective-permute`` HLO op: the scheduler can overlap them
+    with compute, and the roofline pass can count their bytes statically —
+    this chain *is* the paper's balanced point-to-point timeline.
+    """
+    if n == 1:
+        return vec
+    r = jax.lax.axis_index(axis_name)
+    size = vec.shape[0]
+    chunk = -(-size // n)
+    pad = chunk * n - size
+    x = jnp.pad(vec, (0, pad))
+    perm = _ring_perm(n)
+
+    # --- reduce-scatter: after n-1 steps rank r holds reduced chunk (r+1)%n
+    send = jax.lax.dynamic_slice_in_dim(x, r * chunk, chunk)
+    for s in range(n - 1):
+        send = jax.lax.ppermute(send, axis_name, perm)
+        idx = (r - s - 1) % n
+        send = send + jax.lax.dynamic_slice_in_dim(x, idx * chunk, chunk)
+    reduced = send
+
+    # --- all-gather ring: circulate the reduced chunks
+    out = jnp.zeros_like(x)
+    out = jax.lax.dynamic_update_slice_in_dim(out, reduced,
+                                              ((r + 1) % n) * chunk, 0)
+    send = reduced
+    for s in range(n - 1):
+        send = jax.lax.ppermute(send, axis_name, perm)
+        idx = (r - s) % n          # owner of the chunk just received
+        out = jax.lax.dynamic_update_slice_in_dim(out, send, idx * chunk, 0)
+    return out[:size]
+
+
+def _pick_slice_axis(shape, pspec, n: int):
+    """Largest dim divisible by n that is NOT sharded (so slicing it never
+    forces a GSPMD reshard of the tensor-parallel layout)."""
+    best = None
+    for i, d in enumerate(shape):
+        sharded = pspec is not None and i < len(pspec) and pspec[i] is not None
+        if d % n == 0 and d >= n and not sharded:
+            if best is None or d > shape[best]:
+                best = i
+    return best
+
+
+def ring_all_reduce_leaf(x, axis_name: str, n: int, slice_axis: int):
+    """Bandwidth-optimal ring all-reduce of one array, slicing chunks along
+    ``slice_axis`` (an unsharded dim) — model-axis tensor parallelism is
+    preserved chunk-wise, so no resharding collectives are introduced."""
+    r = jax.lax.axis_index(axis_name)
+    perm = _ring_perm(n)
+    c = x.shape[slice_axis] // n
+    xf = x.astype(jnp.float32)
+
+    def get_chunk(idx):
+        return jax.lax.dynamic_slice_in_dim(xf, idx * c, c, axis=slice_axis)
+
+    # reduce-scatter
+    send = get_chunk(r)
+    for s in range(n - 1):
+        send = jax.lax.ppermute(send, axis_name, perm)
+        send = send + get_chunk((r - s - 1) % n)
+    # all-gather ring
+    out = jnp.zeros_like(xf)
+    out = jax.lax.dynamic_update_slice_in_dim(
+        out, send, ((r + 1) % n) * c, axis=slice_axis)
+    for s in range(n - 1):
+        send = jax.lax.ppermute(send, axis_name, perm)
+        out = jax.lax.dynamic_update_slice_in_dim(
+            out, send, ((r - s) % n) * c, axis=slice_axis)
+    return (out / n).astype(x.dtype)
+
+
+def ring_all_reduce(tree: PyTree, axis_name: str, n: int,
+                    pspecs: PyTree = None) -> PyTree:
+    """Mean-reduce a gradient pytree over ``axis_name`` with the CDP ring.
+
+    Large leaves ring point-to-point (2*(n-1) unrolled ppermute hops, chunk
+    = leaf/n); leaves with no ring-sliceable dim (norm scales, biases — a
+    negligible byte fraction) fall back to pmean.
+    """
+    if n == 1:
+        return tree
+
+    def one(leaf, spec):
+        ax = _pick_slice_axis(leaf.shape, spec, n)
+        if ax is None or leaf.size < 1024:
+            # fall back to a (f32) all-reduce: bf16 all-reduce trips
+            # XLA:CPU's promotion pass and loses precision anyway
+            return psum_all_reduce(leaf, axis_name)
+        return ring_all_reduce_leaf(leaf, axis_name, n, ax)
+
+    if pspecs is None:
+        from jax.sharding import PartitionSpec as P
+        pspecs = jax.tree.map(lambda _: P(), tree)
+    return jax.tree.map(one, tree, pspecs)
+
+
+def psum_all_reduce(tree: PyTree, axis_name: str) -> PyTree:
+    """Baseline DP collective (lowers to all-reduce HLO). Reduction in f32
+    (bf16 all-reduce both loses precision and trips XLA:CPU's promotion
+    pass in the 512-device dry-run)."""
+    def one(x):
+        if jnp.issubdtype(x.dtype, jnp.floating) and x.dtype != jnp.float32:
+            return jax.lax.pmean(x.astype(jnp.float32), axis_name).astype(x.dtype)
+        return jax.lax.pmean(x, axis_name)
+    return jax.tree.map(one, tree)
+
+
+def ring_reduce_scatter_leaf(x, axis_name: str, n: int, slice_axis: int,
+                             comm_dtype=jnp.float32):
+    """Ring reduce-scatter of one array along ``slice_axis``: after n-1 hops
+    (+1 alignment hop) rank r holds the fully-reduced chunk r. Returns the
+    local chunk (shape = x.shape with slice_axis divided by n). This is the
+    first half of the CDP ring; with ZeRO-1 the second half becomes the
+    *parameter* all-gather after the sharded optimizer update."""
+    r = jax.lax.axis_index(axis_name)
+    perm = _ring_perm(n)
+    c = x.shape[slice_axis] // n
+    xf = x.astype(comm_dtype)
+
+    def get_chunk(idx):
+        return jax.lax.dynamic_slice_in_dim(xf, idx * c, c, axis=slice_axis)
+
+    send = get_chunk(r)
+    for s in range(n - 1):
+        send = jax.lax.ppermute(send, axis_name, perm)
+        send = send + get_chunk((r - s - 1) % n)
+    # rank r now holds chunk (r+1)%n; one alignment hop puts chunk r on rank r
+    send = jax.lax.ppermute(send, axis_name, perm)
+    return send / n
+
+
+def zero1_reduce_scatter(tree: PyTree, axis_name: str, n: int,
+                         pspecs: PyTree, comm_dtype=jnp.float32):
+    """Per-leaf ring reduce-scatter for the ZeRO-1 optimizer path.
+
+    Returns (chunk_tree, layout) where layout maps each leaf to its slice
+    axis (or None for pmean-fallback leaves, which stay replicated)."""
+    def one(leaf, spec):
+        ax = _pick_slice_axis(leaf.shape, spec, n)
+        if ax is None or leaf.size < 1024:
+            return psum_all_reduce(leaf, axis_name), None
+        return ring_reduce_scatter_leaf(leaf, axis_name, n, ax,
+                                        comm_dtype), ax
+
+    flat, treedef = jax.tree.flatten(tree)
+    specs_flat = jax.tree.leaves(pspecs)
+    outs = [one(l, s) for l, s in zip(flat, specs_flat)]
+    chunk_tree = jax.tree.unflatten(treedef, [o[0] for o in outs])
+    layout = jax.tree.unflatten(treedef, [(o[1] if o[1] is not None else -1)
+                                          for o in outs])
+    return chunk_tree, layout
+
+
+def zero1_layout(tree: PyTree, n: int, pspecs: PyTree) -> PyTree:
+    """Static slice-axis layout (leaf -> axis or -1) without any compute."""
+    def one(leaf, spec):
+        ax = _pick_slice_axis(leaf.shape, spec, n)
+        return -1 if (ax is None or leaf.size < 1024) else ax
+    return jax.tree.map(one, tree, pspecs)
+
+
+def reduce_scatter_ring(vec, axis_name: str, n: int):
+    """Ring reduce-scatter only: rank r returns reduced chunk (r+1)%n.
+    Used by the ZeRO-CDP optimizer path (each rank updates only its shard)."""
+    if n == 1:
+        return vec
+    r = jax.lax.axis_index(axis_name)
+    size = vec.shape[0]
+    chunk = -(-size // n)
+    pad = chunk * n - size
+    x = jnp.pad(vec, (0, pad))
+    perm = _ring_perm(n)
+    send = jax.lax.dynamic_slice_in_dim(x, r * chunk, chunk)
+    for s in range(n - 1):
+        send = jax.lax.ppermute(send, axis_name, perm)
+        idx = (r - s - 1) % n
+        send = send + jax.lax.dynamic_slice_in_dim(x, idx * chunk, chunk)
+    return send

@@ -1,0 +1,213 @@
+"""The cyclic schedule (paper Fig. 1) and the Table-1 cost formulas.
+
+Pure-python/numpy — this module is the *specification* of CDP: who computes
+what at every time step, which parameters each micro-batch may use (the
+``u_{i,j}`` rule), when gradients are communicated, and the resulting memory
+and communication costs. The distributed trainer and the analytic memory
+model are both validated against it.
+
+Conventions (matching the paper):
+  * N workers == N stages == N micro-batches.
+  * A training step = 2N time steps (N forward + N backward per micro-batch).
+  * Worker/micro-batch i (0-indexed) is delayed by 2*i time steps.
+  * At local step l in [0, 2N): l < N -> forward of stage l;
+    l >= N -> backward of stage 2N-1-l.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+FORWARD = "F"
+BACKWARD = "B"
+
+
+@dataclasses.dataclass(frozen=True)
+class Phase:
+    kind: str          # "F" or "B"
+    stage: int         # stage index in [0, N)
+    microbatch: int    # micro-batch being processed
+
+
+def local_step_phase(l: int, n: int) -> Tuple[str, int]:
+    l = l % (2 * n)
+    if l < n:
+        return FORWARD, l
+    return BACKWARD, 2 * n - 1 - l
+
+
+def dp_phase(worker: int, tau: int, n: int) -> Phase:
+    """Standard DP: all workers synchronous; micro-batch == worker."""
+    kind, stage = local_step_phase(tau, n)
+    return Phase(kind, stage, worker)
+
+
+def cdp_phase(worker: int, tau: int, n: int) -> Phase:
+    """CDP: worker i runs with a delay of 2*i time steps (Fig. 1b/1c).
+
+    The micro-batch index increments every wrap of the 2N-cycle, but within
+    one training step worker i always handles micro-batch i.
+    """
+    kind, stage = local_step_phase(tau - 2 * worker, n)
+    return Phase(kind, stage, worker)
+
+
+# ---------------------------------------------------------------------------
+# Activation accounting (drives Fig. 4 and the Table 1 memory column)
+# ---------------------------------------------------------------------------
+
+def activations_held(worker: int, tau: int, n: int, cyclic: bool,
+                     stage_bytes: Optional[np.ndarray] = None) -> float:
+    """Bytes (or stage-counts if stage_bytes None) of activations retained by
+    ``worker`` at the *end* of time step tau (steady state)."""
+    if stage_bytes is None:
+        stage_bytes = np.ones(n)
+    l = (tau - 2 * worker) % (2 * n) if cyclic else tau % (2 * n)
+    kind, stage = local_step_phase(l, n)
+    # activations retained DURING the tick: a forward of stage s has produced
+    # stages 0..s; a backward of stage s still holds 0..s (s is released at
+    # the end of the tick)
+    return float(stage_bytes[: stage + 1].sum())
+
+
+def total_activation_timeline(n: int, cyclic: bool,
+                              stage_bytes: Optional[np.ndarray] = None,
+                              steps: int = None) -> np.ndarray:
+    """Sum of retained activations across all N workers per time step."""
+    steps = steps if steps is not None else 2 * n
+    return np.array([
+        sum(activations_held(w, tau, n, cyclic, stage_bytes)
+            for w in range(n))
+        for tau in range(2 * n, 2 * n + steps)   # steady state
+    ])
+
+
+def dp_peak_activations(n: int) -> float:
+    """Peak total activations of DP in stage-units: N workers x N stages."""
+    return float(n * n)
+
+
+def cdp_total_activations(n: int) -> float:
+    """CDP steady-state total in stage-units: (N+1)N/2 .. constant-ish."""
+    return float(n * (n + 1) / 2)
+
+
+# ---------------------------------------------------------------------------
+# u_{i,j} rules (paper Sec. 3.2). 0-indexed: micro-batch i, stage j.
+# ---------------------------------------------------------------------------
+
+RULE_DP = "dp"
+RULE_CDP_V1 = "cdp_v1"
+RULE_CDP_V2 = "cdp_v2"
+# beyond-paper (the paper's stated future work): per-step random freshness
+# threshold, uniform between CDP-v2's (the freshest schedule the cyclic
+# execution permits) and CDP-v1's (all stale) — delay still <= 1 everywhere
+RULE_CDP_RANDOM = "cdp_random"
+RULES = (RULE_DP, RULE_CDP_V1, RULE_CDP_V2)
+ALL_RULES = RULES + (RULE_CDP_RANDOM,)
+
+
+def fresh_threshold(rule: str, microbatch: int, n: int) -> int:
+    """Stages j >= threshold use theta_t ("fresh"); below use theta_{t-1}.
+
+    DP:      all fresh                      -> 0
+    CDP-v1:  all stale                      -> n
+    CDP-v2:  fresh iff j >= n - 1 - i       (paper: j >= N - i + 1, 1-indexed)
+    """
+    if rule == RULE_DP:
+        return 0
+    if rule == RULE_CDP_V1:
+        return n
+    if rule == RULE_CDP_V2:
+        return n - 1 - microbatch
+    raise ValueError(rule)
+
+
+def u_matrix(rule: str, n: int) -> np.ndarray:
+    """[N, N] boolean: True where micro-batch i uses fresh theta_t at stage j."""
+    out = np.zeros((n, n), bool)
+    for i in range(n):
+        thr = fresh_threshold(rule, i, n)
+        out[i, thr:] = True
+    return out
+
+
+def delay_matrix(rule: str, n: int) -> np.ndarray:
+    """Gradient delay per (microbatch, stage): 0 = fresh, 1 = one step stale."""
+    return (~u_matrix(rule, n)).astype(int)
+
+
+# ---------------------------------------------------------------------------
+# Communication schedule (CDP-v2, Fig. 1c): after worker i finishes the
+# backward of stage j it sends that stage's gradient to worker (i+1) mod N —
+# one point-to-point message per time step per active stage.
+# ---------------------------------------------------------------------------
+
+def comm_events(n: int, steps: Optional[int] = None) -> List[Dict]:
+    """P2P sends per time step in steady state. Each event:
+    {tau, src, dst, stage}. With CDP, at every time step exactly
+    floor(N/2)..ceil(N/2) workers finish a backward micro-step."""
+    steps = steps if steps is not None else 2 * n
+    events = []
+    for tau in range(2 * n, 2 * n + steps):
+        for w in range(n):
+            ph = cdp_phase(w, tau, n)
+            if ph.kind == BACKWARD:
+                events.append({"tau": tau - 2 * n, "src": w,
+                               "dst": (w + 1) % n, "stage": ph.stage})
+    return events
+
+
+def ascii_timeline(n: int, ticks: int = None, cyclic: bool = True) -> str:
+    """Fig. 1 as text: one row per worker, F<stage>/B<stage> per tick."""
+    ticks = ticks if ticks is not None else 2 * n
+    rows = [f"{'CDP' if cyclic else 'DP'} timeline, N={n} "
+            f"(row=worker, col=tick)"]
+    for w in range(n):
+        cells = []
+        for tau in range(2 * n, 2 * n + ticks):
+            ph = cdp_phase(w, tau, n) if cyclic else dp_phase(w, tau, n)
+            cells.append(f"{ph.kind}{ph.stage}")
+        rows.append(f"w{w}: " + " ".join(f"{c:>3}" for c in cells))
+    return "\n".join(rows)
+
+
+def max_comm_steps_per_tick(n: int, cyclic: bool) -> str:
+    """Table 1 'Max com. steps': collective all-reduce needs O(log N) steps
+    between two time steps; CDP needs exactly one p2p hop."""
+    return "O(1)" if cyclic else "O(log N)"
+
+
+# ---------------------------------------------------------------------------
+# Table 1 (theoretical costs). Symbols: Pp = parameter bytes of full model,
+# Pa = activation bytes of full model for ONE sample, Pa_int = stage-boundary
+# activations, B = micro-batch size, N = workers/stages.
+# ---------------------------------------------------------------------------
+
+def table1(n: int, B: int, Pp: float, Pa: float, Pa_int: float) -> Dict[str, Dict]:
+    rows = {
+        "single_gpu_dp": dict(act_mem=n * B * Pa, param_mem=n * Pp,
+                              volume=0.0, comm_steps="-", gpus=1, rule="DP"),
+        "single_gpu_cdp": dict(act_mem=(n + 1) / 2 * B * Pa,
+                               param_mem=(n + 1) / 2 * Pp,
+                               volume=0.0, comm_steps="-", gpus=1, rule="CDP"),
+        "multi_gpu_dp": dict(act_mem=B * Pa, param_mem=Pp, volume=Pp,
+                             comm_steps="O(log N)", gpus=n, rule="DP"),
+        "multi_gpu_cdp": dict(act_mem=B * Pa, param_mem=Pp, volume=Pp,
+                              comm_steps="O(1)", gpus=n, rule="CDP"),
+        "dp_mp": dict(act_mem=B * Pa / n, param_mem=Pp / n,
+                      volume=Pp + B * Pa_int, comm_steps="O(log N)",
+                      gpus=n * n, rule="DP"),
+        "dp_mp_cdp": dict(act_mem=B * Pa / n, param_mem=Pp / n,
+                          volume=0.5 * Pp + B * Pa_int, comm_steps="O(1)",
+                          gpus=n * (n + 1) // 2, rule="CDP"),
+        "pp": dict(act_mem=B * Pa, param_mem=Pp / n, volume=B * Pa_int,
+                   comm_steps="O(1)", gpus=n, rule="CDP"),
+        "zero_dp": dict(act_mem=B * Pa, param_mem=Pp / n, volume=Pp,
+                        comm_steps="O(log N)", gpus=n, rule="DP"),
+        "zero_cdp": dict(act_mem=B * Pa, param_mem=Pp / n, volume=Pp,
+                         comm_steps="O(1)", gpus=n, rule="CDP"),
+    }
+    return rows

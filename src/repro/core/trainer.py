@@ -1,0 +1,249 @@
+"""The CDP trainer: Eq. (CDP) as one SPMD program.
+
+``make_train_step`` builds a jitted training step for any registered
+architecture, parametrised by the update rule:
+
+  * ``dp``      — baseline Data Parallelism: every rank differentiates at
+                  theta_t; gradients merge with a single collective
+                  (``lax.pmean`` -> all-reduce HLO burst at step end).
+  * ``cdp_v1``  — all ranks differentiate at theta_{t-1}; gradients merge on
+                  the point-to-point ring (collective-permute chain).
+  * ``cdp_v2``  — rank i (the micro-batch index = ``lax.axis_index('data')``)
+                  differentiates at theta_hat_i = stage-wise mix of theta_t /
+                  theta_{t-1} per the paper's u_{i,j}; ring merge.
+
+The step runs under ``jax.shard_map`` manual over the data axis (and the pod
+axis when multi-pod), auto (GSPMD) over the model axis — so tensor
+parallelism composes freely with the cyclic schedule.
+
+State layout:
+    {"params": theta_t, "params_prev": theta_{t-1} (CDP only),
+     "opt": optimizer state, "step": int32}
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.core import grad_sync
+from repro.core.schedule import RULE_CDP_V1, RULE_CDP_V2, RULE_DP
+from repro.core.update_rules import (fresh_threshold_traced, needs_prev_params,
+                                     select_params, validate_rule)
+from repro.models import model as model_mod
+from repro.optim import Optimizer
+from repro.sharding import specs as sh
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    rule: str = RULE_CDP_V2
+    data_axis: str = "data"
+    pod_axis: Optional[str] = None        # set for the multi-pod mesh
+    model_axis: str = "model"
+    zero_axis: Optional[str] = None       # FSDP-style param sharding (DP path
+                                          # or pod axis under CDP)
+    donate: bool = True
+    ring_grads: bool = True               # CDP: ring; False -> psum even for CDP
+    lr_schedule: Callable = None
+    grad_clip: float = 0.0                # global-norm clip (0 = off)
+    # ---- beyond-paper §Perf levers ----
+    zero1_ring: bool = False              # ring reduce-scatter + data-sharded
+                                          # optimizer state + param all-gather
+    grad_comm_dtype: str = "float32"      # ring communication dtype
+    seq_parallel: bool = False            # sequence-sharded residual stream
+
+
+def init_state(cfg, trainer: TrainerConfig, params: PyTree, opt: Optimizer):
+    state = {"params": params, "opt": opt.init(params),
+             "step": jnp.zeros((), jnp.int32)}
+    if needs_prev_params(trainer.rule):
+        state["params_prev"] = jax.tree.map(jnp.copy, params)
+    return state
+
+
+def _zero1_specs(params, mesh, trainer) -> PyTree:
+    """Param pspecs with the data axis inserted at each leaf's ring slice
+    axis — the layout of reduce-scattered grads and ZeRO-1 optimizer state."""
+    gps = sh.param_pspecs(params, mesh, trainer.model_axis, trainer.zero_axis)
+    n = mesh.shape[trainer.data_axis]
+    layout = grad_sync.zero1_layout(params, n, gps)
+
+    def one(leaf, spec, ax):
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        if ax >= 0:
+            entries[ax] = trainer.data_axis
+        return P(*entries)
+    return jax.tree.map(one, params, gps, layout)
+
+
+def state_shardings(cfg, trainer: TrainerConfig, state: PyTree, mesh):
+    psh = sh.param_shardings(state["params"], mesh, trainer.model_axis,
+                             trainer.zero_axis)
+    if trainer.zero1_ring:
+        z1 = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                          _zero1_specs(state["params"], mesh, trainer))
+        opt_sh = {k: (z1 if k in ("mom", "m", "v")
+                      else NamedSharding(mesh, P()))
+                  for k in state["opt"]}
+    else:
+        opt_sh = sh.state_shardings(state["opt"], psh)
+    out = {"params": psh,
+           "opt": opt_sh,
+           "step": NamedSharding(mesh, P())}
+    if "params_prev" in state:
+        out["params_prev"] = psh
+    return out
+
+
+def _data_axes(trainer: TrainerConfig):
+    return ((trainer.pod_axis,) if trainer.pod_axis else ()) + (trainer.data_axis,)
+
+
+def make_train_step(cfg, trainer: TrainerConfig, mesh, opt: Optimizer,
+                    loss_fn: Callable = None):
+    """Returns (train_step, state_sharding_fn, batch_sharding_fn).
+
+    train_step(state, batch) -> (state, metrics); jit-ready with shardings.
+    """
+    rule = validate_rule(trainer.rule)
+    loss_fn = loss_fn or (lambda p, b: model_mod.loss_fn(cfg, p, b))
+    n_data = mesh.shape[trainer.data_axis]
+    n_pod = mesh.shape[trainer.pod_axis] if trainer.pod_axis else 1
+    lr_fn = trainer.lr_schedule or (lambda s: 1e-3)
+    daxes = _data_axes(trainer)
+    grad_pspecs_cache = {}
+
+    def grad_pspecs(params):
+        # tensor-parallel specs of the grads (mirror the params) so the ring
+        # slices along unsharded dims only
+        key = id(jax.tree.structure(params))
+        if key not in grad_pspecs_cache:
+            grad_pspecs_cache[key] = sh.param_pspecs(
+                params, mesh, trainer.model_axis, trainer.zero_axis)
+        return grad_pspecs_cache[key]
+
+    # ---- the per-rank gradient computation, manual over data (+ pod) ------
+    def grad_shard(params, params_prev, batch, step):
+        i = jax.lax.axis_index(trainer.data_axis)
+        if rule == RULE_DP or params_prev is None:
+            theta_hat = params
+        else:
+            ids = model_mod.param_stage_ids(cfg, params, n_data)
+            thr = fresh_threshold_traced(rule, i, n_data, step)
+            theta_hat = select_params(params, params_prev, ids, thr)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            theta_hat, batch)
+        if trainer.zero1_ring:
+            grads, _ = grad_sync.zero1_reduce_scatter(
+                grads, trainer.data_axis, n_data, grad_pspecs(params),
+                comm_dtype=jnp.dtype(trainer.grad_comm_dtype))
+        elif rule == RULE_DP or not trainer.ring_grads:
+            grads = grad_sync.psum_all_reduce(grads, trainer.data_axis)
+        else:
+            grads = grad_sync.ring_all_reduce(grads, trainer.data_axis,
+                                              n_data, grad_pspecs(params))
+        if trainer.pod_axis:
+            grads = grad_sync.psum_all_reduce(grads, trainer.pod_axis)
+        loss = jax.lax.pmean(loss, daxes)
+        metrics = jax.lax.pmean(metrics, daxes)
+        return grads, loss, metrics
+
+    batch_manual_spec = P(daxes if len(daxes) > 1 else daxes[0])
+
+    def shard_batch_specs(batch):
+        return jax.tree.map(
+            lambda x: batch_manual_spec if getattr(x, "ndim", 0) else P(),
+            batch)
+
+    use_prev = needs_prev_params(rule)
+
+    def grad_out_specs(params):
+        if not trainer.zero1_ring:
+            return jax.tree.map(lambda _: P(), params)
+        # reduce-scattered grads come out data-sharded along the slice axis
+        layout = grad_sync.zero1_layout(
+            params, n_data, grad_pspecs(params))
+
+        def one(leaf, ax):
+            entries = [None] * leaf.ndim
+            if ax >= 0:
+                entries[ax] = trainer.data_axis
+            return P(*entries)
+        return jax.tree.map(one, params, layout)
+
+    def train_step(state, batch):
+        params = state["params"]
+        params_prev = state["params_prev"] if use_prev else params
+        if trainer.seq_parallel:
+            from repro.models import blocks as blocks_mod
+            blocks_mod.set_activation_sharding(mesh, trainer.model_axis)
+        rep = lambda t: jax.tree.map(lambda _: P(), t)
+        in_specs = (rep(params), rep(params_prev), shard_batch_specs(batch),
+                    P())
+        out_specs = (grad_out_specs(params), P(), P())
+        grads, loss, metrics = jax.shard_map(
+            grad_shard, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(daxes), check_vma=False)(
+                params, params_prev, batch, state["step"])
+        if trainer.seq_parallel:
+            from repro.models import blocks as blocks_mod
+            blocks_mod.set_activation_sharding(None, None)
+
+        if trainer.grad_clip:
+            gnorm = jnp.sqrt(sum(
+                jnp.sum(g.astype(jnp.float32) ** 2)
+                for g in jax.tree.leaves(grads)))
+            scale = jnp.minimum(1.0, trainer.grad_clip / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+        lr = lr_fn(state["step"])
+        new_params, new_opt = opt.update(grads, state["opt"], params, lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        if use_prev:
+            new_state["params_prev"] = params            # theta_t -> theta_{t-1}
+        metrics = dict(metrics)
+        metrics["lr"] = lr
+        return new_state, metrics
+
+    def batch_shardings(batch):
+        return sh.batch_sharding(batch, mesh, daxes)
+
+    return train_step, partial(state_shardings, cfg, trainer), batch_shardings
+
+
+def jit_train_step(cfg, trainer: TrainerConfig, mesh, opt: Optimizer,
+                   state: PyTree, batch_example: PyTree, loss_fn=None):
+    """Convenience: build + jit with explicit in/out shardings."""
+    step_fn, state_sh_fn, batch_sh_fn = make_train_step(
+        cfg, trainer, mesh, opt, loss_fn)
+    ssh = state_sh_fn(state, mesh)
+    bsh = batch_sh_fn(batch_example)
+    jitted = jax.jit(step_fn,
+                     in_shardings=(ssh, bsh),
+                     out_shardings=(ssh, None),
+                     donate_argnums=(0,) if trainer.donate else ())
+    return jitted, ssh, bsh
+
+
+# ---------------------------------------------------------------------------
+# Serving steps (no CDP — decode/prefill are inference paths)
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg, mesh, data_axes=("data",)):
+    def prefill(params, batch):
+        return model_mod.prefill_logits(cfg, params, batch)
+    return prefill
+
+
+def make_serve_step(cfg, mesh, data_axes=("data",)):
+    def serve_step(params, batch, cache):
+        return model_mod.decode_step(cfg, params, batch, cache)
+    return serve_step

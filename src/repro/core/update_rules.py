@@ -1,0 +1,64 @@
+"""Eq. (CDP) parameter-selection rules applied to real parameter pytrees.
+
+``select_params`` implements theta_hat_{i,t}^j = u_{i,j}(theta_t^j,
+theta_{t-1}^j) leaf-wise: each leaf carries a stage-id array (from
+``repro.models.model.param_stage_ids``) and micro-batch i's freshness
+threshold decides, per stage, whether the fresh or the previous parameters
+are used. Works with a traced (device-dependent) micro-batch index, which is
+how the SPMD trainer gives every data-parallel rank its own theta_hat.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.schedule import (ALL_RULES, RULE_CDP_RANDOM, RULE_CDP_V1,
+                                 RULE_CDP_V2, RULE_DP, RULES, fresh_threshold)
+
+PyTree = Any
+
+
+def fresh_threshold_traced(rule: str, microbatch, n: int, step=None):
+    """Like schedule.fresh_threshold but microbatch may be a traced int.
+
+    ``cdp_random`` (beyond-paper, the paper's stated future work): a per-step
+    random threshold uniform in [thr_v2, n] — i.e. anywhere between the
+    freshest schedule the cyclic execution permits (v2) and fully stale (v1);
+    every realisation keeps the delay <= 1 step. Deterministic in (step, i).
+    """
+    if rule == RULE_DP:
+        return jnp.int32(0)
+    if rule == RULE_CDP_V1:
+        return jnp.int32(n)
+    if rule == RULE_CDP_V2:
+        return jnp.int32(n - 1) - jnp.asarray(microbatch, jnp.int32)
+    if rule == RULE_CDP_RANDOM:
+        lo = jnp.int32(n - 1) - jnp.asarray(microbatch, jnp.int32)
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(17),
+                               jnp.asarray(step if step is not None else 0,
+                                           jnp.int32)),
+            jnp.asarray(microbatch, jnp.int32))
+        return lo + jax.random.randint(key, (), 0, jnp.int32(n) - lo + 1)
+    raise ValueError(rule)
+
+
+def select_params(params_new: PyTree, params_prev: PyTree,
+                  stage_ids: PyTree, threshold) -> PyTree:
+    """theta_hat: leaf-wise where(stage >= threshold, new, old)."""
+    def sel(new, old, sid):
+        pred = sid >= threshold
+        return jnp.where(pred, new, old)
+    return jax.tree.map(sel, params_new, params_prev, stage_ids)
+
+
+def needs_prev_params(rule: str) -> bool:
+    return rule in (RULE_CDP_V1, RULE_CDP_V2, RULE_CDP_RANDOM)
+
+
+def validate_rule(rule: str) -> str:
+    if rule not in ALL_RULES:
+        raise ValueError(f"unknown update rule {rule!r}; one of {ALL_RULES}")
+    return rule

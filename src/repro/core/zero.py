@@ -1,0 +1,87 @@
+"""ZeRO-DP vs ZeRO-CDP (paper Sec. 4.4) as SPMD programs.
+
+Baseline ZeRO-DP: parameters stage-sharded over the data axis; every stage
+execution starts with a *broadcast/all-gather* of that stage's parameters to
+all ranks (``lax.all_gather``).
+
+ZeRO-CDP: the same stage-sharded parameters, but the model states travel the
+ring **point-to-point** (``lax.ppermute``), one hop per time step, while each
+rank runs the *cyclic* schedule on its own micro-batch: at inner tick t, rank
+r computes stage (t - r) mod N. Stage j's parameters start at rank (-j) mod N
+and move +1 each tick, so they are exactly where they are needed — the
+paper's "model states are communicated to a single GPU at the next time
+step", with no collective broadcast. The backward pass is obtained by
+``jax.grad`` through the ppermute chain (transposed automatically), giving
+the reverse point-to-point schedule.
+
+Implemented for a homogeneous stack of stages (stage = contiguous layer
+group folded into one callable). This is both a library feature and the
+paper-representative hillclimb target of §Perf.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def _ring_perm(n: int):
+    return [(j, (j + 1) % n) for j in range(n)]
+
+
+def initial_stage_for_rank(rank: int, n: int) -> int:
+    """Stage owned by ``rank`` at tick 0: (-rank) mod n."""
+    return (-rank) % n
+
+
+def roll_stage_params(stacked: PyTree, n: int) -> PyTree:
+    """Re-order a [n_stages, ...]-stacked tree so that slice r holds the
+    stage initially owned by rank r (stage (-r) mod n)."""
+    idx = jnp.asarray([initial_stage_for_rank(r, n) for r in range(n)])
+    return jax.tree.map(lambda x: x[idx], stacked)
+
+
+def zero_cdp_apply(stage_fn: Callable, my_params: PyTree, x, axis: str, n: int):
+    """Cyclic streaming forward.
+
+    stage_fn(stage_params, x) -> x, applied n times per micro-batch.
+    my_params: THIS rank's current parameter shard (from a [n, ...] tree
+    sharded over ``axis`` after ``roll_stage_params``).
+    x: this rank's micro-batch activations.
+
+    Runs 2n-1 ticks: rank r is active for t in [r, r+n). One ppermute per
+    tick = the point-to-point schedule. Steady-state training overlaps
+    consecutive steps; the (n-1)-tick ramp matches the pyramid of Fig. 2c.
+    """
+    r = jax.lax.axis_index(axis)
+    perm = _ring_perm(n)
+
+    def tick(carry, t):
+        x, buf = carry
+        active = (t >= r) & (t < r + n)
+        y = stage_fn(buf, x)
+        x = jax.tree.map(lambda a, b: jnp.where(active, a, b), y, x)
+        buf = jax.lax.ppermute(buf, axis, perm)
+        return (x, buf), None
+
+    (x, _), _ = jax.lax.scan(tick, (x, my_params), jnp.arange(2 * n - 1))
+    return x
+
+
+def zero_dp_apply(stage_fn: Callable, my_params: PyTree, x, axis: str, n: int):
+    """Baseline: all-gather each stage's parameters then run stages in order.
+    One collective broadcast per stage — the pattern ZeRO-CDP removes."""
+    gathered = jax.lax.all_gather(my_params, axis)         # [n, ...] per rank
+    # undo the ownership roll: stage j sits at gathered index (-j) mod n
+    idx = jnp.asarray([initial_stage_for_rank(j, n) for j in range(n)])
+
+    def body(x, j):
+        stage_params = jax.tree.map(lambda g: g[idx[j]], gathered)
+        return stage_fn(stage_params, x), None
+
+    x, _ = jax.lax.scan(body, x, jnp.arange(n))
+    return x

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (lm_batch_iterator, make_classification_data,
+                                  make_lm_data, synthetic_batch)
+from repro.data.loader import ShardedLoader
+
+__all__ = ["lm_batch_iterator", "make_classification_data", "make_lm_data",
+           "synthetic_batch", "ShardedLoader"]

@@ -1,0 +1,54 @@
+"""Sharding-aware host data loader with background prefetch."""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+
+class ShardedLoader:
+    """Wraps a host batch iterator; places each batch with the given
+    shardings and prefetches ``depth`` batches ahead on a worker thread."""
+
+    def __init__(self, host_iter: Iterator, shardings=None, depth: int = 2):
+        self._it = host_iter
+        self._sh = shardings
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _place(self, batch):
+        if self._sh is None:
+            return jax.tree.map(jax.numpy.asarray, batch)
+        return jax.tree.map(
+            lambda x, s: jax.device_put(np.asarray(x), s), batch, self._sh)
+
+    def _work(self):
+        try:
+            for batch in self._it:
+                if self._stop.is_set():
+                    return
+                self._q.put(self._place(batch))
+        except Exception as e:  # surface loader errors to the consumer
+            self._q.put(e)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        item = self._q.get()
+        if isinstance(item, Exception):
+            raise item
+        return item
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

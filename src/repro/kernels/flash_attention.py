@@ -1,0 +1,99 @@
+"""Pallas TPU flash-attention (prefill/training forward), causal + sliding
+window, GQA-aware via the wrapper in ops.py.
+
+Layout: q [BH, Sq, d], k/v [BKV, Sk, d] with BH = batch*heads,
+BKV = batch*kv_heads. Grid (BH, nq, nk): the kv dimension is the innermost
+(sequential) axis; the online-softmax accumulators (m, l, acc) live in VMEM
+scratch and persist across the kv iterations of one (bh, iq) tile — the
+classic flash structure mapped to the TPU grid. Block shapes are multiples
+of 128 on the lane dim for MXU alignment (ops.py pads).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: int, bq: int, bk: int,
+                  nk: int, sk: int):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # [bq, d]
+    k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+    v = v_ref[0].astype(jnp.float32)                  # [bk, dv]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = k_pos < sk
+    if causal:
+        valid = valid & (k_pos <= q_pos)
+    if window:
+        valid = valid & (k_pos > q_pos - window)
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
+                           bq: int = 128, bk: int = 128, group: int = 1,
+                           sk_valid: int = 0, interpret: bool = False):
+    """q: [BH, Sq, d]; k, v: [BKV, Sk, d]; group = heads per kv head.
+    ``sk_valid``: true kv length (padded tail positions are masked)."""
+    BH, Sq, d = q.shape
+    BKV, Sk, dv = v.shape
+    nq = Sq // bq
+    nk = Sk // bk
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        bq=bq, bk=bk, nk=nk, sk=sk_valid or Sk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, dv), lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, dv), jnp.float32),
+        ],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v)

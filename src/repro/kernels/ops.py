@@ -1,0 +1,91 @@
+"""Jitted public wrappers around the Pallas kernels: padding, GQA head
+bookkeeping, block-size selection, and the interpret switch (CPU validation
+vs TPU execution)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention_kernel
+from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.ssm_scan import gla_scan_kernel
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if not pad:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128, interpret: bool = False):
+    """q: [B,Sq,H,dh]; k,v: [B,Sk,KV,dh] -> [B,Sq,H,dh]. Heads fold into the
+    grid's batch dim; GQA via the kv index map (group = H // KV)."""
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, dh)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * KV, Sk, dh)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * KV, Sk, dh)
+    qh, sq0 = _pad_to(qh, 1, bq)
+    kh, sk0 = _pad_to(kh, 1, bk)
+    vh, _ = _pad_to(vh, 1, bk)
+    # padded kv positions are masked because kv_pos < sk is checked with the
+    # ORIGINAL length baked into the kernel closure
+    out = flash_attention_kernel(qh, kh, vh, causal=causal, window=window,
+                                 bq=bq, bk=bk, group=group, sk_valid=sk0,
+                                 interpret=interpret)
+    out = out[:, :sq0]
+    return jnp.moveaxis(out.reshape(B, H, Sq, dh), 1, 2)
+
+
+@partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(q, k, v, cache_len, *, bk: int = 512,
+                     interpret: bool = False):
+    """q: [B,1,H,dh]; k,v: [B,T,KV,dh]; cache_len: [B] -> [B,1,H,dh]."""
+    B, _, H, dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    group = H // KV
+    bk = min(bk, T)
+    qh = q[:, 0].reshape(B, H, dh).reshape(B * H, dh)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * KV, T, dh)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * KV, T, dh)
+    kh, _ = _pad_to(kh, 1, bk)
+    vh, _ = _pad_to(vh, 1, bk)
+    ln = jnp.repeat(cache_len, KV, axis=0)
+    out = decode_attention_kernel(qh, kh, vh, ln, bk=bk, group=group,
+                                  interpret=interpret)
+    return out.reshape(B, H, dh)[:, None][:, :, :, :].reshape(B, 1, H, dh)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def gla_scan(q, k, v, g, *, chunk: int = 64, interpret: bool = False):
+    """Chunked gated-linear-attention. q,k: [B,S,H,dk]; v: [B,S,H,dv];
+    g: [B,S,H] log-decay. Returns y: [B,S,H,dv]."""
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    chunk = min(chunk, S)
+
+    def fold(x):
+        return jnp.moveaxis(x, 2, 1).reshape((B * H, S) + x.shape[3:])
+
+    qh, kh, vh = fold(q), fold(k), fold(v)
+    gh = jnp.moveaxis(g, 2, 1).reshape(B * H, S)
+    qh, s0 = _pad_to(qh, 1, chunk)
+    kh, _ = _pad_to(kh, 1, chunk)
+    vh, _ = _pad_to(vh, 1, chunk)
+    gh, _ = _pad_to(gh, 1, chunk)
+    y = gla_scan_kernel(qh, kh, vh, gh, chunk=chunk, interpret=interpret)
+    y = y[:, :s0]
+    return jnp.moveaxis(y.reshape(B, H, S, dv), 1, 2)

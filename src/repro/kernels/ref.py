@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth
+the shape/dtype sweep tests assert against."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        group: int = 1):
+    """q: [BH, Sq, d]; k, v: [BKV, Sk, d]. Naive full-matrix attention."""
+    BH, Sq, d = q.shape
+    BKV, Sk, dv = v.shape
+    scale = 1.0 / math.sqrt(d)
+    kq = jnp.repeat(k, group, axis=0)
+    vq = jnp.repeat(v, group, axis=0)
+    s = jnp.einsum("bsd,btd->bst", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * scale
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (kp <= qp)
+    if window:
+        mask = mask & (kp > qp - window)
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,btd->bsd", p, vq.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, cache_len, *, group: int = 1):
+    """q: [BH, d]; k, v: [BKV, T, d]; cache_len: [BKV]."""
+    BH, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    kq = jnp.repeat(k, group, axis=0)
+    vq = jnp.repeat(v, group, axis=0)
+    ln = jnp.repeat(cache_len, group, axis=0)
+    s = jnp.einsum("bd,btd->bt", q.astype(jnp.float32),
+                   kq.astype(jnp.float32)) * scale
+    T = k.shape[1]
+    s = jnp.where(jnp.arange(T)[None] < ln[:, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bt,btd->bd", p, vq.astype(jnp.float32)).astype(q.dtype)
+
+
+def gla_scan_ref(q, k, v, g):
+    """Exact sequential recurrence: S_t = exp(g_t) S_{t-1} + k_t v_t^T;
+    y_t = q_t . S_t.  q,k: [BH,S,dk]; v: [BH,S,dv]; g: [BH,S]."""
+    BH, S, dk = q.shape
+    dv = v.shape[-1]
+
+    def step(state, inp):
+        qt, kt, vt, gt = inp
+        state = jnp.exp(gt.astype(jnp.float32))[:, None, None] * state + \
+            jnp.einsum("bd,bv->bdv", kt.astype(jnp.float32),
+                       vt.astype(jnp.float32))
+        yt = jnp.einsum("bd,bdv->bv", qt.astype(jnp.float32), state)
+        return state, yt
+
+    s0 = jnp.zeros((BH, dk, dv), jnp.float32)
+    _, ys = jax.lax.scan(step, s0, (jnp.moveaxis(q, 1, 0),
+                                    jnp.moveaxis(k, 1, 0),
+                                    jnp.moveaxis(v, 1, 0),
+                                    jnp.moveaxis(g, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(q.dtype)

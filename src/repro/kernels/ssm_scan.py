@@ -1,0 +1,75 @@
+"""Pallas TPU chunked gated-linear-attention scan (Mamba2 SSD / mLSTM core).
+
+Layout: q,k [BH, S, dk]; v [BH, S, dv]; g [BH, S] (log-decay <= 0).
+Grid (BH, nchunks) with the chunk axis sequential: the [dk, dv] recurrent
+state lives in VMEM scratch and is carried across chunk iterations; within a
+chunk the recurrence becomes two MXU contractions plus a masked [Q, Q]
+contraction — the state-space-duality form, tiled so the working set
+(3 chunk tiles + state + [Q,Q] mask) fits VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gla_kernel(q_ref, k_ref, v_ref, g_ref, o_ref, state_ref, *, chunk: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # [Q, dk]
+    k = k_ref[0].astype(jnp.float32)          # [Q, dk]
+    v = v_ref[0].astype(jnp.float32)          # [Q, dv]
+    g = g_ref[0].astype(jnp.float32)          # [Q]
+    cum = jnp.cumsum(g)                       # inclusive
+
+    # intra-chunk: A_ij = (q_i . k_j) * exp(cum_i - cum_j), j <= i
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    dmat = jnp.exp(jnp.where(jj <= ii, cum[:, None] - cum[None, :], -jnp.inf))
+    y = jax.lax.dot(scores * dmat, v, preferred_element_type=jnp.float32)
+
+    # carried-state contribution and state update
+    s0 = state_ref[...]                       # [dk, dv]
+    y = y + jax.lax.dot(q * jnp.exp(cum)[:, None], s0,
+                        preferred_element_type=jnp.float32)
+    decay_to_end = jnp.exp(cum[-1] - cum)     # [Q]
+    s_local = jax.lax.dot_general(k * decay_to_end[:, None], v,
+                                  (((0,), (0,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    state_ref[...] = jnp.exp(cum[-1]) * s0 + s_local
+    o_ref[0] = y.astype(o_ref.dtype)
+
+
+def gla_scan_kernel(q, k, v, g, *, chunk: int = 64, interpret: bool = False):
+    """Returns y [BH, S, dv]; S must be a multiple of chunk (ops.py pads)."""
+    BH, S, dk = q.shape
+    dv = v.shape[-1]
+    nc = S // chunk
+
+    kernel = functools.partial(_gla_kernel, chunk=chunk)
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk), lambda b, c: (b, c)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, dv), q.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, g)

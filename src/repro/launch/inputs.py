@@ -1,0 +1,69 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation. The dry-run lowers against these."""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (FAMILY_ENCDEC, FAMILY_HYBRID, FAMILY_SSM,
+                                FAMILY_VLM, InputShape, ModelConfig)
+from repro.models import model as model_mod
+
+SDS = jax.ShapeDtypeStruct
+
+# sliding-window opt-in used by long_500k for archs whose reference form is
+# full attention (recorded as a variant in DESIGN.md)
+LONG_CONTEXT_WINDOW = 8192
+
+
+def adapt_config_for_shape(cfg: ModelConfig, shape: InputShape) -> ModelConfig:
+    if shape.name == "long_500k" and not cfg.sub_quadratic \
+            and cfg.family not in (FAMILY_SSM,):
+        cfg = cfg.with_(attn_window=LONG_CONTEXT_WINDOW)
+    if shape.name == "long_500k" and cfg.family == FAMILY_HYBRID \
+            and not cfg.attn_window:
+        # bound the shared attention block's cache as well
+        cfg = cfg.with_(attn_window=LONG_CONTEXT_WINDOW)
+    return cfg
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape,
+                with_targets: bool = True) -> Dict[str, Any]:
+    """Inputs for train/prefill (full-sequence) steps."""
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    batch = {"tokens": SDS((B, S), jnp.int32)}
+    if with_targets:
+        batch["targets"] = SDS((B, S), jnp.int32)
+    if cfg.family == FAMILY_VLM:
+        v = cfg.vlm
+        batch["patches"] = SDS((B, v.num_patches, v.vision_dim), dt)
+    if cfg.family == FAMILY_ENCDEC:
+        e = cfg.encdec
+        batch["frames"] = SDS((B, max(1, S // e.frame_rate_divisor),
+                               e.frontend_dim), dt)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape) -> Tuple[Dict, Any]:
+    """(batch, cache) for serve_step: ONE new token against a seq_len cache."""
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"token": SDS((B,), jnp.int32)}
+    cache = jax.eval_shape(lambda: model_mod.init_cache(cfg, B, S))
+    return batch, cache
+
+
+def params_specs(cfg: ModelConfig) -> Any:
+    return jax.eval_shape(
+        lambda: model_mod.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """The full kwargs dict for the step being lowered for (cfg, shape)."""
+    cfg = adapt_config_for_shape(cfg, shape)
+    if shape.is_decode:
+        batch, cache = decode_specs(cfg, shape)
+        return {"batch": batch, "cache": cache}
+    return {"batch": batch_specs(cfg, shape, with_targets=(shape.kind == "train"))}

@@ -1,0 +1,306 @@
+"""Roofline terms from a compiled dry-run artifact (no hardware needed).
+
+Terms (per device, seconds), TPU v5e constants:
+    compute    = HLO_FLOPs / peak_FLOPs            (197 TF/s bf16 per chip)
+    memory     = HLO_bytes_accessed / HBM_bw       (819 GB/s per chip)
+    collective = collective_bytes / ICI_bw         (~50 GB/s per link)
+
+``compiled.cost_analysis()`` supplies FLOPs / bytes of the SPMD-partitioned
+(per-device) module. Collective bytes are NOT in cost_analysis: we parse the
+HLO text, summing result-shape bytes of every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute — including ops inside
+``while`` bodies (scan over layers, blockwise attention), whose trip counts
+are recovered from the loop-condition constant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "s64": 8, "u64": 8, "s32": 4, "u32": 4,
+                "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+                "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of an HLO result type, incl. tuples '(f32[2,3], bf16[4])'."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    total_bytes: int
+    by_type: Dict[str, int]
+    max_single_op_bytes: int          # largest burst (the CDP balance metric)
+    op_counts: Dict[str, int]
+
+
+def _split_computations(hlo: str) -> Dict[str, List[str]]:
+    comps: Dict[str, List[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        s = line.strip()
+        # computation headers can have nested tuple parens and /*index=N*/
+        # comments in the signature; exclude op-assignment lines instead
+        m = re.match(r"(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*->\s*.*\{\s*$", s)
+        is_op = re.match(r"(?:ROOT\s+)?%[\w\.\-]+\s*=", s)
+        if m and not is_op:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if s == "}":
+            cur = None
+            continue
+        if cur is not None:
+            comps[cur].append(s)
+    return comps
+
+
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+
+
+def _while_trip(line: str, comps, cond_name: Optional[str]) -> int:
+    m = _TRIP_RE.search(line)
+    if m:
+        return int(m.group(1))
+    return _cond_trip_count(comps.get(cond_name, [])) if cond_name else 1
+
+
+def _cond_trip_count(cond_lines: List[str]) -> int:
+    best = 1
+    for ln in cond_lines:
+        for m in re.finditer(r"constant\((\d+)\)", ln):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+def parse_collectives(hlo: str) -> CollectiveStats:
+    comps = _split_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line.strip())
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:       # fall back: treat whole text as one computation
+        comps = {"main": hlo.splitlines()}
+        entry = "main"
+
+    by_type: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    op_counts: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    max_single = 0
+
+    def comp_bytes(name: str, mult: int, seen) -> int:
+        nonlocal max_single
+        if name not in comps or name in seen:
+            return 0
+        seen = seen | {name}
+        total = 0
+        for ln in comps[name]:
+            mm = re.match(r"(?:ROOT\s+)?%[\w\.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(",
+                          ln)  # lazy: tuple types contain /*index=N*/
+            if not mm:
+                continue
+            shape_str, op = mm.group(1), mm.group(2)
+            if op in ("all-reduce-start", "all-gather-start",
+                      "collective-permute-start", "reduce-scatter-start",
+                      "all-to-all-start"):
+                op = op[:-6]
+            if op in _COLLECTIVES:
+                b = _shape_bytes(shape_str)
+                by_type[op] += b * mult
+                op_counts[op] += mult
+                total += b * mult
+                max_single = max(max_single, b)
+            elif op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if mb:
+                    trip = _while_trip(ln, comps, mc.group(1) if mc else None)
+                    total += comp_bytes(mb.group(1), mult * trip, seen)
+            elif op in ("call", "conditional", "custom-call", "fusion"):
+                for mc in re.finditer(r"(?:to_apply=|calls=)%?([\w\.\-]+)", ln):
+                    total += comp_bytes(mc.group(1), mult, seen)
+        return total
+
+    total = comp_bytes(entry, 1, frozenset())
+    return CollectiveStats(total_bytes=total, by_type=by_type,
+                           max_single_op_bytes=max_single,
+                           op_counts=op_counts)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                  # per-device HLO flops
+    bytes_accessed: float         # per-device HLO bytes
+    collective_bytes: float       # per-device collective bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float            # 6*N*D useful flops per device
+    useful_ratio: float
+    collectives: CollectiveStats
+
+
+def analyze(compiled, *, chips: int, model_flops_global: float) -> Roofline:
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    flops_once = float(ca.get("flops", 0.0))
+    bytes_once = float(ca.get("bytes accessed", 0.0))
+    # cost_analysis counts while (scan) bodies once; the parsed dot-FLOPs
+    # carry loop trip counts. Bytes are scaled by the same loop factor
+    # (scan-dominated programs: loop-body bytes scale like loop-body flops).
+    flops = max(flops_once, parse_dot_flops(hlo))
+    loop_factor = flops / flops_once if flops_once else 1.0
+    bytes_acc = bytes_once * min(loop_factor, 128.0)
+    stats = parse_collectives(hlo)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_acc / HBM_BW
+    coll_s = stats.total_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_global / chips
+    return Roofline(flops=flops, bytes_accessed=bytes_acc,
+                    collective_bytes=float(stats.total_bytes),
+                    compute_s=compute_s, memory_s=memory_s,
+                    collective_s=coll_s, bottleneck=bottleneck,
+                    model_flops=mf,
+                    useful_ratio=(mf / flops if flops else 0.0),
+                    collectives=stats)
+
+
+_DOT_RE = re.compile(
+    r"=\s*(\S+?)\s+dot\(([^)]*)\).*?lhs_contracting_dims=\{([\d,]*)\}")
+_OPERAND_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _dims(dims_str):
+    return [int(d) for d in dims_str.split(",") if d]
+
+
+def parse_dot_flops(hlo: str) -> float:
+    """Sum matmul FLOPs from the HLO text, multiplying ops inside ``while``
+    bodies by the loop trip count. ``cost_analysis()`` counts a scan body
+    ONCE, under-reporting a 61-layer model by ~61x — this parse is the
+    per-device compute number the roofline needs."""
+    comps = _split_computations(hlo)
+    entry = None
+    for line in hlo.splitlines():
+        m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line.strip())
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:
+        comps = {"main": hlo.splitlines()}
+        entry = "main"
+
+    def comp_flops(name, mult, seen):
+        if name not in comps or name in seen:
+            return 0.0
+        seen = seen | {name}
+        # symbol table: op name -> result type string (for operand lookups)
+        symbols = {}
+        for ln in comps[name]:
+            ms = re.match(r"(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(\S+)", ln)
+            if ms:
+                symbols[ms.group(1)] = ms.group(2)
+        total = 0.0
+        for ln in comps[name]:
+            mm = re.match(r"(?:ROOT\s+)?%[\w\.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(",
+                          ln)  # lazy: tuple types contain /*index=N*/
+            if not mm:
+                continue
+            op = mm.group(2)
+            if op == "dot":
+                md = _DOT_RE.search(ln)
+                if not md:
+                    continue
+                res_elems = 1
+                rm = _OPERAND_SHAPE_RE.search(md.group(1))
+                if rm:
+                    for d in _dims(rm.group(2)):
+                        res_elems *= d
+                # contraction size: look the lhs operand's shape up in the
+                # computation-local symbol table
+                k = 1
+                lhs_name = re.match(r"\s*%([\w\.\-]+)", md.group(2))
+                lhs_type = symbols.get(lhs_name.group(1), "") if lhs_name else ""
+                sm = _OPERAND_SHAPE_RE.search(lhs_type)
+                if sm:
+                    lhs_dims = _dims(sm.group(2))
+                    for ci in _dims(md.group(3)):
+                        if ci < len(lhs_dims):
+                            k *= lhs_dims[ci]
+                total += 2.0 * res_elems * k * mult
+            elif op in ("fusion", "call", "conditional"):
+                for mc in re.finditer(r"calls=%?([\w\.\-]+)", ln):
+                    total += comp_flops(mc.group(1), mult, seen)
+                for mc in re.finditer(r"to_apply=%?([\w\.\-]+)", ln):
+                    total += comp_flops(mc.group(1), mult, seen)
+            elif op == "while":
+                mb = re.search(r"body=%?([\w\.\-]+)", ln)
+                mc = re.search(r"condition=%?([\w\.\-]+)", ln)
+                if mb:
+                    trip = _while_trip(ln, comps, mc.group(1) if mc else None)
+                    total += comp_flops(mb.group(1), mult * trip, seen)
+        return total
+
+    return comp_flops(entry, 1, frozenset())
+
+
+def largest_ops(hlo: str, top: int = 25):
+    """Largest result shapes in the optimized HLO — the usual suspects when
+    memory_analysis reports an unexpected peak. Returns [(bytes, op line)]."""
+    out = []
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%[\w\.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        b = _shape_bytes(m.group(1))
+        if b > (64 << 20):
+            out.append((b, s[:160]))
+    out.sort(key=lambda t: -t[0])
+    return out[:top]
+
+
+def model_flops_for(cfg, shape, param_count_active: int) -> float:
+    """6*N*D for training; 2*N*D for inference forward (per step)."""
+    tokens = shape.global_batch * (1 if shape.is_decode else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * param_count_active * tokens
+
+
+def as_dict(r: Roofline) -> Dict:
+    return {
+        "flops": r.flops, "bytes_accessed": r.bytes_accessed,
+        "collective_bytes": r.collective_bytes,
+        "compute_s": r.compute_s, "memory_s": r.memory_s,
+        "collective_s": r.collective_s, "bottleneck": r.bottleneck,
+        "model_flops": r.model_flops, "useful_ratio": r.useful_ratio,
+        "coll_by_type": r.collectives.by_type,
+        "coll_op_counts": r.collectives.op_counts,
+        "coll_max_burst": r.collectives.max_single_op_bytes,
+    }

@@ -1,0 +1,6 @@
+from repro.models.common import count_params
+from repro.models.model import (analytic_param_count, init_cache, init_params,
+                                loss_fn, prefill_logits, decode_step)
+
+__all__ = ["analytic_param_count", "init_cache", "init_params", "loss_fn",
+           "prefill_logits", "decode_step", "count_params"]

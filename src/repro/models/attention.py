@@ -1,0 +1,400 @@
+"""Attention variants: GQA/MHA (+ sliding window, partial/2D RoPE), MLA.
+
+Prefill/train attention is computed **blockwise over the KV axis** with an
+online softmax (flash-attention structure in pure jnp) so that no [S, S]
+score tensor is ever materialised — required for the 32k prefill shapes.
+The Pallas kernel in ``repro.kernels.flash_attention`` implements the same
+contraction for the TPU target; this module is the reference/default path.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_dict
+from repro.models.layers import apply_rope
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (flash-style) attention — reference path for all archs
+# ---------------------------------------------------------------------------
+
+def _mask_for(block, Sk, q_pos, kv_pos, causal, window):
+    valid = kv_pos < Sk
+    if causal:
+        valid = valid & (kv_pos <= q_pos)
+    if window:
+        valid = valid & (kv_pos > q_pos - window)
+    return valid
+
+
+def _flash_fwd_scan(q, k, v, *, causal, window, q_offset, block, sk_valid=None):
+    """Returns (out [B,Sq,KV,G,dv], lse [B,Sq,G,KV])."""
+    B, Sq, KV, G, dh = q.shape
+    Sk = k.shape[1] if sk_valid is None else sk_valid
+    dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+    q_pos = (jnp.arange(Sq) + q_offset)[None, :, None]           # [1,Sq,1]
+
+    nblk = k.shape[1] // block
+    kb = jnp.moveaxis(k.reshape(B, nblk, block, KV, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nblk, block, KV, dv), 1, 0)
+
+    def step(carry, inp):
+        m, l, acc, bi = carry
+        kblk, vblk = inp
+        kv_pos = bi * block + jnp.arange(block)[None, None, :]   # [1,1,blk]
+        s = jnp.einsum("bsjgd,btjd->bsgjt", q, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        valid = _mask_for(block, Sk, q_pos, kv_pos, causal, window)
+        s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bsgjt,btjd->bsgjd", p, vblk.astype(jnp.float32))
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc, bi + 1), None
+
+    m0 = jnp.full((B, Sq, G, KV), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Sq, G, KV), jnp.float32)
+    a0 = jnp.zeros((B, Sq, G, KV, dv), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, jnp.int32(0)), (kb, vb))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 2, 3)          # [B,Sq,G,KV,dv] -> [B,Sq,KV,G,dv]
+    lse = m + jnp.log(jnp.maximum(l, 1e-30))   # [B,Sq,G,KV]
+    return out, lse
+
+
+def _flash_bwd_scan(res, do, *, causal, window, q_offset, block, sk_valid=None):
+    """Flash backward: recompute scores blockwise from the saved logsumexp —
+    memory O(S*block) instead of the O(S^2) an AD-of-scan would save."""
+    q, k, v, out, lse = res          # q/out: [B,Sq,KV,G,*]; k/v: [B,Sk,KV,*]
+    B, Sq, KV, G, dh = q.shape
+    Sk = k.shape[1] if sk_valid is None else sk_valid
+    dv = v.shape[-1]
+    scale = 1.0 / math.sqrt(dh)
+    q_pos = (jnp.arange(Sq) + q_offset)[None, :, None]
+
+    nblk = k.shape[1] // block
+    kb = jnp.moveaxis(k.reshape(B, nblk, block, KV, dh), 1, 0)
+    vb = jnp.moveaxis(v.reshape(B, nblk, block, KV, dv), 1, 0)
+    dof = do.astype(jnp.float32)
+    delta = jnp.sum(dof * out, axis=-1)                    # [B,Sq,KV,G]
+
+    def step(carry, inp):
+        dq, bi = carry
+        kblk, vblk = inp
+        kv_pos = bi * block + jnp.arange(block)[None, None, :]
+        s = jnp.einsum("bsjgd,btjd->bsgjt", q, kblk,
+                       preferred_element_type=jnp.float32) * scale
+        valid = _mask_for(block, Sk, q_pos, kv_pos, causal, window)
+        s = jnp.where(valid[:, :, None, None, :], s, NEG_INF)
+        p = jnp.exp(s - lse[..., None])                    # [B,Sq,G,KV,blk]
+        dv_blk = jnp.einsum("bsgjt,bsjgd->btjd", p, dof)
+        dp = jnp.einsum("bsjgd,btjd->bsgjt", dof, vblk.astype(jnp.float32))
+        dlt = jnp.moveaxis(delta, 2, 3)                    # [B,Sq,G,KV]
+        ds = p * (dp - dlt[..., None]) * scale
+        dq = dq + jnp.einsum("bsgjt,btjd->bsjgd", ds, kblk.astype(jnp.float32))
+        dk_blk = jnp.einsum("bsgjt,bsjgd->btjd", ds, q.astype(jnp.float32))
+        return (dq, bi + 1), (dk_blk, dv_blk)
+
+    dq0 = jnp.zeros(q.shape, jnp.float32)
+    (dq, _), (dk_b, dv_b) = jax.lax.scan(step, (dq0, jnp.int32(0)), (kb, vb))
+    sk_pad = k.shape[1]
+    dk = jnp.moveaxis(dk_b, 0, 1).reshape(B, sk_pad, KV, dh)
+    dvv = jnp.moveaxis(dv_b, 0, 1).reshape(B, sk_pad, KV, dv)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dvv.astype(v.dtype)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _flash(q, k, v, causal, window, q_offset, block, sk_valid):
+    out, _ = _flash_fwd_scan(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, block=block, sk_valid=sk_valid)
+    return out
+
+
+def _flash_f(q, k, v, causal, window, q_offset, block, sk_valid):
+    out, lse = _flash_fwd_scan(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, block=block, sk_valid=sk_valid)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_b(causal, window, q_offset, block, sk_valid, res, do):
+    return _flash_bwd_scan(res, do, causal=causal, window=window,
+                           q_offset=q_offset, block=block, sk_valid=sk_valid)
+
+
+_flash.defvjp(_flash_f, _flash_b)
+
+
+def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
+                        q_offset: int = 0, block: int = 512):
+    """q: [B,Sq,H,dh], k: [B,Sk,KV,dh], v: [B,Sk,KV,dv] -> [B,Sq,H,dv].
+
+    Flash-structured (blockwise online softmax) with a custom VJP so the
+    backward pass recomputes scores instead of storing [Sq, Sk] — this is the
+    jnp reference twin of kernels/flash_attention.py.
+
+    GQA: H must be a multiple of KV; query head g attends kv head g*KV//H.
+    ``causal`` masks kv_pos > q_pos with q_pos = q_offset + arange(Sq).
+    ``window``>0 additionally masks kv_pos <= q_pos - window (sliding window).
+    """
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    G = H // KV
+    block = min(block, Sk)
+    nblk = -(-Sk // block)
+    pad = nblk * block - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qr = q.reshape(B, Sq, KV, G, dh)
+    out = _flash(qr, k, v, causal, window, q_offset, block, Sk)
+    return out.reshape(B, Sq, H, dv).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
+    """Single-token attention. q: [B,1,H,dh]; caches: [B,T,KV,dh/dv].
+
+    ``cache_len``: [B] int32 — number of valid cache entries (the new token's
+    position is cache_len - 1 after insertion).
+    """
+    B, _, H, dh = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = 1.0 / math.sqrt(dh)
+    qr = q.reshape(B, KV, G, dh)
+    s = jnp.einsum("bjgd,btjd->bjgt", qr, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    pos = jnp.arange(T)[None, None, None, :]
+    cl = cache_len[:, None, None, None]
+    valid = pos < cl
+    if window:
+        valid = valid & (pos > cl - 1 - window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bjgt,btjd->bjgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, v_cache.shape[-1]).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA projection layer (covers MHA, multi-query, SWA, partial/2D rope, bias)
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg, dtype):
+    d, H, KV = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim
+    ks = split_dict(key, ["wq", "wk", "wv", "wo"])
+    p = {"wq": dense_init(ks["wq"], d, H * hd, dtype),
+         "wk": dense_init(ks["wk"], d, KV * hd, dtype),
+         "wv": dense_init(ks["wv"], d, KV * hd, dtype),
+         "wo": dense_init(ks["wo"], H * hd, d, dtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dtype)
+        p["bk"] = jnp.zeros((KV * hd,), dtype)
+        p["bv"] = jnp.zeros((KV * hd,), dtype)
+    return p
+
+
+def _project_qkv(p, cfg, x):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    return (q.reshape(B, S, H, hd), k.reshape(B, S, KV, hd),
+            v.reshape(B, S, KV, hd))
+
+
+def gqa_apply(p, cfg, x, positions, *, causal=True, window=None):
+    """Self-attention over x: [B,S,d]. positions: [B,S] or [S]."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    q = apply_rope(q, positions, cfg.rope_theta, cfg.partial_rotary_factor,
+                   interleaved=cfg.rope_2d)
+    k = apply_rope(k, positions, cfg.rope_theta, cfg.partial_rotary_factor,
+                   interleaved=cfg.rope_2d)
+    win = cfg.attn_window if window is None else window
+    out = blockwise_attention(q, k, v, causal=causal, window=win)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def gqa_decode(p, cfg, x, cache, *, window=None):
+    """One-token decode. x: [B,1,d]; cache: {"k","v": [B,T,KV,hd], "len": [B]}."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x)
+    pos = cache["len"][:, None]                                   # [B,1]
+    q = apply_rope(q, pos, cfg.rope_theta, cfg.partial_rotary_factor,
+                   interleaved=cfg.rope_2d)
+    k = apply_rope(k, pos, cfg.rope_theta, cfg.partial_rotary_factor,
+                   interleaved=cfg.rope_2d)
+    T = cache["k"].shape[1]
+    win = cfg.attn_window if window is None else window
+    ring = bool(win) and win == T      # cache sized exactly to the window
+    # Synchronized batched decode: all rows advance together, so the write
+    # is a dynamic_update_slice on the (unsharded) time axis. A per-row
+    # scatter (`.at[arange(B), slot]`) forces GSPMD to all-gather the whole
+    # batch-sharded cache — a 48 GiB burst at decode_32k scale.
+    if ring:
+        slot0 = cache["len"][0] % T                               # ring buffer
+    else:
+        slot0 = jnp.minimum(cache["len"][0], T - 1)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot0, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot0, axis=1)
+    new_len = cache["len"] + 1
+    out = decode_attention(q, k_cache, v_cache, new_len,
+                           window=0 if ring else win)
+    new_cache = {"k": k_cache, "v": v_cache, "len": new_len}
+    return out.reshape(B, 1, -1) @ p["wo"], new_cache
+
+
+def gqa_cache_init(cfg, batch: int, cache_len: int, dtype):
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    T = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+    return {"k": jnp.zeros((batch, T, KV, hd), dtype),
+            "v": jnp.zeros((batch, T, KV, hd), dtype),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (enc-dec): q from decoder, kv from encoder memory (no rope)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg, dtype):
+    return gqa_init(key, cfg.with_(qkv_bias=False), dtype)
+
+
+def cross_attn_apply(p, cfg, x, memory, memory_len=None):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (memory @ p["wk"]).reshape(B, memory.shape[1], KV, hd)
+    v = (memory @ p["wv"]).reshape(B, memory.shape[1], KV, hd)
+    out = blockwise_attention(q, k, v, causal=False)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V3 multi-head latent attention
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg, dtype):
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    ks = split_dict(key, ["wq_a", "wq_b", "wkv_a", "wkv_b", "wo",
+                          "q_norm", "kv_norm"])
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_a": dense_init(ks["wq_a"], d, m.q_lora_rank, dtype),
+        "q_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_b": dense_init(ks["wq_b"], m.q_lora_rank, H * qk_dim, dtype),
+        "wkv_a": dense_init(ks["wkv_a"], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wkv_b": dense_init(ks["wkv_b"], m.kv_lora_rank,
+                            H * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": dense_init(ks["wo"], H * m.v_head_dim, d, dtype),
+    }
+
+
+def _rms(x, scale):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + 1e-6)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _mla_q(p, cfg, x, positions):
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = _rms(x @ p["wq_a"], p["q_norm"]) @ p["wq_b"]
+    q = q.reshape(B, S, H, qk)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, cfg, x, positions):
+    m = cfg.mla
+    kv = x @ p["wkv_a"]
+    c_kv, k_rope = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    c_kv = _rms(c_kv, p["kv_norm"])
+    k_rope = apply_rope(k_rope[..., None, :], positions, cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_apply(p, cfg, x, positions):
+    """Training/prefill MLA: materialise per-head K/V from the latent."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    c_kv, k_rope = _mla_latent(p, cfg, x, positions)
+    kvb = (c_kv @ p["wkv_b"]).reshape(B, S, H, m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = kvb[..., :m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim:]
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                                  q_rope.shape)], -1)
+    out = blockwise_attention(q, k, v, causal=True, window=cfg.attn_window)
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def mla_decode(p, cfg, x, cache):
+    """Absorbed-matmul MLA decode: attention runs in the latent space, so the
+    KV cache stores only (c_kv, k_rope) — the compressed cache that makes
+    DeepSeek-V3 decode cheap."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.num_heads
+    pos = cache["len"][:, None]
+    q_nope, q_rope = _mla_q(p, cfg, x, pos)          # [B,1,H,*]
+    c_kv, k_rope = _mla_latent(p, cfg, x, pos)       # [B,1,kvr], [B,1,rd]
+    T = cache["c_kv"].shape[1]
+    # synchronized batched decode (see gqa_decode): time-axis DUS, no scatter
+    if cfg.attn_window and cfg.attn_window == T:
+        slot0 = cache["len"][0] % T                  # ring buffer (windowed)
+    else:
+        slot0 = jnp.minimum(cache["len"][0], T - 1)
+    c_cache = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, slot0, 1)
+    r_cache = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope,
+                                                  slot0, 1)
+    new_len = cache["len"] + 1
+
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
+    w_uk = wkv_b[..., :m.qk_nope_head_dim]           # [kvr,H,nope]
+    w_uv = wkv_b[..., m.qk_nope_head_dim:]           # [kvr,H,vd]
+    # absorb W_UK into the query
+    q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)   # [B,1,H,kvr]
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    s = (jnp.einsum("bshr,btr->bhst", q_lat, c_cache, preferred_element_type=jnp.float32)
+         + jnp.einsum("bshr,btr->bhst", q_rope, r_cache, preferred_element_type=jnp.float32)
+         ) * scale                                   # [B,H,1,T]
+    valid = jnp.arange(T)[None, None, None, :] < new_len[:, None, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    ctx_lat = jnp.einsum("bhst,btr->bshr", pattn, c_cache.astype(jnp.float32))
+    out = jnp.einsum("bshr,rhv->bshv", ctx_lat.astype(x.dtype), w_uv)
+    out = out.reshape(B, 1, -1) @ p["wo"]
+    return out, {"c_kv": c_cache, "k_rope": r_cache, "len": new_len}
+
+
+def mla_cache_init(cfg, batch: int, cache_len: int, dtype):
+    m = cfg.mla
+    T = min(cache_len, cfg.attn_window) if cfg.attn_window else cache_len
+    return {"c_kv": jnp.zeros((batch, T, m.kv_lora_rank), dtype),
+            "k_rope": jnp.zeros((batch, T, m.qk_rope_head_dim), dtype),
+            "len": jnp.zeros((batch,), jnp.int32)}

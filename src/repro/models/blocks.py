@@ -1,0 +1,271 @@
+"""Per-family transformer/SSM blocks, stacked-parameter init, scan runners.
+
+Layers are stored *stacked* (leading layer axis) and executed with
+``lax.scan`` + ``jax.checkpoint`` (remat): one traced layer body keeps the
+HLO small enough to compile 61-layer/512-device dry-runs quickly, and the
+stacked leading axis is what the CDP update rules mask per stage.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.common import split_dict
+from repro.models.layers import apply_mlp, apply_norm, mlp_init, norm_init
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# Optional activation-sharding constraint (sequence parallelism): when set,
+# the residual stream is constrained to be sharded along the sequence dim
+# over the given mesh axis between layers, so the remat-saved carries cost
+# 1/axis_size the memory. Set by the trainer (beyond-paper §Perf lever).
+# ---------------------------------------------------------------------------
+_ACT_CONSTRAINT = None            # (mesh, axis_name) or None
+
+
+def set_activation_sharding(mesh, axis_name):
+    global _ACT_CONSTRAINT
+    _ACT_CONSTRAINT = (mesh, axis_name) if axis_name else None
+
+
+def _constrain_acts(x):
+    if _ACT_CONSTRAINT is None or getattr(x, "ndim", 0) != 3:
+        return x
+    mesh, axis = _ACT_CONSTRAINT
+    if x.shape[1] % mesh.shape[axis]:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(None, axis, None)))
+
+
+def _stack_init(init_one, key, n: int):
+    if n == 0:
+        return None
+    return jax.vmap(init_one)(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# Decoder layer (dense FFN or MoE FFN; GQA or MLA attention)
+# ---------------------------------------------------------------------------
+
+def decoder_layer_init(key, cfg, dtype, *, use_moe: bool):
+    ks = split_dict(key, ["attn", "ffn"])
+    d = cfg.d_model
+    p = {"ln1": norm_init(cfg.norm, d, dtype),
+         "ln2": norm_init(cfg.norm, d, dtype)}
+    if cfg.attn_kind == "mla":
+        p["attn"] = attn.mla_init(ks["attn"], cfg, dtype)
+    else:
+        p["attn"] = attn.gqa_init(ks["attn"], cfg, dtype)
+    if use_moe:
+        p["ffn"] = moe_mod.moe_init(ks["ffn"], cfg, dtype)
+    else:
+        p["ffn"] = mlp_init(ks["ffn"], d, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def decoder_layer_apply(p, cfg, x, positions, *, use_moe: bool, causal=True):
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    if cfg.attn_kind == "mla":
+        a = attn.mla_apply(p["attn"], cfg, h, positions)
+    else:
+        a = attn.gqa_apply(p["attn"], cfg, h, positions, causal=causal)
+    x = x + a
+    h = apply_norm(cfg.norm, p["ln2"], x)
+    if use_moe:
+        B, S, d = h.shape
+        y, aux = moe_mod.moe_apply(p["ffn"], cfg, h.reshape(B * S, d))
+        return x + y.reshape(B, S, d), aux
+    return x + apply_mlp(p["ffn"], h, cfg.act), jnp.float32(0.0)
+
+
+def decoder_layer_decode(p, cfg, x, cache, *, use_moe: bool):
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    if cfg.attn_kind == "mla":
+        a, cache = attn.mla_decode(p["attn"], cfg, h, cache)
+    else:
+        a, cache = attn.gqa_decode(p["attn"], cfg, h, cache)
+    x = x + a
+    h = apply_norm(cfg.norm, p["ln2"], x)
+    if use_moe:
+        B, S, d = h.shape
+        y, _ = moe_mod.moe_apply(p["ffn"], cfg, h.reshape(B * S, d))
+        y = y.reshape(B, S, d)
+    else:
+        y = apply_mlp(p["ffn"], h, cfg.act)
+    return x + y, cache
+
+
+def decoder_layer_cache_init(cfg, batch, cache_len, dtype):
+    if cfg.attn_kind == "mla":
+        return attn.mla_cache_init(cfg, batch, cache_len, dtype)
+    return attn.gqa_cache_init(cfg, batch, cache_len, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Scan runners
+# ---------------------------------------------------------------------------
+
+def scan_layers(layer_fn, stacked: PyTree, x, *, remat: bool = True):
+    """layer_fn(layer_params, x) -> (x, aux). Scans the stacked layer axis,
+    accumulating aux. Returns (x, total_aux)."""
+    def body(carry, lp):
+        x, aux = carry
+        x, a = layer_fn(lp, x)
+        return (_constrain_acts(x), aux + a), None
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), stacked)
+    return x, aux
+
+
+def scan_layers_decode(layer_fn, stacked: PyTree, caches: PyTree, x):
+    """layer_fn(layer_params, x, cache) -> (x, new_cache)."""
+    def body(x, inp):
+        lp, cache = inp
+        x, new_cache = layer_fn(lp, x, cache)
+        return x, new_cache
+    x, new_caches = jax.lax.scan(body, x, (stacked, caches))
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# Encoder layer (bidirectional self-attn + MLP) for enc-dec
+# ---------------------------------------------------------------------------
+
+def encoder_layer_init(key, cfg, dtype):
+    ks = split_dict(key, ["attn", "ffn"])
+    d = cfg.d_model
+    return {"ln1": norm_init(cfg.norm, d, dtype),
+            "attn": attn.gqa_init(ks["attn"], cfg, dtype),
+            "ln2": norm_init(cfg.norm, d, dtype),
+            "ffn": mlp_init(ks["ffn"], d, cfg.d_ff, cfg.act, dtype)}
+
+
+def encoder_layer_apply(p, cfg, x, positions):
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    x = x + attn.gqa_apply(p["attn"], cfg, h, positions, causal=False)
+    h = apply_norm(cfg.norm, p["ln2"], x)
+    return x + apply_mlp(p["ffn"], h, cfg.act), jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# Enc-dec decoder layer (self + cross + MLP)
+# ---------------------------------------------------------------------------
+
+def xdec_layer_init(key, cfg, dtype):
+    ks = split_dict(key, ["self", "cross", "ffn"])
+    d = cfg.d_model
+    return {"ln1": norm_init(cfg.norm, d, dtype),
+            "self": attn.gqa_init(ks["self"], cfg, dtype),
+            "ln_x": norm_init(cfg.norm, d, dtype),
+            "cross": attn.cross_attn_init(ks["cross"], cfg, dtype),
+            "ln2": norm_init(cfg.norm, d, dtype),
+            "ffn": mlp_init(ks["ffn"], d, cfg.d_ff, cfg.act, dtype)}
+
+
+def xdec_layer_apply(p, cfg, x, positions, memory):
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    x = x + attn.gqa_apply(p["self"], cfg, h, positions, causal=True)
+    h = apply_norm(cfg.norm, p["ln_x"], x)
+    x = x + attn.cross_attn_apply(p["cross"], cfg, h, memory)
+    h = apply_norm(cfg.norm, p["ln2"], x)
+    return x + apply_mlp(p["ffn"], h, cfg.act), jnp.float32(0.0)
+
+
+def xdec_layer_decode(p, cfg, x, cache, memory):
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    a, self_cache = attn.gqa_decode(p["self"], cfg, h, cache)
+    x = x + a
+    h = apply_norm(cfg.norm, p["ln_x"], x)
+    x = x + attn.cross_attn_apply(p["cross"], cfg, h, memory)
+    h = apply_norm(cfg.norm, p["ln2"], x)
+    return x + apply_mlp(p["ffn"], h, cfg.act), self_cache
+
+
+# ---------------------------------------------------------------------------
+# Hybrid (zamba2): mamba2 stack + ONE shared attention+MLP block
+# ---------------------------------------------------------------------------
+
+def shared_attn_block_init(key, cfg, dtype):
+    ks = split_dict(key, ["attn", "ffn"])
+    d = cfg.d_model
+    return {"ln1": norm_init(cfg.norm, d, dtype),
+            "attn": attn.gqa_init(ks["attn"], cfg, dtype),
+            "ln2": norm_init(cfg.norm, d, dtype),
+            "ffn": mlp_init(ks["ffn"], d, cfg.hybrid.shared_d_ff, cfg.act, dtype)}
+
+
+def shared_attn_block_apply(p, cfg, x, positions):
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    x = x + attn.gqa_apply(p["attn"], cfg, h, positions, causal=True)
+    h = apply_norm(cfg.norm, p["ln2"], x)
+    return x + apply_mlp(p["ffn"], h, cfg.act)
+
+
+def shared_attn_block_decode(p, cfg, x, cache):
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    a, cache = attn.gqa_decode(p["attn"], cfg, h, cache)
+    x = x + a
+    h = apply_norm(cfg.norm, p["ln2"], x)
+    return x + apply_mlp(p["ffn"], h, cfg.act), cache
+
+
+def mamba_layer_init(key, cfg, dtype):
+    ks = split_dict(key, ["m"])
+    return {"ln": norm_init(cfg.norm, cfg.d_model, dtype),
+            "mamba": ssm_mod.mamba2_init(ks["m"], cfg, dtype)}
+
+
+def mamba_layer_apply(p, cfg, x):
+    h = apply_norm(cfg.norm, p["ln"], x)
+    y = ssm_mod.mamba2_apply(p["mamba"], cfg, h)
+    return x + y.astype(x.dtype), jnp.float32(0.0)
+
+
+def mamba_layer_decode(p, cfg, x, cache):
+    h = apply_norm(cfg.norm, p["ln"], x)
+    y, cache = ssm_mod.mamba2_decode(p["mamba"], cfg, h, cache)
+    return x + y.astype(x.dtype), cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM blocks
+# ---------------------------------------------------------------------------
+
+def mlstm_layer_init(key, cfg, dtype):
+    ks = split_dict(key, ["m"])
+    return {"ln": norm_init(cfg.norm, cfg.d_model, dtype),
+            "mlstm": ssm_mod.mlstm_init(ks["m"], cfg, dtype)}
+
+
+def mlstm_layer_apply(p, cfg, x):
+    h = apply_norm(cfg.norm, p["ln"], x)
+    y = ssm_mod.mlstm_apply(p["mlstm"], cfg, h)
+    return x + y.astype(x.dtype), jnp.float32(0.0)
+
+
+def mlstm_layer_decode(p, cfg, x, cache):
+    h = apply_norm(cfg.norm, p["ln"], x)
+    y, cache = ssm_mod.mlstm_decode(p["mlstm"], cfg, h, cache)
+    return x + y.astype(x.dtype), cache
+
+
+def slstm_layer_init(key, cfg, dtype):
+    ks = split_dict(key, ["s"])
+    return {"ln": norm_init(cfg.norm, cfg.d_model, dtype),
+            "slstm": ssm_mod.slstm_init(ks["s"], cfg, dtype)}
+
+
+def slstm_layer_apply(p, cfg, x, cache=None):
+    h = apply_norm(cfg.norm, p["ln"], x)
+    y, new_cache = ssm_mod.slstm_apply(p["slstm"], cfg, h, cache)
+    return x + y.astype(x.dtype), new_cache

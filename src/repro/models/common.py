@@ -1,0 +1,59 @@
+"""Shared functional-model utilities: initialisation, dtype policy, tree math."""
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def dtype_of(cfg) -> jnp.dtype:
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    if scale is None:
+        scale = 1.0 / math.sqrt(d_in)
+    w = scale * jax.random.truncated_normal(key, -3.0, 3.0, (d_in, d_out), jnp.float32)
+    return w.astype(dtype)
+
+
+def stacked_dense_init(key, n: int, d_in: int, d_out: int, dtype,
+                       scale: float | None = None):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: dense_init(k, d_in, d_out, jnp.float32, scale))(keys).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    w = 0.02 * jax.random.truncated_normal(key, -3.0, 3.0, (vocab, d), jnp.float32)
+    return w.astype(dtype)
+
+
+def zeros(shape, dtype):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(shape, dtype):
+    return jnp.ones(shape, dtype)
+
+
+def count_params(params: PyTree) -> int:
+    return int(sum(np.prod(p.shape) for p in jax.tree.leaves(params)))
+
+
+def param_bytes(params: PyTree) -> int:
+    return int(sum(np.prod(p.shape) * p.dtype.itemsize for p in jax.tree.leaves(params)))
+
+
+def tree_cast(tree: PyTree, dtype) -> PyTree:
+    return jax.tree.map(lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x, tree)
+
+
+def split_dict(key, names):
+    ks = jax.random.split(key, len(names))
+    return dict(zip(names, ks))

@@ -1,0 +1,109 @@
+"""Core layers: norms, rotary embeddings, MLPs — pure-jnp, shard-friendly."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_dict
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def layernorm_init(d: int, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def norm_init(kind: str, d: int, dtype):
+    return layernorm_init(d, dtype) if kind == "layernorm" else rmsnorm_init(d, dtype)
+
+
+def apply_norm(kind: str, p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(xf * xf, -1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard, partial, chatglm-style 2d/paired)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim_rot: int, theta: float):
+    # head_dim_rot = number of channels actually rotated (must be even)
+    inv = 1.0 / (theta ** (jnp.arange(0, head_dim_rot, 2, dtype=jnp.float32) / head_dim_rot))
+    return inv  # [head_dim_rot//2]
+
+
+def apply_rope(x, positions, theta: float, rotary_fraction: float = 1.0,
+               interleaved: bool = False):
+    """x: [..., S, n_heads, head_dim]; positions: [..., S] int32.
+
+    ``rotary_fraction`` < 1 rotates only the first channels (StableLM /
+    ChatGLM partial rotary). ``interleaved`` pairs channels (2i, 2i+1)
+    (GLM 2D-RoPE layout) instead of (i, i + d/2).
+    """
+    hd = x.shape[-1]
+    rot = int(hd * rotary_fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    inv = rope_freqs(rot, theta)
+    ang = positions[..., None].astype(jnp.float32) * inv  # [..., S, rot//2]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    if interleaved:
+        # reshape-pairing instead of strided slices: a stride-2 slice on a
+        # (possibly intra-head-sharded) dim hard-crashes the SPMD partitioner
+        # at kv_heads << mesh; (.., rot) -> (.., rot//2, 2) is shardable
+        pairs = xr.reshape(xr.shape[:-1] + (rot // 2, 2)).astype(jnp.float32)
+        x1, x2 = pairs[..., 0], pairs[..., 1]
+        o1 = x1 * cos - x2 * sin
+        o2 = x2 * cos + x1 * sin
+        out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    else:
+        half = rot // 2
+        x1 = xr[..., :half].astype(jnp.float32)
+        x2 = xr[..., half:].astype(jnp.float32)
+        o1 = x1 * cos - x2 * sin
+        o2 = x2 * cos + x1 * sin
+        out = jnp.concatenate([o1, o2], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, act: str, dtype):
+    ks = split_dict(key, ["w1", "w3", "w2"])
+    p = {"w1": dense_init(ks["w1"], d, d_ff, dtype),
+         "w2": dense_init(ks["w2"], d_ff, d, dtype)}
+    if act == "silu":  # swiglu needs the extra gate matrix
+        p["w3"] = dense_init(ks["w3"], d, d_ff, dtype)
+    return p
+
+
+def apply_mlp(p, x, act: str):
+    h = x @ p["w1"]
+    if act == "silu":
+        h = jax.nn.silu(h) * (x @ p["w3"])
+    else:
+        h = jax.nn.gelu(h)
+    return h @ p["w2"]
+
+
+def mlp_param_count(d: int, d_ff: int, act: str) -> int:
+    return d * d_ff * (3 if act == "silu" else 2)

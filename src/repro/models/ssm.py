@@ -1,0 +1,347 @@
+"""State-space / recurrent blocks: Mamba2 (SSD chunked scan), mLSTM, sLSTM.
+
+The shared compute core is ``chunked_gla`` — a chuntched gated-linear-attention
+scan (the "state-space duality" form of Mamba2 [arXiv:2405.21060] and the
+matrix-memory mLSTM [arXiv:2405.04517]): within a chunk the recurrence is a
+masked quadratic contraction (MXU-friendly), across chunks a short
+``lax.scan`` carries the [dk, dv] state. ``repro.kernels.ssm_scan`` is the
+Pallas TPU kernel for the same contraction.
+
+Decode is the exact recurrent update: O(1) state per token — this is what
+makes the SSM/hybrid architectures eligible for the long_500k shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, split_dict
+from repro.models.layers import apply_norm, norm_init
+
+
+# ---------------------------------------------------------------------------
+# Chunked gated linear attention core
+#   S_t = exp(g_t) * S_{t-1} + k_t v_t^T ;  y_t = q_t . S_t   (per head)
+# ---------------------------------------------------------------------------
+
+def chunked_gla(q, k, v, g, state=None, chunk: int = 64):
+    """q,k: [B,S,H,dk]; v: [B,S,H,dv]; g: [B,S,H] log-decay (<= 0).
+
+    Returns (y: [B,S,H,dv], final_state: [B,H,dk,dv]).
+    """
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    Q = min(chunk, S)
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        g = jnp.pad(g, ((0, 0), (0, pad), (0, 0)))
+
+    def resh(x):
+        return jnp.moveaxis(x.reshape((B, nc, Q) + x.shape[2:]), 1, 0)
+
+    qc, kc, vc, gc = resh(q), resh(k), resh(v), resh(g)        # [nc,B,Q,...]
+    if state is None:
+        state = jnp.zeros((B, H, dk, dv), jnp.float32)
+
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    def step(S0, inp):
+        qq, kk, vv, gg = inp                                   # [B,Q,H,*]
+        cum = jnp.cumsum(gg.astype(jnp.float32), axis=1)       # [B,Q,H]
+        # intra-chunk: A_ij = (q_i.k_j) * exp(cum_i - cum_j), j <= i
+        scores = jnp.einsum("bihd,bjhd->bhij", qq, kk,
+                            preferred_element_type=jnp.float32)
+        dmat = cum.transpose(0, 2, 1)[:, :, :, None] - cum.transpose(0, 2, 1)[:, :, None, :]
+        # mask BEFORE exp: for j > i the exponent is positive and can
+        # overflow to inf, and where(mask, inf, 0) has a NaN gradient
+        dmat = jnp.exp(jnp.where(tri[None, None], dmat, -jnp.inf))
+        y_intra = jnp.einsum("bhij,bjhv->bihv", scores * dmat,
+                             vv.astype(jnp.float32))
+        # contribution of the carried state
+        y_inter = jnp.einsum("bihd,bhdv->bihv",
+                             qq.astype(jnp.float32) * jnp.exp(cum)[..., None], S0)
+        # next state
+        decay_to_end = jnp.exp(cum[:, -1:, :] - cum)           # [B,Q,H]
+        S_local = jnp.einsum("bjhd,bjhv->bhdv",
+                             kk.astype(jnp.float32) * decay_to_end[..., None],
+                             vv.astype(jnp.float32))
+        S1 = jnp.exp(cum[:, -1])[..., None, None] * S0 + S_local
+        return S1, y_intra + y_inter
+
+    state, yc = jax.lax.scan(step, state, (qc, kc, vc, gc))
+    y = jnp.moveaxis(yc, 0, 1).reshape(B, nc * Q, H, dv)[:, :S]
+    return y.astype(q.dtype), state
+
+
+def gla_decode_step(q, k, v, g, state):
+    """One-token recurrent update. q,k: [B,H,dk]; v: [B,H,dv]; g: [B,H]."""
+    a = jnp.exp(g.astype(jnp.float32))[..., None, None]
+    state = a * state + jnp.einsum("bhd,bhv->bhdv", k.astype(jnp.float32),
+                                   v.astype(jnp.float32))
+    y = jnp.einsum("bhd,bhdv->bhv", q.astype(jnp.float32), state)
+    return y.astype(q.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    heads = inner // s.head_dim
+    conv_ch = inner + 2 * s.state_dim         # x, B, C all go through conv
+    return inner, heads, conv_ch
+
+
+def mamba2_init(key, cfg, dtype):
+    s = cfg.ssm
+    d = cfg.d_model
+    inner, H, conv_ch = mamba2_dims(cfg)
+    ks = split_dict(key, ["in", "conv", "dt", "out", "norm"])
+    # separate projections (z / xBC / dt) instead of one fused in_proj:
+    # each gets a clean tensor-parallel sharding without slicing a sharded dim
+    p = {
+        "w_z": dense_init(ks["in"], d, inner, dtype),
+        "w_xbc": dense_init(ks["norm"], d, conv_ch, dtype),
+        "w_dt": dense_init(ks["dt"], d, H, dtype),
+        "conv_w": (0.1 * jax.random.normal(ks["conv"], (s.conv_dim, conv_ch), jnp.float32)).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H).astype(jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((inner,), dtype),
+        "out_proj": dense_init(ks["out"], inner, d, dtype),
+    }
+    return p
+
+
+def _depthwise_conv(x, w, b):
+    """Causal depthwise conv. x: [B,S,C]; w: [K,C]."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(K))
+    return out + b
+
+
+def _mamba2_proj(p, cfg, x):
+    inner, H, conv_ch = mamba2_dims(cfg)
+    return x @ p["w_z"], x @ p["w_xbc"], x @ p["w_dt"], inner, H
+
+
+def mamba2_apply(p, cfg, x, state=None):
+    """x: [B,S,d] -> [B,S,d] (training/prefill path)."""
+    s = cfg.ssm
+    B, S, d = x.shape
+    z, xbc, dt, inner, H = _mamba2_proj(p, cfg, x)
+    xbc = jax.nn.silu(_depthwise_conv(xbc, p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :inner].reshape(B, S, H, s.head_dim)
+    Bmat = xbc[..., inner:inner + s.state_dim]               # [B,S,N] (1 group)
+    Cmat = xbc[..., inner + s.state_dim:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # [B,S,H]
+    A = -jnp.exp(p["A_log"])                                  # [H]
+    g = dt * A                                                # log-decay <= 0
+    kk = jnp.broadcast_to(Bmat[:, :, None, :], (B, S, H, s.state_dim))
+    qq = jnp.broadcast_to(Cmat[:, :, None, :], (B, S, H, s.state_dim))
+    vv = xs * dt[..., None].astype(xs.dtype)
+    y, _ = chunked_gla(qq, kk, vv, g, state=state, chunk=s.chunk)
+    y = y + xs * p["D"][None, None, :, None]
+    y = y.reshape(B, S, inner)
+    # gated RMSNorm (Mamba2 norm-before-out)
+    y = apply_norm("rmsnorm", {"scale": p["norm"]}, y * jax.nn.silu(z))
+    return y @ p["out_proj"]
+
+
+def mamba2_cache_init(cfg, batch: int, dtype):
+    s = cfg.ssm
+    inner, H, conv_ch = mamba2_dims(cfg)
+    return {"state": jnp.zeros((batch, H, s.state_dim, s.head_dim), jnp.float32),
+            "conv": jnp.zeros((batch, s.conv_dim - 1, conv_ch), dtype)}
+
+
+def mamba2_decode(p, cfg, x, cache):
+    """x: [B,1,d]; O(1) recurrent update."""
+    s = cfg.ssm
+    B = x.shape[0]
+    z, xbc, dt, inner, H = _mamba2_proj(p, cfg, x)
+    conv_in = jnp.concatenate([cache["conv"], xbc], axis=1)   # [B,K,convch]
+    xbc1 = jnp.einsum("bkc,kc->bc", conv_in, p["conv_w"]) + p["conv_b"]
+    xbc1 = jax.nn.silu(xbc1)
+    new_conv = conv_in[:, 1:]
+    xs = xbc1[:, :inner].reshape(B, H, s.head_dim)
+    Bv = xbc1[:, inner:inner + s.state_dim]
+    Cv = xbc1[:, inner + s.state_dim:]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    g = dt1 * A
+    kk = jnp.broadcast_to(Bv[:, None, :], (B, H, s.state_dim))
+    qq = jnp.broadcast_to(Cv[:, None, :], (B, H, s.state_dim))
+    vv = xs * dt1[..., None].astype(xs.dtype)
+    y, new_state = gla_decode_step(qq, kk, vv, g, cache["state"])
+    y = y + xs * p["D"][None, :, None]
+    y = y.reshape(B, 1, inner)
+    y = apply_norm("rmsnorm", {"scale": p["norm"]}, y * jax.nn.silu(z))
+    return y @ p["out_proj"], {"state": new_state, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (xLSTM matrix memory) — GLA core with a normaliser column
+# ---------------------------------------------------------------------------
+
+def mlstm_dims(cfg):
+    s = cfg.ssm
+    inner = s.expand * cfg.d_model
+    H = cfg.num_heads
+    dv = inner // H
+    dk = max(8, int(dv * s.mlstm_qk_dim_factor))
+    return inner, H, dk, dv
+
+
+def mlstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    inner, H, dk, dv = mlstm_dims(cfg)
+    ks = split_dict(key, ["up", "q", "k", "v", "gates", "out", "norm"])
+    return {
+        "up": dense_init(ks["up"], d, 2 * inner, dtype),       # x path + gate z
+        "wq": dense_init(ks["q"], inner, H * dk, dtype),
+        "wk": dense_init(ks["k"], inner, H * dk, dtype),
+        "wv": dense_init(ks["v"], inner, H * dv, dtype),
+        "w_gates": dense_init(ks["gates"], inner, 2 * H, dtype),  # i, f logits
+        "gate_bias": jnp.concatenate([jnp.zeros((H,)), 3.0 * jnp.ones((H,))]).astype(jnp.float32),
+        "norm": jnp.ones((inner,), dtype),
+        "down": dense_init(ks["out"], inner, d, dtype),
+    }
+
+
+def _mlstm_qkvg(p, cfg, x):
+    inner, H, dk, dv = mlstm_dims(cfg)
+    B, S, _ = x.shape
+    up = x @ p["up"]
+    xin, z = up[..., :inner], up[..., inner:]
+    q = (xin @ p["wq"]).reshape(B, S, H, dk) / math.sqrt(dk)
+    k = (xin @ p["wk"]).reshape(B, S, H, dk) / math.sqrt(dk)
+    v = (xin @ p["wv"]).reshape(B, S, H, dv)
+    gl = (xin @ p["w_gates"]).astype(jnp.float32) + p["gate_bias"]
+    i_g = jax.nn.sigmoid(gl[..., :H])                         # input gate
+    log_f = jax.nn.log_sigmoid(gl[..., H:])                   # forget (log)
+    return q, k, v, i_g, log_f, z, (inner, H, dk, dv)
+
+
+def _mlstm_readout(p, y_aug, z, inner):
+    # y_aug: [...,H,dv+1]: matrix-memory readout + normaliser column
+    num = y_aug[..., :-1]
+    den = jnp.maximum(jnp.abs(y_aug[..., -1:]), 1.0)
+    y = (num / den).reshape(z.shape[:-1] + (inner,))
+    y = apply_norm("rmsnorm", {"scale": p["norm"]}, y) * jax.nn.silu(z)
+    return y @ p["down"]
+
+
+def mlstm_apply(p, cfg, x, state=None):
+    s = cfg.ssm
+    q, k, v, i_g, log_f, z, (inner, H, dk, dv) = _mlstm_qkvg(p, cfg, x)
+    v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+    k_in = k * i_g[..., None].astype(k.dtype)
+    y_aug, _ = chunked_gla(q, k_in, v_aug, log_f, state=state, chunk=s.chunk)
+    return _mlstm_readout(p, y_aug, z, inner)
+
+
+def mlstm_cache_init(cfg, batch: int):
+    inner, H, dk, dv = mlstm_dims(cfg)
+    return {"state": jnp.zeros((batch, H, dk, dv + 1), jnp.float32)}
+
+
+def mlstm_decode(p, cfg, x, cache):
+    q, k, v, i_g, log_f, z, (inner, H, dk, dv) = _mlstm_qkvg(p, cfg, x)
+    v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
+    k_in = k * i_g[..., None].astype(k.dtype)
+    y_aug, st = gla_decode_step(q[:, 0], k_in[:, 0], v_aug[:, 0],
+                                log_f[:, 0], cache["state"])
+    y = _mlstm_readout(p, y_aug[:, None], z, inner)
+    return y, {"state": st}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (scalar memory, true recurrence -> lax.scan over time)
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg, dtype):
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    ks = split_dict(key, ["w", "r", "up", "down", "norm"])
+    dff = -(-4 * d // 3)
+    return {
+        "w": dense_init(ks["w"], d, 4 * d, dtype),            # z,i,f,o from x
+        "r": (0.1 * jax.random.normal(ks["r"], (4, H, hd, hd), jnp.float32)).astype(dtype),
+        "b": jnp.zeros((4 * d,), jnp.float32),
+        "norm": jnp.ones((d,), dtype),
+        "up1": dense_init(ks["up"], d, dff, dtype),
+        "up2": dense_init(ks["down"], d, dff, dtype),
+        "down": dense_init(ks["norm"], dff, d, dtype),
+    }
+
+
+def _slstm_cell(p, cfg, xt, h, c, n, m):
+    """One sLSTM step. xt: [B,d]; h,c,n: [B,H,hd]; m: [B,H,hd] stabiliser."""
+    d = cfg.d_model
+    H = cfg.num_heads
+    hd = d // H
+    B = xt.shape[0]
+    pre = (xt @ p["w"]).astype(jnp.float32) + p["b"]
+    pre = pre.reshape(B, 4, H, hd)
+    rec = jnp.einsum("bhd,ghde->bghe", h.astype(jnp.float32),
+                     p["r"].astype(jnp.float32))
+    pre = pre + rec
+    z = jnp.tanh(pre[:, 0])
+    log_i = pre[:, 1]                                          # exp input gate
+    log_f = jax.nn.log_sigmoid(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_s = jnp.exp(log_i - m_new)
+    f_s = jnp.exp(log_f + m - m_new)
+    c_new = f_s * c + i_s * z
+    n_new = f_s * n + i_s
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return h_new, c_new, n_new, m_new
+
+
+def slstm_apply(p, cfg, x, cache=None):
+    B, S, d = x.shape
+    H = cfg.num_heads
+    hd = d // H
+    if cache is None:
+        h = jnp.zeros((B, H, hd), jnp.float32)
+        c = jnp.zeros((B, H, hd), jnp.float32)
+        n = jnp.zeros((B, H, hd), jnp.float32)
+        m = jnp.full((B, H, hd), -1e30, jnp.float32)
+    else:
+        h, c, n, m = cache["h"], cache["c"], cache["n"], cache["m"]
+
+    def step(carry, xt):
+        h, c, n, m = carry
+        h, c, n, m = _slstm_cell(p, cfg, xt, h, c, n, m)
+        return (h, c, n, m), h
+
+    (h, c, n, m), hs = jax.lax.scan(step, (h, c, n, m),
+                                    jnp.moveaxis(x, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(x.dtype)
+    y = apply_norm("rmsnorm", {"scale": p["norm"]}, y)
+    # GEGLU up/down projection
+    u = jax.nn.gelu(y @ p["up1"]) * (y @ p["up2"])
+    out = u @ p["down"]
+    new_cache = {"h": h, "c": c, "n": n, "m": m}
+    return out, new_cache
+
+
+def slstm_cache_init(cfg, batch: int):
+    H = cfg.num_heads
+    hd = cfg.d_model // H
+    z = jnp.zeros((batch, H, hd), jnp.float32)
+    return {"h": z, "c": z, "n": z, "m": jnp.full((batch, H, hd), -1e30, jnp.float32)}

@@ -1,0 +1,5 @@
+from repro.optim.optimizers import (Optimizer, adamw, sgd_momentum)
+from repro.optim.schedules import (constant, cosine_warmup, step_drops)
+
+__all__ = ["Optimizer", "adamw", "sgd_momentum", "constant", "cosine_warmup",
+           "step_drops"]

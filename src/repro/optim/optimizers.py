@@ -1,0 +1,82 @@
+"""Minimal functional optimizers (no external deps).
+
+Interface:
+    opt = sgd_momentum(momentum=0.9, weight_decay=1e-4)
+    state = opt.init(params)
+    new_params, new_state = opt.update(grads, state, params, lr)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree, Any], tuple]
+
+
+def sgd_momentum(momentum: float = 0.9, weight_decay: float = 0.0,
+                 state_dtype=jnp.float32) -> Optimizer:
+    """The paper's optimizer (SGD + momentum + decoupled weight decay)."""
+
+    def init(params):
+        return {"mom": jax.tree.map(
+            lambda p: jnp.zeros(p.shape, state_dtype), params)}
+
+    def update(grads, state, params, lr):
+        def upd(g, m, p):
+            gf = g.astype(state_dtype)
+            if weight_decay:
+                gf = gf + weight_decay * p.astype(state_dtype)
+            m_new = momentum * m + gf
+            p_new = p.astype(jnp.float32) - lr * m_new.astype(jnp.float32)
+            return p_new.astype(p.dtype), m_new
+
+        flat = jax.tree.map(upd, grads, state["mom"], params)
+        new_params = jax.tree.map(lambda t: t[0], flat,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+        new_mom = jax.tree.map(lambda t: t[1], flat,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"mom": new_mom}
+
+    return Optimizer(init, update)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, state_dtype=jnp.float32) -> Optimizer:
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, state_dtype)
+        return {"m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        c1 = 1.0 - b1 ** t.astype(jnp.float32)
+        c2 = 1.0 - b2 ** t.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            gf = g.astype(state_dtype)
+            m_new = b1 * m + (1 - b1) * gf
+            v_new = b2 * v + (1 - b2) * gf * gf
+            mh = m_new.astype(jnp.float32) / c1
+            vh = v_new.astype(jnp.float32) / c2
+            step = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m_new, v_new
+
+        flat = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        pick = lambda i: jax.tree.map(lambda t_: t_[i], flat,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2), "t": t}
+
+    return Optimizer(init, update)

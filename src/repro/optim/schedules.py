@@ -1,0 +1,29 @@
+"""Learning-rate schedules (paper uses step drops at fixed epochs)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def step_drops(base_lr: float, boundaries, factor: float):
+    """Paper protocol: lr dropped by ``factor`` at each boundary step."""
+    bs = jnp.asarray(boundaries)
+
+    def fn(step):
+        k = jnp.sum(step >= bs)
+        return jnp.float32(base_lr) * (factor ** k.astype(jnp.float32))
+    return fn
+
+
+def cosine_warmup(base_lr: float, warmup: int, total: int,
+                  final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+        warm = base_lr * jnp.minimum(1.0, s / max(1, warmup))
+        prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, base_lr * cos)
+    return fn

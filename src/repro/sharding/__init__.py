@@ -1,0 +1,6 @@
+from repro.sharding.specs import (batch_pspec, batch_sharding, cache_pspecs,
+                                  param_pspecs, param_shardings,
+                                  state_shardings)
+
+__all__ = ["batch_pspec", "batch_sharding", "cache_pspecs", "param_pspecs",
+           "param_shardings", "state_shardings"]

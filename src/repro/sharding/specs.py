@@ -1,0 +1,196 @@
+"""Logical-axis sharding rules: param/batch/cache PartitionSpecs per arch.
+
+Tensor parallelism over the ``model`` mesh axis by naming convention on the
+parameter tree paths; data parallelism over ``data`` (+ ``pod``). Optional
+ZeRO-style parameter sharding (``zero_axis``) additionally shards the
+*other* matrix dim of large 2D weights over a data axis — GSPMD then inserts
+the per-layer all-gathers of ZeRO-3/FSDP automatically (the baseline the
+paper's ZeRO-CDP variant improves on; see repro.core.zero for the cyclic
+point-to-point version).
+
+All rules degrade to replication when a dim is not divisible by the axis
+size, so every (arch x mesh) combination lowers.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+PyTree = Any
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for a in axis:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[axis]
+
+
+def _div(dim: int, n: int) -> bool:
+    return n > 0 and dim % n == 0
+
+
+def _spec_for_leaf(path_names, leaf, mesh, model_axis, zero_axis) -> P:
+    """Choose a PartitionSpec for one parameter leaf."""
+    msz = _axis_size(mesh, model_axis)
+    zsz = _axis_size(mesh, zero_axis)
+    name = path_names[-1] if path_names else ""
+    shape = leaf.shape
+
+    def ok(i, n=msz):
+        return i < len(shape) and _div(shape[i], n)
+
+    last = len(shape) - 1
+
+    # --- embeddings / heads -------------------------------------------------
+    if name == "embed":
+        spec = [None, None]
+        if _div(shape[0], msz):
+            spec[0] = model_axis
+        if zero_axis and _div(shape[1], zsz):
+            spec[1] = zero_axis
+        return P(*spec)
+    if name in ("lm_head", "frontend_proj"):
+        spec = [None, None]
+        if _div(shape[1], msz):
+            spec[1] = model_axis
+        if zero_axis and _div(shape[0], zsz):
+            spec[0] = zero_axis
+        return P(*spec)
+
+    # --- norms / small vectors ---------------------------------------------
+    if leaf.ndim <= 1 or name in ("scale", "bias", "A_log", "D", "dt_bias",
+                                  "gate_bias", "norm", "b", "conv_b",
+                                  "q_norm", "kv_norm"):
+        return P(*([None] * leaf.ndim))
+
+    # --- MoE expert banks [L, E, din, dout] ---------------------------------
+    if name in ("w1", "w3", "w2") and leaf.ndim == 4:
+        L, E, di, do = shape
+        if _div(E, msz):
+            spec = [None, model_axis, None, None]
+            if zero_axis and _div(do if name != "w2" else di, zsz):
+                if name != "w2":
+                    spec[3] = zero_axis
+                else:
+                    spec[2] = zero_axis
+            return P(*spec)
+        if name != "w2" and _div(do, msz):
+            return P(None, None, None, model_axis)
+        if name == "w2" and _div(di, msz):
+            return P(None, None, model_axis, None)
+        return P(None, None, None, None)
+    if name == "router":
+        return P(*([None] * leaf.ndim))
+
+    # --- generic stacked / unstacked matrices -------------------------------
+    # Convention: "column-parallel" (out-dim sharded) for input projections,
+    # "row-parallel" (in-dim sharded) for output projections.
+    row_parallel = name in ("wo", "w2", "down", "out_proj")
+    mat_dims = (last - 1, last)
+
+    spec = [None] * leaf.ndim
+    if row_parallel:
+        if _div(shape[mat_dims[0]], msz):
+            spec[mat_dims[0]] = model_axis
+        if zero_axis and _div(shape[mat_dims[1]], zsz):
+            spec[mat_dims[1]] = zero_axis
+    else:
+        if _div(shape[mat_dims[1]], msz):
+            spec[mat_dims[1]] = model_axis
+        if zero_axis and _div(shape[mat_dims[0]], zsz):
+            spec[mat_dims[0]] = zero_axis
+    return P(*spec)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        n = getattr(k, "key", None)
+        if isinstance(n, str):
+            names.append(n)
+    return tuple(names)
+
+
+def param_pspecs(params: PyTree, mesh, model_axis="model",
+                 zero_axis=None) -> PyTree:
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: _spec_for_leaf(_path_names(p), l, mesh, model_axis,
+                                    zero_axis), params)
+
+
+def param_shardings(params: PyTree, mesh, model_axis="model",
+                    zero_axis=None) -> PyTree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(params, mesh, model_axis, zero_axis))
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache
+# ---------------------------------------------------------------------------
+
+def batch_pspec(mesh, data_axes=("data",)) -> P:
+    """Leading (batch) dim sharded over the data axes (incl. pod if present)."""
+    axes = tuple(a for a in data_axes if a in mesh.shape)
+    return P(axes if len(axes) > 1 else axes[0])
+
+
+def batch_sharding(batch: PyTree, mesh, data_axes=("data",)) -> PyTree:
+    spec = batch_pspec(mesh, data_axes)
+
+    def shard_one(x):
+        if x.ndim == 0:
+            return NamedSharding(mesh, P())
+        n = _axis_size(mesh, spec[0]) if spec else 1
+        if x.shape[0] % max(n, 1) == 0:
+            return NamedSharding(mesh, P(*(spec + (None,) * (x.ndim - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(shard_one, batch)
+
+
+def cache_pspecs(cache: PyTree, mesh, data_axes=("data",),
+                 model_axis="model", batch: Optional[int] = None) -> PyTree:
+    """KV/state caches: shard the batch dim over data. Caches may be stacked
+    once ([L, B, ...]) or twice ([P, per, B, ...] for the periodic SSM /
+    hybrid stacks). When ``batch`` is given, only a dim equal to it is
+    eligible (a stacked layer dim that happens to divide the axis must NOT be
+    data-sharded — every device needs every layer's cache)."""
+    daxes = tuple(a for a in data_axes if a in mesh.shape)
+    dsz = _axis_size(mesh, daxes)
+
+    def spec_one(x):
+        spec = [None] * x.ndim
+        ax = tuple(daxes) if len(daxes) > 1 else daxes[0]
+        for i in range(min(3, x.ndim)):
+            if batch is not None and x.shape[i] != batch:
+                continue
+            if _div(x.shape[i], dsz):
+                spec[i] = ax
+                break
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(spec_one, cache)
+
+
+def state_shardings(state: PyTree, params_sh: PyTree) -> PyTree:
+    """Optimizer state mirrors the parameter shardings; scalars replicated.
+
+    Works for the optimizers in repro.optim: keys "mom"/"m"/"v" are
+    params-shaped trees; anything else (e.g. "t") is a replicated scalar.
+    """
+    mesh = jax.tree.leaves(params_sh)[0].mesh
+    out = {}
+    for k, v in state.items():
+        if k in ("mom", "m", "v"):
+            out[k] = params_sh
+        else:
+            out[k] = NamedSharding(mesh, P())
+    return out

@@ -1,0 +1,30 @@
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_with_devices(code: str, n_devices: int = 8, timeout: int = 600):
+    """Run a python snippet in a subprocess with N forced host devices.
+
+    Multi-device tests use this so the main pytest process keeps the default
+    single CPU device (the dry-run flag must never be set globally).
+    """
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=timeout, env=env)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed:\nSTDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr}")
+    return res.stdout
+
+
+@pytest.fixture(scope="session")
+def subproc():
+    return run_with_devices

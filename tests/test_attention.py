@@ -1,0 +1,136 @@
+"""Model-level attention: blockwise flash VJP vs naive, MLA decode
+consistency, rotary properties."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_reduced
+from repro.models import attention as A
+from repro.models.layers import apply_rope
+
+
+def naive(q, k, v, causal=True, window=0):
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qr = q.reshape(B, Sq, KV, G, dh)
+    s = jnp.einsum("bsjgd,btjd->bsgjt", qr, k) / math.sqrt(dh)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(Sk)[None, :]
+    m = jnp.ones((Sq, Sk), bool)
+    if causal:
+        m &= kp <= qp
+    if window:
+        m &= kp > qp - window
+    s = jnp.where(m[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, -1)
+    o = jnp.einsum("bsgjt,btjd->bsjgd", p, v)
+    return o.reshape(B, Sq, H, -1)
+
+
+@pytest.mark.parametrize("case", [
+    (2, 16, 16, 4, 2, 8, True, 0, 8),
+    (1, 32, 32, 4, 4, 16, True, 5, 8),
+    (2, 8, 24, 6, 2, 8, False, 0, 16),
+    (2, 64, 64, 8, 2, 16, True, 17, 16),
+])
+def test_blockwise_fwd_bwd_vs_naive(case):
+    B, Sq, Sk, H, KV, dh, causal, window, blk = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, dh))
+    k = jax.random.normal(ks[1], (B, Sk, KV, dh))
+    v = jax.random.normal(ks[2], (B, Sk, KV, dh))
+
+    def f1(q, k, v):
+        return jnp.sum(jnp.sin(A.blockwise_attention(
+            q, k, v, causal=causal, window=window, block=blk)))
+
+    def f2(q, k, v):
+        return jnp.sum(jnp.sin(naive(q, k, v, causal, window)))
+
+    np.testing.assert_allclose(float(f1(q, k, v)), float(f2(q, k, v)),
+                               rtol=1e-5)
+    g1 = jax.grad(f1, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(f2, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_mla_decode_matches_prefill():
+    """Absorbed-matmul MLA decode must agree with the materialised prefill."""
+    cfg = get_reduced("deepseek-v3-671b")
+    key = jax.random.PRNGKey(0)
+    p = A.mla_init(key, cfg, jnp.float32)
+    B, S = 1, 8
+    x = 0.1 * jax.random.normal(key, (B, S, cfg.d_model))
+    full = A.mla_apply(p, cfg, x, jnp.arange(S))
+
+    cache = A.mla_cache_init(cfg, B, S + 2, jnp.float32)
+    outs = []
+    for i in range(S):
+        o, cache = A.mla_decode(p, cfg, x[:, i:i + 1], cache)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_gqa_decode_matches_full():
+    cfg = get_reduced("qwen2.5-14b")
+    key = jax.random.PRNGKey(0)
+    p = A.gqa_init(key, cfg, jnp.float32)
+    B, S = 2, 10
+    x = 0.1 * jax.random.normal(key, (B, S, cfg.d_model))
+    full = A.gqa_apply(p, cfg, x, jnp.arange(S), causal=True)
+    cache = A.gqa_cache_init(cfg, B, S + 2, jnp.float32)
+    outs = []
+    for i in range(S):
+        o, cache = A.gqa_decode(p, cfg, x[:, i:i + 1], cache)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_sliding_window_decode_ring_buffer():
+    """With window < cache len, the ring buffer must agree with full-cache
+    attention restricted to the window."""
+    cfg = get_reduced("mixtral-8x22b").with_(moe=None, attn_window=4)
+    key = jax.random.PRNGKey(0)
+    p = A.gqa_init(key, cfg, jnp.float32)
+    B, S = 1, 12
+    x = 0.1 * jax.random.normal(key, (B, S, cfg.d_model))
+    full = A.gqa_apply(p, cfg, x, jnp.arange(S), causal=True)   # windowed
+    cache = A.gqa_cache_init(cfg, B, S, jnp.float32)            # T = window
+    assert cache["k"].shape[1] == 4
+    outs = []
+    for i in range(S):
+        o, cache = A.gqa_decode(p, cfg, x[:, i:i + 1], cache)
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_rope_relative_property():
+    """Rotary dot products depend only on relative positions."""
+    dh, H = 16, 1
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 1, H, dh))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, H, dh))
+    def dot_at(pq, pk):
+        qr = apply_rope(q, jnp.array([[pq]]), 10000.0)
+        kr = apply_rope(k, jnp.array([[pk]]), 10000.0)
+        return float(jnp.sum(qr * kr))
+    assert dot_at(3, 1) == pytest.approx(dot_at(12, 10), rel=1e-4)
+    assert dot_at(5, 0) != pytest.approx(dot_at(6, 0), rel=1e-4)
+
+
+def test_partial_rope_keeps_tail_channels():
+    x = jnp.ones((1, 4, 2, 16))
+    y = apply_rope(x, jnp.arange(4)[None], 10000.0, rotary_fraction=0.5)
+    np.testing.assert_allclose(np.asarray(y[..., 8:]), 1.0)
+    assert not np.allclose(np.asarray(y[..., :8]), 1.0)

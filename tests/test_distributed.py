@@ -1,0 +1,253 @@
+"""Multi-device SPMD tests (run in subprocesses with 8 forced host devices so
+the main pytest process keeps a single CPU device)."""
+import pytest
+
+
+def test_ring_all_reduce_equals_pmean(subproc):
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core.grad_sync import ring_all_reduce, ring_all_reduce_vec, psum_all_reduce, reduce_scatter_ring
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+n = 4
+tree = {"a": jnp.arange(24.0).reshape(4, 6), "b": jnp.ones((5,)), "w": jnp.arange(32.0).reshape(8, 4)}
+pspecs = {"a": P(), "b": P(), "w": P(None, "model")}
+
+def f(x):
+    i = jax.lax.axis_index("data")
+    local = jax.tree.map(lambda t: t * (i + 1).astype(t.dtype), x)
+    ring = ring_all_reduce(local, "data", n, pspecs)
+    ps = psum_all_reduce(local, "data")
+    return ring, ps
+
+g = jax.shard_map(f, mesh=mesh, in_specs=(jax.tree.map(lambda _: P(), tree),),
+                  out_specs=(jax.tree.map(lambda _: P(), tree),)*2,
+                  axis_names={"data"}, check_vma=False)
+ring, ps = jax.jit(g)(tree)
+for k in tree:
+    np.testing.assert_allclose(np.asarray(ring[k]), np.asarray(ps[k]), rtol=1e-6)
+# vec version
+def fv(v):
+    i = jax.lax.axis_index("data")
+    return ring_all_reduce_vec(v * (i + 1).astype(v.dtype), "data", n)
+gv = jax.shard_map(fv, mesh=mesh, in_specs=(P(),), out_specs=P(), axis_names={"data"}, check_vma=False)
+v = jnp.arange(37.0)
+np.testing.assert_allclose(np.asarray(jax.jit(gv)(v)), np.asarray(v) * 10, rtol=1e-6)
+print("RING OK")
+""")
+
+
+def test_trainer_rules_semantics_on_mesh(subproc):
+    """CDP-v1 must equal manual delayed-SGD; DP must equal plain SGD; v2 must
+    sit between. Verified against the single-process delay simulator."""
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_reduced
+from repro.core.trainer import TrainerConfig, init_state, jit_train_step
+from repro.core.delay_sim import make_sim_step, init_sim_state
+from repro.models import init_params, loss_fn as model_loss
+from repro.models.model import param_stage_ids
+from repro.optim import sgd_momentum
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = get_reduced("stablelm-1.6b")
+key = jax.random.PRNGKey(0)
+params = init_params(cfg, key)
+opt = sgd_momentum(0.9)
+B, S = 8, 16
+batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+         "targets": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+steps = 3
+for rule in ("dp", "cdp_v1", "cdp_v2"):
+    tr = TrainerConfig(rule=rule, lr_schedule=lambda s: 0.05, donate=False)
+    state = init_state(cfg, tr, params, opt)
+    jitted, ssh, bsh = jit_train_step(cfg, tr, mesh, opt, state, batch)
+    for _ in range(steps):
+        state, met = jitted(state, batch)
+    # reference: delay simulator with the same stage partition (n = 4 = data axis)
+    ids = param_stage_ids(cfg, params, 4)
+    sim = make_sim_step(lambda p, mb: model_loss(cfg, p, mb)[0], ids, rule, 4, opt, lambda s: 0.05)
+    sstate = init_sim_state(params, rule, opt)
+    mb = {k: v.reshape(4, 2, S) for k, v in batch.items()}
+    for _ in range(steps):
+        sstate, _ = sim(sstate, mb)
+    for a, b in zip(jax.tree.leaves(state["params"]), jax.tree.leaves(sstate["params"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32), np.asarray(b, np.float32), atol=5e-4, rtol=5e-3)
+    print(rule, "MATCHES SIMULATOR")
+""", timeout=1200)
+
+
+def test_cdp_loss_decreases_all_rules(subproc):
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_reduced
+from repro.core.trainer import TrainerConfig, init_state, jit_train_step
+from repro.data import make_lm_data, lm_batch_iterator
+from repro.models import init_params
+from repro.optim import sgd_momentum
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = get_reduced("qwen2.5-14b")
+params = init_params(cfg, jax.random.PRNGKey(0))
+opt = sgd_momentum(0.9)
+toks = make_lm_data(cfg.vocab_size, 50_000)
+it = lm_batch_iterator(toks, 8, 32)
+b0 = {k: jnp.asarray(v) for k, v in next(it).items()}
+for rule in ("dp", "cdp_v1", "cdp_v2"):
+    tr = TrainerConfig(rule=rule, lr_schedule=lambda s: 0.1, donate=False)
+    state = init_state(cfg, tr, params, opt)
+    jitted, _, _ = jit_train_step(cfg, tr, mesh, opt, state, b0)
+    losses = []
+    for i in range(25):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        state, met = jitted(state, batch)
+        losses.append(float(met["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, (rule, losses)
+    print(rule, f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+""", timeout=1200)
+
+
+def test_zero_cdp_streaming_equals_baseline(subproc):
+    """ZeRO-CDP parameter streaming (ppermute ring) == ZeRO-DP all-gather ==
+    local sequential execution."""
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core.zero import zero_cdp_apply, zero_dp_apply, roll_stage_params
+n = 8
+mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+key = jax.random.PRNGKey(0)
+d = 16
+stages = {"w": 0.3 * jax.random.normal(key, (n, d, d)),
+          "b": 0.1 * jax.random.normal(jax.random.PRNGKey(1), (n, d))}
+
+def stage_fn(p, x):
+    return jnp.tanh(x @ p["w"] + p["b"])
+
+x = jax.random.normal(jax.random.PRNGKey(2), (n, 4, d))  # one microbatch/rank
+
+# local reference
+def local_ref(x1):
+    for j in range(n):
+        x1 = stage_fn({"w": stages["w"][j], "b": stages["b"][j]}, x1)
+    return x1
+ref = jax.vmap(local_ref)(x)
+
+rolled = roll_stage_params(stages, n)
+def run_cdp(rolled_shard, xs):
+    my_params = jax.tree.map(lambda t: t[0], rolled_shard)  # drop shard dim
+    return zero_cdp_apply(stage_fn, my_params, xs[0], "data", n)[None]
+f = jax.shard_map(run_cdp, mesh=mesh,
+                  in_specs=(jax.tree.map(lambda _: P("data"), stages), P("data")),
+                  out_specs=P("data"), axis_names={"data"}, check_vma=False)
+out_cdp = jax.jit(f)(rolled, x)
+np.testing.assert_allclose(np.asarray(out_cdp), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+def run_dp(rolled_shard, xs):
+    return zero_dp_apply(stage_fn, jax.tree.map(lambda t: t[0], rolled_shard), xs[0], "data", n)[None]
+fd = jax.shard_map(run_dp, mesh=mesh,
+                  in_specs=(jax.tree.map(lambda _: P("data"), stages), P("data")),
+                  out_specs=P("data"), axis_names={"data"}, check_vma=False)
+out_dp = jax.jit(fd)(rolled, x)
+np.testing.assert_allclose(np.asarray(out_dp), np.asarray(ref), rtol=2e-5, atol=2e-5)
+
+# grads flow through the ppermute chain
+def loss_cdp(rolled, x):
+    y = jax.jit(f)(rolled, x)
+    return jnp.sum(y ** 2)
+g = jax.grad(loss_cdp)(rolled, x)
+assert all(np.isfinite(np.asarray(t)).all() for t in jax.tree.leaves(g))
+assert float(jnp.abs(g["w"]).max()) > 0
+print("ZERO-CDP OK")
+""", timeout=900)
+
+
+def test_collectives_in_hlo_match_paper_claims(subproc):
+    """CDP ring lowers to collective-permute (point-to-point), DP lowers to a
+    single all-reduce burst — the paper's Table 1 communication claim, read
+    off the compiled HLO."""
+    subproc("""
+import jax, jax.numpy as jnp, re
+from repro.configs import get_reduced
+from repro.core.trainer import TrainerConfig, init_state, jit_train_step
+from repro.models import init_params
+from repro.optim import sgd_momentum
+from repro.launch.roofline import parse_collectives
+mesh = jax.make_mesh((4, 2), ("data", "model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+cfg = get_reduced("stablelm-1.6b")
+params = init_params(cfg, jax.random.PRNGKey(0))
+opt = sgd_momentum(0.9)
+batch = {"tokens": jnp.zeros((8, 16), jnp.int32), "targets": jnp.zeros((8, 16), jnp.int32)}
+stats = {}
+for rule in ("dp", "cdp_v2"):
+    tr = TrainerConfig(rule=rule, lr_schedule=lambda s: 0.05, donate=False)
+    state = init_state(cfg, tr, params, opt)
+    jitted, ssh, bsh = jit_train_step(cfg, tr, mesh, opt, state, batch)
+    comp = jitted.lower(state, batch).compile()
+    stats[rule] = parse_collectives(comp.as_text())
+print({k: (v.op_counts, v.max_single_op_bytes) for k, v in stats.items()})
+assert stats["cdp_v2"].op_counts["collective-permute"] > 0
+# the ring breaks the big burst into chunks: max single collective smaller
+assert stats["cdp_v2"].max_single_op_bytes < stats["dp"].max_single_op_bytes
+print("HLO CLAIMS OK")
+""", timeout=1200)
+
+
+def test_zero1_ring_matches_baseline(subproc):
+    """ZeRO-1-on-the-ring (reduce-scatter + data-sharded optimizer state +
+    param all-gather) must be numerically identical to the full ring."""
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+mesh = jax.make_mesh((4,2), ("data","model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.configs import get_reduced
+from repro.core.trainer import TrainerConfig, init_state, jit_train_step
+from repro.optim import sgd_momentum
+import repro.models as M
+cfg = get_reduced("qwen2.5-14b")
+key = jax.random.PRNGKey(0)
+params = M.init_params(cfg, key)
+opt = sgd_momentum(0.9)
+batch = {"tokens": jax.random.randint(key,(8,32),0,cfg.vocab_size),
+         "targets": jax.random.randint(key,(8,32),0,cfg.vocab_size)}
+res = {}
+for tag, kw in [("base", {}), ("zero1", dict(zero1_ring=True)),
+                ("seqpar", dict(seq_parallel=True))]:
+    tr = TrainerConfig(rule="cdp_v2", lr_schedule=lambda s: 0.1, donate=False, **kw)
+    state = init_state(cfg, tr, params, opt)
+    jt, ssh, bsh = jit_train_step(cfg, tr, mesh, opt, state, batch)
+    for _ in range(3):
+        state, met = jt(state, batch)
+    res[tag] = np.concatenate([np.asarray(l).ravel()[:50]
+                               for l in jax.tree.leaves(state["params"])][:5])
+for tag in ("zero1", "seqpar"):
+    assert float(np.max(np.abs(res[tag]-res["base"]))) < 5e-4, tag
+print("ZERO1/SEQPAR OK")
+""", timeout=1200)
+
+
+def test_cdp_random_rule_trains(subproc):
+    """Beyond-paper randomized u_{i,j} (the paper's stated future work)
+    trains on par with cdp_v2 and keeps delay <= 1."""
+    subproc("""
+import jax, jax.numpy as jnp, numpy as np
+mesh = jax.make_mesh((4,2), ("data","model"), axis_types=(jax.sharding.AxisType.Auto,)*2)
+from repro.configs import get_reduced
+from repro.core.trainer import TrainerConfig, init_state, jit_train_step
+from repro.data import make_lm_data, lm_batch_iterator
+from repro.optim import sgd_momentum
+import repro.models as M
+cfg = get_reduced("qwen2.5-14b")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+opt = sgd_momentum(0.9)
+it = lm_batch_iterator(make_lm_data(cfg.vocab_size, 50000), 8, 32)
+b0 = {k: jnp.asarray(v) for k, v in next(it).items()}
+tr = TrainerConfig(rule="cdp_random", lr_schedule=lambda s: 0.1, donate=False,
+                   grad_clip=1.0)
+state = init_state(cfg, tr, params, opt)
+jt, _, _ = jit_train_step(cfg, tr, mesh, opt, state, b0)
+losses = []
+for i in range(25):
+    b = {k: jnp.asarray(v) for k, v in next(it).items()}
+    state, met = jt(state, b)
+    losses.append(float(met["loss"]))
+assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.3, losses
+print("cdp_random", losses[0], "->", losses[-1])
+""", timeout=1200)

@@ -1,0 +1,141 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True on CPU): shape/dtype
+sweeps + hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _mk(key, shape, dt):
+    return jax.random.normal(key, shape, dt)
+
+
+FLASH_CASES = [
+    # B, Sq, Sk, H, KV, dh, causal, window, bq, bk, dtype
+    (2, 128, 128, 4, 2, 32, True, 0, 64, 64, jnp.float32),
+    (1, 100, 100, 4, 4, 16, True, 0, 32, 32, jnp.float32),
+    (2, 64, 64, 8, 2, 64, True, 30, 32, 32, jnp.bfloat16),
+    (1, 128, 128, 2, 1, 32, False, 0, 64, 64, jnp.float32),
+    (1, 96, 160, 4, 1, 16, False, 0, 32, 64, jnp.float32),
+    (2, 128, 128, 4, 2, 32, True, 64, 128, 128, jnp.float32),
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES)
+def test_flash_attention_vs_ref(case):
+    B, Sq, Sk, H, KV, dh, causal, window, bq, bk, dt = case
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = _mk(ks[0], (B, Sq, H, dh), dt)
+    k = _mk(ks[1], (B, Sk, KV, dh), dt)
+    v = _mk(ks[2], (B, Sk, KV, dh), dt)
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              bq=bq, bk=bk, interpret=True)
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, dh)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * KV, Sk, dh)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * KV, Sk, dh)
+    r = ref.flash_attention_ref(qh, kh, vh, causal=causal, window=window,
+                                group=H // KV)
+    r = jnp.moveaxis(r.reshape(B, H, Sq, dh), 1, 2)
+    tol = 2e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+DECODE_CASES = [
+    (2, 256, 4, 2, 32, 128, jnp.float32),
+    (1, 100, 8, 8, 16, 64, jnp.float32),
+    (4, 512, 8, 4, 64, 256, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", DECODE_CASES)
+def test_decode_attention_vs_ref(case):
+    B, T, H, KV, dh, bk, dt = case
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = _mk(ks[0], (B, 1, H, dh), dt)
+    k = _mk(ks[1], (B, T, KV, dh), dt)
+    v = _mk(ks[2], (B, T, KV, dh), dt)
+    cl = jnp.asarray(np.random.default_rng(0).integers(1, T, B), jnp.int32)
+    out = ops.decode_attention(q, k, v, cl, bk=bk, interpret=True)
+    qh = q[:, 0].reshape(B * H, dh)
+    kh = jnp.moveaxis(k, 2, 1).reshape(B * KV, T, dh)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * KV, T, dh)
+    r = ref.decode_attention_ref(qh, kh, vh, jnp.repeat(cl, KV),
+                                 group=H // KV).reshape(B, 1, H, dh)
+    tol = 3e-2 if dt == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+GLA_CASES = [
+    (2, 128, 2, 16, 32, 32, jnp.float32),
+    (1, 100, 4, 8, 8, 16, jnp.float32),
+    (1, 64, 2, 32, 64, 64, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", GLA_CASES)
+def test_gla_scan_vs_ref(case):
+    B, S, H, dk, dv, chunk, dt = case
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    q = _mk(ks[0], (B, S, H, dk), dt)
+    k = _mk(ks[1], (B, S, H, dk), dt) * 0.3
+    v = _mk(ks[2], (B, S, H, dv), dt)
+    g = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    y = ops.gla_scan(q, k, v, g.astype(dt) if dt != jnp.float32 else g,
+                     chunk=chunk, interpret=True)
+
+    def fold(x):
+        return jnp.moveaxis(x, 2, 1).reshape((B * H,) + x.shape[1:2] + x.shape[3:])
+    r = ref.gla_scan_ref(fold(q), fold(k), fold(v),
+                         jnp.moveaxis(g, 2, 1).reshape(B * H, S))
+    r = jnp.moveaxis(r.reshape(B, H, S, dv), 1, 2)
+    tol = 5e-2 if dt == jnp.bfloat16 else 5e-5
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 3), st.sampled_from([32, 48, 64]),
+       st.sampled_from([1, 2, 4]), st.booleans())
+def test_flash_property_random_shapes(b, s, kv, causal):
+    h = kv * 2
+    dh = 16
+    ks = jax.random.split(jax.random.PRNGKey(s + b), 3)
+    q = _mk(ks[0], (b, s, h, dh), jnp.float32)
+    k = _mk(ks[1], (b, s, kv, dh), jnp.float32)
+    v = _mk(ks[2], (b, s, kv, dh), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=causal, bq=16, bk=16,
+                              interpret=True)
+    qh = jnp.moveaxis(q, 2, 1).reshape(b * h, s, dh)
+    kh = jnp.moveaxis(k, 2, 1).reshape(b * kv, s, dh)
+    vh = jnp.moveaxis(v, 2, 1).reshape(b * kv, s, dh)
+    r = ref.flash_attention_ref(qh, kh, vh, causal=causal, group=h // kv)
+    r = jnp.moveaxis(r.reshape(b, h, s, dh), 1, 2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(r), atol=2e-5,
+                               rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 2), st.sampled_from([33, 64, 80]),
+       st.sampled_from([8, 16]))
+def test_gla_property_random_shapes(b, s, chunk):
+    h, dk, dv = 2, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(s), 4)
+    q = _mk(ks[0], (b, s, h, dk), jnp.float32)
+    k = _mk(ks[1], (b, s, h, dk), jnp.float32) * 0.3
+    v = _mk(ks[2], (b, s, h, dv), jnp.float32)
+    g = -jax.nn.softplus(jax.random.normal(ks[3], (b, s, h)))
+    y = ops.gla_scan(q, k, v, g, chunk=chunk, interpret=True)
+
+    def fold(x):
+        return jnp.moveaxis(x, 2, 1).reshape((b * h, s) + x.shape[3:])
+    r = ref.gla_scan_ref(fold(q), fold(k), fold(v),
+                         jnp.moveaxis(g, 2, 1).reshape(b * h, s))
+    r = jnp.moveaxis(r.reshape(b, h, s, dv), 1, 2)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(r), atol=5e-5,
+                               rtol=5e-5)

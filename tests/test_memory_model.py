@@ -1,0 +1,51 @@
+"""Fig. 4 reproduction: analytic activation-memory of DP vs CDP."""
+import numpy as np
+import pytest
+
+from repro.configs.paper_models import resnet50_profile, vit_b16_profile
+from repro.core import memory_model as M
+
+
+def test_partition_equal_flops():
+    prof = vit_b16_profile()
+    stages = M.partition_stages(prof, 4)
+    flops = np.array([f for (_, _, f) in prof], float)
+    per = np.array([flops[idx].sum() for idx in stages])
+    assert per.min() > 0.5 * per.mean()
+    assert per.max() < 1.5 * per.mean()
+    # stages are contiguous and cover everything
+    flat = [i for st in stages for i in st]
+    assert flat == sorted(flat) and len(flat) == len(prof)
+
+
+def test_vit_reduction_near_half():
+    """Paper: ViT-B/16 reaches ~42% per-worker peak reduction (homogeneous
+    layers -> close to the ideal halving) and improves with N."""
+    prof = vit_b16_profile()
+    r8 = M.simulate(prof, 8)
+    r32 = M.simulate(prof, 32)
+    # ideal halving bound: 1 - (N+1)/2N -> 48.4% at N=32; paper measures 42%
+    assert 0.30 < r32.reduction <= 0.52
+    assert r32.reduction >= r8.reduction - 1e-9
+    # CDP total is ~constant over ticks
+    assert r32.cdp_timeline.std() / r32.cdp_timeline.mean() < 0.05
+    # DP timeline peaks hard
+    assert r32.dp_timeline.max() > 1.7 * r32.dp_timeline.mean()
+
+
+def test_resnet_reduction_lower_than_vit():
+    """Paper: ResNet-50's heterogeneous activation/FLOPs ratio reduces the
+    gain (~30% vs ~42%)."""
+    rn = M.simulate(resnet50_profile(), 32)
+    vit = M.simulate(vit_b16_profile(), 32)
+    assert 0.1 < rn.reduction < vit.reduction
+
+
+def test_dp_peak_matches_schedule_formula():
+    prof = [("m", 100, 1.0)] * 16      # homogeneous, 1600 bytes full model
+    rep = M.simulate(prof, 4)
+    # per-worker DP peak = full model activations retained = 1600 bytes
+    assert rep.dp_per_worker_peak == pytest.approx(1600.0)
+    # CDP per-worker peak = (N+1)/2N * full model = 1000 (paper Sec. 4.1)
+    assert rep.cdp_per_worker_peak == pytest.approx(1000.0)
+    assert rep.reduction == pytest.approx(1 - (4 + 1) / 8)
