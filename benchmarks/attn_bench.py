@@ -1,0 +1,108 @@
+"""Attention micro-benchmark: fwd and fwd+bwd wall-clock + achieved FLOPs
+for both attention backends ("jnp" blockwise reference and the Pallas
+kernel pair behind ``attn_backend="pallas"``).
+
+Writes a JSON artifact to ``benchmarks/artifacts/attn_bench.json`` (one
+record per backend x shape x pass) so the perf trajectory accumulates
+attention datapoints across PRs, and yields the same rows in the
+``name,us_per_call,derived`` CSV convention of ``benchmarks/run.py``.
+
+Off-TPU the Pallas rows run in interpreter mode (``interpret=True``) —
+correct but slow; they are tagged ``"interpret": true`` in the artifact so
+trajectory tooling never mistakes them for kernel timings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+# B, S, H, KV, dh — two training-ish shapes (causal self-attention)
+SHAPES = [
+    (2, 512, 8, 2, 64),
+    (1, 1024, 8, 4, 64),
+]
+ITERS = 5
+
+
+def _attn_flops(B, S, H, dh, *, causal=True, bwd=False):
+    """Matmul FLOPs of attention: QK^T and PV are 2*S*S*dh MACs per head;
+    causal halves the useful area; the flash backward re-does QK^T plus the
+    three gradient matmuls (dP, dV, dQ, dK) -> 2.5x the forward."""
+    f = 2 * 2 * B * H * S * S * dh
+    if causal:
+        f //= 2
+    return int(f * 2.5) if bwd else f
+
+
+def _time(fn, *args):
+    out = fn(*args)                                    # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(ITERS):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) * 1e6 / ITERS    # us/call
+
+
+def run():
+    from repro.kernels import ops
+    from repro.models.attention import blockwise_attention
+
+    interpret = ops.default_interpret()
+    records = []
+    rows = []
+    for B, S, H, KV, dh in SHAPES:
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = jax.random.normal(ks[0], (B, S, H, dh), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, KV, dh), jnp.float32)
+        v = jax.random.normal(ks[2], (B, S, KV, dh), jnp.float32)
+        do = jax.random.normal(ks[3], (B, S, H, dh), jnp.float32)
+        shape_tag = f"b{B}s{S}h{H}kv{KV}d{dh}"
+
+        backends = {
+            "jnp": jax.jit(lambda q, k, v: blockwise_attention(
+                q, k, v, causal=True, backend="jnp")),
+            "pallas": jax.jit(lambda q, k, v: ops.flash_attention(
+                q, k, v, causal=True, interpret=interpret)),
+        }
+        for name, fwd in backends.items():
+            fwd_us = _time(fwd, q, k, v)
+            grad = jax.jit(jax.grad(
+                lambda q, k, v: jnp.sum(fwd(q, k, v) * do),
+                argnums=(0, 1, 2)))
+            fwdbwd_us = _time(grad, q, k, v)
+            fwd_gflops = _attn_flops(B, S, H, dh) / fwd_us * 1e-3
+            fwdbwd_gflops = (_attn_flops(B, S, H, dh, bwd=True)
+                             / fwdbwd_us * 1e-3)
+            records.append({
+                "backend": name, "shape": shape_tag,
+                "B": B, "S": S, "H": H, "KV": KV, "dh": dh,
+                "interpret": bool(name == "pallas" and interpret),
+                "fwd_us": round(fwd_us, 1),
+                "fwdbwd_us": round(fwdbwd_us, 1),
+                "fwd_achieved_gflops": round(fwd_gflops, 2),
+                "fwdbwd_achieved_gflops": round(fwdbwd_gflops, 2),
+            })
+            rows.append((f"attn.{name}.{shape_tag}.fwd", round(fwd_us, 1),
+                         f"{fwd_gflops:.2f}GFLOP/s"))
+            rows.append((f"attn.{name}.{shape_tag}.fwdbwd",
+                         round(fwdbwd_us, 1),
+                         f"{fwdbwd_gflops:.2f}GFLOP/s"))
+
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, "attn_bench.json")
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+    rows.append(("attn.artifact", 0.0, path))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

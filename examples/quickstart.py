@@ -10,6 +10,7 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 import jax
 import jax.numpy as jnp
 
+from repro.compat import make_mesh as compat_make_mesh
 from repro.configs import get_reduced
 from repro.core.trainer import TrainerConfig, init_state, jit_train_step
 from repro.data import lm_batch_iterator, make_lm_data
@@ -18,8 +19,7 @@ from repro.optim import sgd_momentum
 
 
 def main():
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((2, 2), ("data", "model"))
     cfg = get_reduced("stablelm-1.6b")
     print(f"model: {cfg.name}, {cfg.num_layers} layers, d={cfg.d_model}")
 

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import checkpoint as ckpt
+from repro.compat import make_mesh as compat_make_mesh
 from repro.configs.base import FAMILY_DENSE, ModelConfig
 from repro.core.trainer import TrainerConfig, init_state, jit_train_step
 from repro.data import ShardedLoader, lm_batch_iterator, make_lm_data
@@ -37,8 +38,7 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/cdp_lm_ckpt")
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((2, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat_make_mesh((2, 2), ("data", "model"))
     cfg = CFG_100M
     params = init_params(cfg, jax.random.PRNGKey(0))
     print(f"params: {count_params(params)/1e6:.1f}M  rule: {args.rule}")

@@ -13,14 +13,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_mesh as compat_make_mesh, shard_map as compat_shard_map
 from repro.core.zero import roll_stage_params, zero_cdp_apply, zero_dp_apply
 from repro.launch.roofline import parse_collectives
 
 
 def main():
     n, d, b = 8, 64, 4
-    mesh = jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat_make_mesh((n,), ("data",))
     key = jax.random.PRNGKey(0)
     stages = {"w": 0.1 * jax.random.normal(key, (n, d, d)),
               "b": jnp.zeros((n, d))}
@@ -43,7 +43,7 @@ def main():
 
     results = {}
     for name, fn in (("zero_cdp", run_cdp), ("zero_dp", run_dp)):
-        f = jax.jit(jax.shard_map(fn, mesh=mesh, in_specs=(specs, P("data")),
+        f = jax.jit(compat_shard_map(fn, mesh=mesh, in_specs=(specs, P("data")),
                                   out_specs=P("data"), axis_names={"data"},
                                   check_vma=False))
         y = f(rolled, x)

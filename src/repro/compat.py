@@ -1,0 +1,64 @@
+"""Version-compat shims over the jax API surface this repo targets.
+
+The codebase is written against the modern jax spelling (``jax.shard_map``,
+``jax.make_mesh(..., axis_types=...)``, ``pltpu.CompilerParams``). Pinned
+toolchains ship older jax builds that spell these differently; every call
+site goes through this module so the rest of the tree stays version-agnostic.
+
+Exports:
+    CompilerParams   -- pallas-TPU compiler params dataclass (old name:
+                        ``TPUCompilerParams``)
+    make_mesh        -- ``jax.make_mesh`` with all-Auto axis types when the
+                        installed jax supports typed mesh axes
+    shard_map        -- ``jax.shard_map``; on old jax, maps ``axis_names``
+                        (the *manual* axes) onto the legacy ``auto=`` set of
+                        the experimental entry point
+"""
+from __future__ import annotations
+
+import jax
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or \
+    pltpu.TPUCompilerParams
+
+# True when jax.shard_map exists, i.e. the body of a shard_map can stay
+# auto (GSPMD) over unnamed mesh axes and sharding constraints over those
+# axes are legal inside it. The old-jax fallback below is fully manual, so
+# in-body with_sharding_constraint over a mesh axis would be rejected.
+PARTIAL_AUTO_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def make_mesh(axis_shapes, axis_names):
+    """Mesh with Auto (GSPMD) axis types on every axis, on any jax version."""
+    axis_type = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(axis_shapes, axis_names,
+                                 axis_types=(axis_type,) * len(axis_names))
+        except TypeError:
+            pass
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma=False):
+    """``jax.shard_map`` on both new and 0.4.x jax.
+
+    ``axis_names`` is the set of mesh axes the body is *manual* over; all
+    other mesh axes stay auto (GSPMD). Old jax expresses the same split
+    through the complementary ``auto=`` argument.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    # Old jax: partial-auto (auto=) cannot lower axis_index (PartitionId is
+    # rejected by the SPMD partitioner), so run fully manual instead. Axes
+    # absent from the specs are plain replication — numerically identical,
+    # the body just loses GSPMD auto-partitioning over them.
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=bool(check_vma))

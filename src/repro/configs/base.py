@@ -113,6 +113,11 @@ class ModelConfig:
     encdec: Optional[EncDecConfig] = None
     vlm: Optional[VLMConfig] = None
     mtp: bool = False                     # DeepSeek multi-token prediction head
+    # train/prefill attention contraction: "jnp" = blockwise online-softmax
+    # in pure jnp (reference, any backend); "pallas" = fused Pallas TPU
+    # flash-attention kernels, forward AND backward (custom_vjp), run in
+    # interpreter mode automatically off-TPU.
+    attn_backend: str = "jnp"
     dtype: str = "bfloat16"
     # citation for the exact numbers above
     source: str = ""

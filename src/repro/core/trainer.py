@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
 from repro.core import grad_sync
 from repro.core.schedule import RULE_CDP_V1, RULE_CDP_V2, RULE_DP
 from repro.core.update_rules import (fresh_threshold_traced, needs_prev_params,
@@ -114,6 +115,14 @@ def make_train_step(cfg, trainer: TrainerConfig, mesh, opt: Optimizer,
     train_step(state, batch) -> (state, metrics); jit-ready with shardings.
     """
     rule = validate_rule(trainer.rule)
+    # fail fast on a bad attention backend: the knob is threaded
+    # configs/base.py -> models/attention.py -> here, and a typo would
+    # otherwise only surface mid-trace inside the first jitted step
+    from repro.models.attention import ATTN_BACKENDS
+    backend = getattr(cfg, "attn_backend", "jnp")
+    if backend not in ATTN_BACKENDS:
+        raise ValueError(f"cfg.attn_backend={backend!r}; "
+                         f"expected one of {ATTN_BACKENDS}")
     loss_fn = loss_fn or (lambda p, b: model_mod.loss_fn(cfg, p, b))
     n_data = mesh.shape[trainer.data_axis]
     n_pod = mesh.shape[trainer.pod_axis] if trainer.pod_axis else 1
@@ -123,8 +132,10 @@ def make_train_step(cfg, trainer: TrainerConfig, mesh, opt: Optimizer,
 
     def grad_pspecs(params):
         # tensor-parallel specs of the grads (mirror the params) so the ring
-        # slices along unsharded dims only
-        key = id(jax.tree.structure(params))
+        # slices along unsharded dims only. Keyed on the treedef itself
+        # (hashable): id() of a temporary treedef can be recycled by the
+        # allocator after GC and alias a different params structure.
+        key = jax.tree.structure(params)
         if key not in grad_pspecs_cache:
             grad_pspecs_cache[key] = sh.param_pspecs(
                 params, mesh, trainer.model_axis, trainer.zero_axis)
@@ -182,14 +193,17 @@ def make_train_step(cfg, trainer: TrainerConfig, mesh, opt: Optimizer,
     def train_step(state, batch):
         params = state["params"]
         params_prev = state["params_prev"] if use_prev else params
-        if trainer.seq_parallel:
+        if trainer.seq_parallel and compat.PARTIAL_AUTO_SHARD_MAP:
+            # perf lever only: on old jax the shard_map fallback is fully
+            # manual, where an in-body sharding constraint over the model
+            # axis is illegal — skip it (numerics are unaffected)
             from repro.models import blocks as blocks_mod
             blocks_mod.set_activation_sharding(mesh, trainer.model_axis)
         rep = lambda t: jax.tree.map(lambda _: P(), t)
         in_specs = (rep(params), rep(params_prev), shard_batch_specs(batch),
                     P())
         out_specs = (grad_out_specs(params), P(), P())
-        grads, loss, metrics = jax.shard_map(
+        grads, loss, metrics = compat.shard_map(
             grad_shard, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
             axis_names=set(daxes), check_vma=False)(
                 params, params_prev, batch, state["step"])

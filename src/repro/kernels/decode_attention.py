@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams
+
 NEG_INF = -1e30
 
 
@@ -81,7 +83,7 @@ def decode_attention_kernel(q, k, v, cache_len, *, bk: int = 512,
             pltpu.VMEM((1,), jnp.float32),
             pltpu.VMEM((1, dv), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q3, k, v, cache_len)

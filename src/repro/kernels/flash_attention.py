@@ -1,12 +1,33 @@
-"""Pallas TPU flash-attention (prefill/training forward), causal + sliding
-window, GQA-aware via the wrapper in ops.py.
+"""Pallas TPU flash-attention (training forward AND backward), causal +
+sliding window, GQA-aware via the wrapper in ops.py.
 
 Layout: q [BH, Sq, d], k/v [BKV, Sk, d] with BH = batch*heads,
-BKV = batch*kv_heads. Grid (BH, nq, nk): the kv dimension is the innermost
-(sequential) axis; the online-softmax accumulators (m, l, acc) live in VMEM
-scratch and persist across the kv iterations of one (bh, iq) tile — the
-classic flash structure mapped to the TPU grid. Block shapes are multiples
-of 128 on the lane dim for MXU alignment (ops.py pads).
+BKV = batch*kv_heads.
+
+Forward — grid (BH, nq, nk): the kv dimension is the innermost (sequential)
+axis; the online-softmax accumulators (m, l, acc) live in VMEM scratch and
+persist across the kv iterations of one (bh, iq) tile — the classic flash
+structure mapped to the TPU grid. The per-row logsumexp is written out as a
+second output so the backward pass can recompute the probabilities blockwise
+(FlashAttention-2 residual).
+
+Backward — two kernels, both recomputing scores from (q, k, lse) in VMEM:
+
+  * dq: grid (BH, nq, nk), kv innermost; a [bq, d] accumulator persists
+    across kv blocks of one query tile. ds = p * (dp - delta) * scale,
+    dq += ds @ k.
+  * dk/dv: grid (BKV, nk, G, nq) with the (query-group, query-block) axes
+    innermost, so the [bk, d] accumulators sum across every query head of
+    the kv head's GQA group AND every query block — the GQA dk/dv reduction
+    happens inside the kernel, no post-hoc head-sum needed.
+
+``delta = sum(dO * O, axis=-1)`` is precomputed by the caller (ops.py) — the
+standard separate-pass trick that keeps both backward kernels matmul-only.
+
+Block shapes are multiples of 128 on the lane dim for MXU alignment (ops.py
+pads); padded kv positions are masked via ``sk_valid`` and padded q rows are
+harmless because their output rows are sliced off (forward) and their dO rows
+are zero (backward).
 """
 from __future__ import annotations
 
@@ -18,12 +39,31 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams
+
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  scale: float, causal: bool, window: int, bq: int, bk: int,
-                  nk: int, sk: int):
+def _tile_mask(iq, jk, *, bq, bk, causal, window, q_offset, sk):
+    """[bq, bk] validity mask of one (query-block, kv-block) tile."""
+    q_pos = q_offset + iq * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+    k_pos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    valid = k_pos < sk
+    if causal:
+        valid = valid & (k_pos <= q_pos)
+    if window:
+        valid = valid & (k_pos > q_pos - window)
+    return valid
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, acc_ref,
+                  *, scale: float, causal: bool, window: int, q_offset: int,
+                  bq: int, bk: int, nk: int, sk: int):
     iq = pl.program_id(1)
     jk = pl.program_id(2)
 
@@ -39,13 +79,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale
-    q_pos = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-    k_pos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-    valid = k_pos < sk
-    if causal:
-        valid = valid & (k_pos <= q_pos)
-    if window:
-        valid = valid & (k_pos > q_pos - window)
+    valid = _tile_mask(iq, jk, bq=bq, bk=bk, causal=causal, window=window,
+                       q_offset=q_offset, sk=sk)
     s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_ref[...]
@@ -59,15 +94,23 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     @pl.when(jk == nk - 1)
     def _finish():
-        o_ref[0] = (acc_ref[...] /
-                    jnp.maximum(l_ref[...], 1e-30)[:, None]).astype(o_ref.dtype)
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = m_ref[...] + jnp.log(l)
 
 
 def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
-                           bq: int = 128, bk: int = 128, group: int = 1,
-                           sk_valid: int = 0, interpret: bool = False):
+                           q_offset: int = 0, bq: int = 128, bk: int = 128,
+                           group: int = 1, sk_valid: int = 0,
+                           interpret: bool = False):
     """q: [BH, Sq, d]; k, v: [BKV, Sk, d]; group = heads per kv head.
-    ``sk_valid``: true kv length (padded tail positions are masked)."""
+    ``sk_valid``: true kv length (padded tail positions are masked).
+    ``q_offset``: absolute position of q row 0 (for masking parity with
+    ``models.attention.blockwise_attention``).
+
+    Returns (out [BH, Sq, dv], lse [BH, Sq] float32) — lse is the per-row
+    logsumexp residual the backward kernels consume.
+    """
     BH, Sq, d = q.shape
     BKV, Sk, dv = v.shape
     nq = Sq // bq
@@ -76,7 +119,7 @@ def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
 
     kernel = functools.partial(
         _flash_kernel, scale=scale, causal=causal, window=window,
-        bq=bq, bk=bk, nk=nk, sk=sk_valid or Sk)
+        q_offset=q_offset, bq=bq, bk=bk, nk=nk, sk=sk_valid or Sk)
 
     return pl.pallas_call(
         kernel,
@@ -86,14 +129,194 @@ def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
             pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
             pl.BlockSpec((1, bk, dv), lambda b, i, j, g=group: (b // g, j, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, dv), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, Sq, dv), q.dtype),
+        out_specs=[
+            pl.BlockSpec((1, bq, dv), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BH, Sq, dv), q.dtype),
+            jax.ShapeDtypeStruct((BH, Sq), jnp.float32),
+        ],
         scratch_shapes=[
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq,), jnp.float32),
             pltpu.VMEM((bq, dv), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+
+
+# ---------------------------------------------------------------------------
+# Backward: dq
+# ---------------------------------------------------------------------------
+
+def _flash_bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                         dq_ref, dq_acc_ref, *, scale: float, causal: bool,
+                         window: int, q_offset: int, bq: int, bk: int,
+                         nk: int, sk: int):
+    iq = pl.program_id(1)
+    jk = pl.program_id(2)
+
+    @pl.when(jk == 0)
+    def _init():
+        dq_acc_ref[...] = jnp.zeros_like(dq_acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # [bq, d]
+    k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+    v = v_ref[0].astype(jnp.float32)                  # [bk, dv]
+    do = do_ref[0].astype(jnp.float32)                # [bq, dv]
+    lse = lse_ref[0]                                  # [bq]
+    delta = delta_ref[0]                              # [bq]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = _tile_mask(iq, jk, bq=bq, bk=bk, causal=causal, window=window,
+                       q_offset=q_offset, sk=sk)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])                     # [bq, bk]
+
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None]) * scale            # [bq, bk]
+    dq_acc_ref[...] += jax.lax.dot(ds, k, preferred_element_type=jnp.float32)
+
+    @pl.when(jk == nk - 1)
+    def _finish():
+        dq_ref[0] = dq_acc_ref[...].astype(dq_ref.dtype)
+
+
+def flash_attention_bwd_dq(q, k, v, do, lse, delta, *, causal: bool = True,
+                           window: int = 0, q_offset: int = 0, bq: int = 128,
+                           bk: int = 128, group: int = 1, sk_valid: int = 0,
+                           interpret: bool = False):
+    """dq of flash attention. Shapes as the forward; lse/delta: [BH, Sq] f32.
+    Returns dq [BH, Sq, d] in q.dtype."""
+    BH, Sq, d = q.shape
+    BKV, Sk, dv = v.shape
+    nq = Sq // bq
+    nk = Sk // bk
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_bwd_dq_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, bq=bq, bk=bk, nk=nk, sk=sk_valid or Sk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, dv), lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, bq, dv), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+            pl.BlockSpec((1, bq), lambda b, i, j: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, d), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, d), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+
+# ---------------------------------------------------------------------------
+# Backward: dk / dv (GQA reduction over the query-group axis in-kernel)
+# ---------------------------------------------------------------------------
+
+def _flash_bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                          dk_ref, dv_ref, dk_acc_ref, dv_acc_ref, *,
+                          scale: float, causal: bool, window: int,
+                          q_offset: int, bq: int, bk: int, nq: int,
+                          ng: int, sk: int):
+    jk = pl.program_id(1)
+    g = pl.program_id(2)
+    iq = pl.program_id(3)
+
+    @pl.when((g == 0) & (iq == 0))
+    def _init():
+        dk_acc_ref[...] = jnp.zeros_like(dk_acc_ref)
+        dv_acc_ref[...] = jnp.zeros_like(dv_acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                  # [bq, d]
+    k = k_ref[0].astype(jnp.float32)                  # [bk, d]
+    v = v_ref[0].astype(jnp.float32)                  # [bk, dv]
+    do = do_ref[0].astype(jnp.float32)                # [bq, dv]
+    lse = lse_ref[0]                                  # [bq]
+    delta = delta_ref[0]                              # [bq]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    valid = _tile_mask(iq, jk, bq=bq, bk=bk, causal=causal, window=window,
+                       q_offset=q_offset, sk=sk)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])                     # [bq, bk]
+
+    # dv += p^T @ dO
+    dv_acc_ref[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None]) * scale            # [bq, bk]
+    # dk += ds^T @ q
+    dk_acc_ref[...] += jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when((g == ng - 1) & (iq == nq - 1))
+    def _finish():
+        dk_ref[0] = dk_acc_ref[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_acc_ref[...].astype(dv_ref.dtype)
+
+
+def flash_attention_bwd_dkv(q, k, v, do, lse, delta, *, causal: bool = True,
+                            window: int = 0, q_offset: int = 0, bq: int = 128,
+                            bk: int = 128, group: int = 1, sk_valid: int = 0,
+                            interpret: bool = False):
+    """dk, dv of flash attention, accumulated across all ``group`` query
+    heads of each kv head (GQA) and all query blocks inside the kernel.
+    Returns (dk [BKV, Sk, d], dv [BKV, Sk, dv]) in k/v dtype."""
+    BH, Sq, d = q.shape
+    BKV, Sk, dv = v.shape
+    nq = Sq // bq
+    nk = Sk // bk
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _flash_bwd_dkv_kernel, scale=scale, causal=causal, window=window,
+        q_offset=q_offset, bq=bq, bk=bk, nq=nq, ng=group, sk=sk_valid or Sk)
+
+    qmap = lambda b, j, g, i, G=group: (b * G + g, i, 0)
+    qmap2 = lambda b, j, g, i, G=group: (b * G + g, i)
+    kmap = lambda b, j, g, i: (b, j, 0)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(BKV, nk, group, nq),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), qmap),
+            pl.BlockSpec((1, bk, d), kmap),
+            pl.BlockSpec((1, bk, dv), kmap),
+            pl.BlockSpec((1, bq, dv), qmap),
+            pl.BlockSpec((1, bq), qmap2),
+            pl.BlockSpec((1, bq), qmap2),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bk, d), kmap),
+            pl.BlockSpec((1, bk, dv), kmap),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((BKV, Sk, d), k.dtype),
+            jax.ShapeDtypeStruct((BKV, Sk, dv), v.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((bk, d), jnp.float32),
+            pltpu.VMEM((bk, dv), jnp.float32),
+        ],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary",
+                                 "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)

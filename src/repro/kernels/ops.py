@@ -1,6 +1,15 @@
 """Jitted public wrappers around the Pallas kernels: padding, GQA head
 bookkeeping, block-size selection, and the interpret switch (CPU validation
-vs TPU execution)."""
+vs TPU execution).
+
+``flash_attention`` is differentiable: a ``jax.custom_vjp`` routes its
+backward pass through the fused Pallas dq and dk/dv kernels in
+``repro.kernels.flash_attention`` (FlashAttention-2 style — the forward
+saves the per-row logsumexp, the backward recomputes probabilities blockwise
+from it after a precomputed ``delta = sum(dO * O)`` pass). This is the
+kernel pair behind ``attn_backend="pallas"`` in ``ModelConfig``; with
+``interpret=True`` the same VJP runs on CPU for tier-1 validation.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -9,8 +18,16 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention import decode_attention_kernel
-from repro.kernels.flash_attention import flash_attention_kernel
+from repro.kernels.flash_attention import (flash_attention_bwd_dkv,
+                                           flash_attention_bwd_dq,
+                                           flash_attention_kernel)
 from repro.kernels.ssm_scan import gla_scan_kernel
+
+
+def default_interpret() -> bool:
+    """True off-TPU: Pallas kernels run in the (slow, exact) interpreter so
+    the kernel-backed paths stay testable on CPU hosts."""
+    return jax.default_backend() != "tpu"
 
 
 def _pad_to(x, axis, mult):
@@ -23,31 +40,76 @@ def _pad_to(x, axis, mult):
     return jnp.pad(x, widths), n
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "bq", "bk",
-                                   "interpret"))
+# ---------------------------------------------------------------------------
+# Flash attention with a fused-kernel VJP. The custom_vjp core operates on
+# the folded, block-padded layout (q [BH, Sq, d]; k/v [BKV, Sk, d]) so the
+# residuals are exactly the kernel operands; head fold/unfold and padding
+# live in the public wrapper, where plain jax AD transposes them.
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
+def _flash_core(qh, kh, vh, causal, window, q_offset, bq, bk, group,
+                sk_valid, interpret):
+    out, _ = flash_attention_kernel(
+        qh, kh, vh, causal=causal, window=window, q_offset=q_offset,
+        bq=bq, bk=bk, group=group, sk_valid=sk_valid, interpret=interpret)
+    return out
+
+
+def _flash_core_fwd(qh, kh, vh, causal, window, q_offset, bq, bk, group,
+                    sk_valid, interpret):
+    out, lse = flash_attention_kernel(
+        qh, kh, vh, causal=causal, window=window, q_offset=q_offset,
+        bq=bq, bk=bk, group=group, sk_valid=sk_valid, interpret=interpret)
+    return out, (qh, kh, vh, out, lse)
+
+
+def _flash_core_bwd(causal, window, q_offset, bq, bk, group, sk_valid,
+                    interpret, res, do):
+    qh, kh, vh, out, lse = res
+    # delta pass: D_i = sum_d dO_id * O_id, one fused elementwise-reduce
+    delta = jnp.sum(do.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    kw = dict(causal=causal, window=window, q_offset=q_offset, bq=bq, bk=bk,
+              group=group, sk_valid=sk_valid, interpret=interpret)
+    dq = flash_attention_bwd_dq(qh, kh, vh, do, lse, delta, **kw)
+    dk, dv = flash_attention_bwd_dkv(qh, kh, vh, do, lse, delta, **kw)
+    return dq, dk, dv
+
+
+_flash_core.defvjp(_flash_core_fwd, _flash_core_bwd)
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "q_offset", "bq",
+                                   "bk", "interpret"))
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    bq: int = 128, bk: int = 128, interpret: bool = False):
-    """q: [B,Sq,H,dh]; k,v: [B,Sk,KV,dh] -> [B,Sq,H,dh]. Heads fold into the
-    grid's batch dim; GQA via the kv index map (group = H // KV)."""
+                    q_offset: int = 0, bq: int = 128, bk: int = 128,
+                    interpret: bool = False):
+    """q: [B,Sq,H,dh]; k,v: [B,Sk,KV,dv] -> [B,Sq,H,dv]. Heads fold into the
+    grid's batch dim; GQA via the kv index map (group = H // KV).
+
+    Differentiable — ``jax.grad`` through this runs the Pallas dq + dk/dv
+    kernels. kv padding beyond ``Sk`` is masked inside every kernel
+    (``sk_valid``); q padding is sliced off here (forward) and carries zero
+    cotangents (backward)."""
     B, Sq, H, dh = q.shape
     Sk, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
     group = H // KV
     bq = min(bq, Sq)
     bk = min(bk, Sk)
 
     qh = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, dh)
     kh = jnp.moveaxis(k, 2, 1).reshape(B * KV, Sk, dh)
-    vh = jnp.moveaxis(v, 2, 1).reshape(B * KV, Sk, dh)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * KV, Sk, dv)
     qh, sq0 = _pad_to(qh, 1, bq)
     kh, sk0 = _pad_to(kh, 1, bk)
     vh, _ = _pad_to(vh, 1, bk)
     # padded kv positions are masked because kv_pos < sk is checked with the
     # ORIGINAL length baked into the kernel closure
-    out = flash_attention_kernel(qh, kh, vh, causal=causal, window=window,
-                                 bq=bq, bk=bk, group=group, sk_valid=sk0,
-                                 interpret=interpret)
+    out = _flash_core(qh, kh, vh, causal, window, q_offset, bq, bk, group,
+                      sk0, interpret)
     out = out[:, :sq0]
-    return jnp.moveaxis(out.reshape(B, H, Sq, dh), 1, 2)
+    return jnp.moveaxis(out.reshape(B, H, Sq, dv), 1, 2)
 
 
 @partial(jax.jit, static_argnames=("bk", "interpret"))
@@ -66,7 +128,7 @@ def decode_attention(q, k, v, cache_len, *, bk: int = 512,
     ln = jnp.repeat(cache_len, KV, axis=0)
     out = decode_attention_kernel(qh, kh, vh, ln, bk=bk, group=group,
                                   interpret=interpret)
-    return out.reshape(B, H, dh)[:, None][:, :, :, :].reshape(B, 1, H, dh)
+    return out.reshape(B, 1, H, dh)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -16,6 +16,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.compat import CompilerParams
+
 
 def _gla_kernel(q_ref, k_ref, v_ref, g_ref, o_ref, state_ref, *, chunk: int):
     c = pl.program_id(1)
@@ -69,7 +71,7 @@ def gla_scan_kernel(q, k, v, g, *, chunk: int = 64, interpret: bool = False):
         out_specs=pl.BlockSpec((1, chunk, dv), lambda b, c: (b, c, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, dv), q.dtype),
         scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v, g)

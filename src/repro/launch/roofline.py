@@ -54,6 +54,14 @@ class CollectiveStats:
     by_type: Dict[str, int]
     max_single_op_bytes: int          # largest burst (the CDP balance metric)
     op_counts: Dict[str, int]
+    # largest single op per collective type; lets callers look at the
+    # gradient-merge burst (all-reduce / collective-permute / reduce-scatter)
+    # in isolation from e.g. param all-gathers
+    max_by_type: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def max_grad_merge_bytes(self) -> int:
+        return max(self.max_by_type.get(t, 0) for t in
+                   ("all-reduce", "reduce-scatter", "collective-permute"))
 
 
 def _split_computations(hlo: str) -> Dict[str, List[str]]:
@@ -109,6 +117,7 @@ def parse_collectives(hlo: str) -> CollectiveStats:
 
     by_type: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
     op_counts: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    max_by_type: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
     max_single = 0
 
     def comp_bytes(name: str, mult: int, seen) -> int:
@@ -133,6 +142,7 @@ def parse_collectives(hlo: str) -> CollectiveStats:
                 op_counts[op] += mult
                 total += b * mult
                 max_single = max(max_single, b)
+                max_by_type[op] = max(max_by_type[op], b)
             elif op == "while":
                 mb = re.search(r"body=%?([\w\.\-]+)", ln)
                 mc = re.search(r"condition=%?([\w\.\-]+)", ln)
@@ -147,7 +157,7 @@ def parse_collectives(hlo: str) -> CollectiveStats:
     total = comp_bytes(entry, 1, frozenset())
     return CollectiveStats(total_bytes=total, by_type=by_type,
                            max_single_op_bytes=max_single,
-                           op_counts=op_counts)
+                           op_counts=op_counts, max_by_type=max_by_type)
 
 
 @dataclasses.dataclass

@@ -21,6 +21,11 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--rule", default="cdp_v2",
                     choices=["dp", "cdp_v1", "cdp_v2", "cdp_random"])
+    ap.add_argument("--attn-backend", default=None,
+                    choices=["jnp", "pallas"],
+                    help="train/prefill attention contraction (default: the "
+                         "arch config's attn_backend; pallas = fused "
+                         "fwd+bwd kernels, interpreter mode off-TPU)")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -55,6 +60,8 @@ def main(argv=None):
     from repro.optim import sgd_momentum, cosine_warmup
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    if args.attn_backend:
+        cfg = cfg.with_(attn_backend=args.attn_backend)
     mesh = make_host_mesh(args.mesh_data, args.mesh_model, args.mesh_pod)
     print(f"mesh: {dict(mesh.shape)}  arch: {cfg.name}  rule: {args.rule}")
 

@@ -3,8 +3,13 @@
 Prefill/train attention is computed **blockwise over the KV axis** with an
 online softmax (flash-attention structure in pure jnp) so that no [S, S]
 score tensor is ever materialised — required for the 32k prefill shapes.
-The Pallas kernel in ``repro.kernels.flash_attention`` implements the same
-contraction for the TPU target; this module is the reference/default path.
+
+``blockwise_attention`` dispatches on the ``attn_backend`` config knob:
+the jnp path here is the reference/default, and ``backend="pallas"`` routes
+both forward and backward through the fused Pallas TPU kernels in
+``repro.kernels`` (``ops.flash_attention``'s custom_vjp — dq + dk/dv
+kernels), falling back to interpreter mode off-TPU. See the backend matrix
+in ROADMAP.md.
 """
 from __future__ import annotations
 
@@ -134,18 +139,39 @@ def _flash_b(causal, window, q_offset, block, sk_valid, res, do):
 _flash.defvjp(_flash_f, _flash_b)
 
 
+ATTN_BACKENDS = ("jnp", "pallas")
+
+
 def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
-                        q_offset: int = 0, block: int = 512):
+                        q_offset: int = 0, block: int = 512,
+                        backend: str = "jnp"):
     """q: [B,Sq,H,dh], k: [B,Sk,KV,dh], v: [B,Sk,KV,dv] -> [B,Sq,H,dv].
 
-    Flash-structured (blockwise online softmax) with a custom VJP so the
-    backward pass recomputes scores instead of storing [Sq, Sk] — this is the
-    jnp reference twin of kernels/flash_attention.py.
+    ``backend`` selects the contraction (the ``attn_backend`` config knob):
+
+      * ``"jnp"``    — flash-structured blockwise online softmax in pure jnp
+                       with a custom VJP that recomputes scores instead of
+                       storing [Sq, Sk]; runs on any jax backend. This is
+                       the reference twin of kernels/flash_attention.py.
+      * ``"pallas"`` — fused Pallas TPU kernels for forward AND backward
+                       (``repro.kernels.ops.flash_attention``'s custom_vjp);
+                       interpreter mode is selected automatically off-TPU so
+                       CPU training/tests still run. ``block`` applies to
+                       the jnp path only — the kernels tile at their own
+                       MXU-aligned bq/bk defaults.
 
     GQA: H must be a multiple of KV; query head g attends kv head g*KV//H.
     ``causal`` masks kv_pos > q_pos with q_pos = q_offset + arange(Sq).
     ``window``>0 additionally masks kv_pos <= q_pos - window (sliding window).
     """
+    if backend not in ATTN_BACKENDS:
+        raise ValueError(
+            f"unknown attn backend {backend!r}; expected one of {ATTN_BACKENDS}")
+    if backend == "pallas":
+        from repro.kernels import ops
+        return ops.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            interpret=ops.default_interpret())
     B, Sq, H, dh = q.shape
     Sk, KV = k.shape[1], k.shape[2]
     dv = v.shape[-1]
@@ -227,7 +253,8 @@ def gqa_apply(p, cfg, x, positions, *, causal=True, window=None):
     k = apply_rope(k, positions, cfg.rope_theta, cfg.partial_rotary_factor,
                    interleaved=cfg.rope_2d)
     win = cfg.attn_window if window is None else window
-    out = blockwise_attention(q, k, v, causal=causal, window=win)
+    out = blockwise_attention(q, k, v, causal=causal, window=win,
+                              backend=cfg.attn_backend)
     return out.reshape(B, S, -1) @ p["wo"]
 
 
@@ -282,7 +309,8 @@ def cross_attn_apply(p, cfg, x, memory, memory_len=None):
     q = (x @ p["wq"]).reshape(B, S, H, hd)
     k = (memory @ p["wk"]).reshape(B, memory.shape[1], KV, hd)
     v = (memory @ p["wv"]).reshape(B, memory.shape[1], KV, hd)
-    out = blockwise_attention(q, k, v, causal=False)
+    out = blockwise_attention(q, k, v, causal=False,
+                              backend=cfg.attn_backend)
     return out.reshape(B, S, -1) @ p["wo"]
 
 
@@ -349,7 +377,8 @@ def mla_apply(p, cfg, x, positions):
     q = jnp.concatenate([q_nope, q_rope], -1)
     k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
                                                   q_rope.shape)], -1)
-    out = blockwise_attention(q, k, v, causal=True, window=cfg.attn_window)
+    out = blockwise_attention(q, k, v, causal=True, window=cfg.attn_window,
+                              backend=cfg.attn_backend)
     return out.reshape(B, S, -1) @ p["wo"]
 
 

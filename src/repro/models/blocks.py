@@ -72,7 +72,8 @@ def decoder_layer_init(key, cfg, dtype, *, use_moe: bool):
     return p
 
 
-def decoder_layer_apply(p, cfg, x, positions, *, use_moe: bool, causal=True):
+def decoder_layer_apply(p, cfg, x, positions, *, use_moe: bool, causal=True,
+                        drop_tokens: bool = True):
     h = apply_norm(cfg.norm, p["ln1"], x)
     if cfg.attn_kind == "mla":
         a = attn.mla_apply(p["attn"], cfg, h, positions)
@@ -82,7 +83,8 @@ def decoder_layer_apply(p, cfg, x, positions, *, use_moe: bool, causal=True):
     h = apply_norm(cfg.norm, p["ln2"], x)
     if use_moe:
         B, S, d = h.shape
-        y, aux = moe_mod.moe_apply(p["ffn"], cfg, h.reshape(B * S, d))
+        y, aux = moe_mod.moe_apply(p["ffn"], cfg, h.reshape(B * S, d),
+                                   drop=drop_tokens)
         return x + y.reshape(B, S, d), aux
     return x + apply_mlp(p["ffn"], h, cfg.act), jnp.float32(0.0)
 
@@ -97,7 +99,8 @@ def decoder_layer_decode(p, cfg, x, cache, *, use_moe: bool):
     h = apply_norm(cfg.norm, p["ln2"], x)
     if use_moe:
         B, S, d = h.shape
-        y, _ = moe_mod.moe_apply(p["ffn"], cfg, h.reshape(B * S, d))
+        y, _ = moe_mod.moe_apply(p["ffn"], cfg, h.reshape(B * S, d),
+                                 drop=False)
         y = y.reshape(B, S, d)
     else:
         y = apply_mlp(p["ffn"], h, cfg.act)

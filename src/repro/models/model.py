@@ -170,8 +170,9 @@ def _head(cfg, params, x):
     return logits
 
 
-def _run_decoder_stack(cfg, params, x, positions):
-    """dense/moe/vlm decoder trunk. Returns (hidden, aux_loss)."""
+def _run_decoder_stack(cfg, params, x, positions, drop_tokens: bool = True):
+    """dense/moe/vlm decoder trunk. Returns (hidden, aux_loss).
+    ``drop_tokens=False`` -> dropless MoE routing (inference)."""
     aux = jnp.float32(0.0)
     blk = params["blocks"]
     if "dense" in blk:
@@ -181,7 +182,8 @@ def _run_decoder_stack(cfg, params, x, positions):
         aux += a
     if "moe" in blk:
         fn = lambda lp, h: B.decoder_layer_apply(lp, cfg, h, positions,
-                                                 use_moe=True)
+                                                 use_moe=True,
+                                                 drop_tokens=drop_tokens)
         x, a = B.scan_layers(fn, blk["moe"], x)
         aux += a
     return x, aux
@@ -320,9 +322,11 @@ def prefill_logits(cfg, params, batch):
         pe = jax.nn.gelu(pe @ pr["w1"]) @ pr["w2"]
         x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
         positions = jnp.arange(x.shape[1])
-        h, _ = _run_decoder_stack(cfg, params, x, positions)
+        h, _ = _run_decoder_stack(cfg, params, x, positions,
+                                  drop_tokens=False)
     elif fam in (FAMILY_DENSE, FAMILY_MOE):
-        h, _ = _run_decoder_stack(cfg, params, x, positions)
+        h, _ = _run_decoder_stack(cfg, params, x, positions,
+                                  drop_tokens=False)
     elif fam == FAMILY_ENCDEC:
         memory = _run_encoder(cfg, params, batch["frames"])
         fn = lambda lp, hh: B.xdec_layer_apply(lp, cfg, hh, positions, memory)

@@ -43,12 +43,27 @@ def moe_init(key, cfg, dtype):
     return p
 
 
-def moe_apply(p, cfg, x):
-    """x: [T, d] -> (y: [T, d], aux_loss scalar)."""
+def moe_apply(p, cfg, x, *, drop: bool = True):
+    """x: [T, d] -> (y: [T, d], aux_loss scalar).
+
+    ``drop=True`` (training): capacity-factor dispatch, overflow tokens are
+    dropped — the throughput/quality tradeoff the FLOP model assumes.
+    ``drop=False`` (inference): capacity = min(T, 4x the balanced
+    per-expert load). The T cap makes small shapes (every reduced/test
+    config, and any E <= 4*k*cf) exactly dropless, which keeps prefill and
+    one-token decode numerically consistent; at production scale the 4x
+    headroom keeps the dense [E, C, d] dispatch buffer linear in T
+    (true worst-case droplessness would need C = T, i.e. an E*T*d buffer
+    — ~120 TB for a deepseek-v3 32k prefill).
+    """
     m = cfg.moe
     T, d = x.shape
     E, k = m.num_experts, m.top_k
-    C = moe_capacity(T, m)
+    if drop:
+        C = moe_capacity(T, m)
+    else:
+        headroom = -(-4 * k * int(T * m.capacity_factor) // E)
+        C = max(8, -(-min(T, headroom) // 8) * 8)
 
     logits = (x.astype(jnp.float32) @ p["router"])            # [T, E]
     probs = jax.nn.softmax(logits, axis=-1)

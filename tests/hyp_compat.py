@@ -1,0 +1,53 @@
+"""Fallback for environments without ``hypothesis``.
+
+Re-exports the real ``given``/``settings``/``strategies`` when hypothesis is
+installed; otherwise provides a deterministic mini-implementation of the tiny
+strategy subset the suite uses (integers, sampled_from, booleans) that runs
+each property test on ``max_examples`` seeded random samples.
+"""
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:                                       # pragma: no cover
+    import random
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample                          # fn(rng) -> value
+
+    class _Strategies:
+        @staticmethod
+        def integers(lo, hi):
+            return _Strategy(lambda r: r.randint(lo, hi))
+
+        @staticmethod
+        def sampled_from(xs):
+            choices = list(xs)
+            return _Strategy(lambda r: r.choice(choices))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda r: r.random() < 0.5)
+
+    st = _Strategies()
+
+    def settings(max_examples: int = 10, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            # zero-arg wrapper (no functools.wraps: pytest must not see the
+            # strategy params via __wrapped__ and treat them as fixtures)
+            def run():
+                n = getattr(run, "_max_examples", 10)
+                rng = random.Random(0)
+                for _ in range(n):
+                    fn(*[s.sample(rng) for s in strats])
+            run.__name__ = fn.__name__
+            run.__doc__ = fn.__doc__
+            run._max_examples = getattr(fn, "_max_examples", 10)
+            return run
+        return deco

@@ -1,8 +1,7 @@
 """Properties of the cyclic schedule — the paper's Fig. 1 / Table 1 claims."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from hyp_compat import given, settings, st
 
 from repro.core import schedule as S
 
