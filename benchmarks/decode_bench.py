@@ -1,0 +1,140 @@
+"""Decode/serve micro-benchmark: decode tok/s and prefill latency for both
+``decode_attn`` backends ("jnp" single-token attention vs the Pallas
+flash-decode kernel ``ops.decode_attention``).
+
+Two levels per backend:
+
+  * kernel — one decode-attention call over a long KV cache (the
+    memory-bound hot loop of batched serving);
+  * model  — a reduced-config ``decode_step`` (tok/s) and the fused
+    ``prefill_with_cache`` pass (prefill latency) through the registry.
+
+Writes a JSON artifact to ``benchmarks/artifacts/decode_bench.json`` so the
+serving-perf trajectory accumulates across PRs, and yields rows in the
+``name,us_per_call,derived`` CSV convention of ``benchmarks/run.py``.
+
+Off-TPU the Pallas rows run in interpreter mode (tagged ``"interpret":
+true`` in the artifact) — correct but slow; never mistake them for kernel
+timings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+# B, T (cache len), H, KV, dh — decode-shaped (one query token)
+KERNEL_SHAPES = [
+    (4, 1024, 8, 2, 64),
+    (16, 512, 8, 8, 64),
+]
+ITERS = 10
+
+
+def _time(fn, *args):
+    out = fn(*args)                                    # compile
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(ITERS):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) * 1e6 / ITERS    # us/call
+
+
+def run():
+    from repro.kernels import ops
+    from repro.kernels.registry import KernelSpec
+    from repro.models import attention as attn
+
+    interpret = ops.default_interpret()
+    records, rows = [], []
+
+    # ---- kernel level ----------------------------------------------------
+    for B, T, H, KV, dh in KERNEL_SHAPES:
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, 1, H, dh), jnp.float32)
+        k = jax.random.normal(ks[1], (B, T, KV, dh), jnp.float32)
+        v = jax.random.normal(ks[2], (B, T, KV, dh), jnp.float32)
+        cl = jnp.full((B,), T, jnp.int32)
+        tag = f"b{B}t{T}h{H}kv{KV}d{dh}"
+        backends = {
+            "jnp": jax.jit(lambda q, k, v, cl: attn.decode_attention(
+                q, k, v, cl, backend="jnp")),
+            "pallas": jax.jit(lambda q, k, v, cl: ops.decode_attention(
+                q, k, v, cl, interpret=interpret)),
+        }
+        for name, fn in backends.items():
+            us = _time(fn, q, k, v, cl)
+            tok_s = B / (us * 1e-6)
+            records.append({
+                "level": "kernel", "backend": name, "shape": tag,
+                "B": B, "T": T, "H": H, "KV": KV, "dh": dh,
+                "interpret": bool(name == "pallas" and interpret),
+                "us_per_call": round(us, 1),
+                "decode_tok_s": round(tok_s, 1),
+            })
+            rows.append((f"decode.{name}.{tag}", round(us, 1),
+                         f"{tok_s:.0f}tok/s"))
+
+    # ---- model level (reduced config through the registry) --------------
+    from repro.configs import get_reduced
+    from repro.models import (decode_step, init_cache, init_params,
+                              prefill_with_cache)
+    cfg0 = get_reduced("stablelm-1.6b")
+    params = init_params(cfg0, jax.random.PRNGKey(0))
+    B, S, GEN = 4, 32, 8
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                 cfg0.vocab_size)
+    for name in ("jnp", "pallas"):
+        cfg = cfg0.with_(kernels=KernelSpec(decode_attn=name,
+                                            prefill_attn="jnp"))
+        pre = jax.jit(lambda p, b, c: prefill_with_cache(cfg, p, b, c))
+        step = jax.jit(lambda p, b, c: decode_step(cfg, p, b, c))
+
+        cache = init_cache(cfg, B, S + GEN)
+        logits, cache = jax.block_until_ready(
+            pre(params, {"tokens": prompts}, cache))         # compile
+        cache0 = init_cache(cfg, B, S + GEN)
+        t0 = time.perf_counter()
+        logits, cache = jax.block_until_ready(
+            pre(params, {"tokens": prompts}, cache0))
+        prefill_us = (time.perf_counter() - t0) * 1e6
+
+        tok = jnp.argmax(logits, -1)
+        logits2, cache = step(params, {"token": tok}, cache)  # compile
+        jax.block_until_ready(logits2)
+        t0 = time.perf_counter()
+        for _ in range(GEN):
+            logits2, cache = step(params, {"token": tok}, cache)
+            tok = jnp.argmax(logits2, -1)
+        jax.block_until_ready(logits2)
+        dt = time.perf_counter() - t0
+        tok_s = B * GEN / dt
+        records.append({
+            "level": "model", "backend": name, "arch": cfg0.name,
+            "B": B, "prompt_len": S, "gen": GEN,
+            "interpret": bool(name == "pallas" and interpret),
+            "prefill_us": round(prefill_us, 1),
+            "decode_tok_s": round(tok_s, 1),
+        })
+        rows.append((f"decode.model.{name}.prefill", round(prefill_us, 1),
+                     f"B{B}xS{S}"))
+        rows.append((f"decode.model.{name}.decode",
+                     round(dt * 1e6 / GEN, 1), f"{tok_s:.0f}tok/s"))
+
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, "decode_bench.json")
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+    rows.append(("decode.artifact", 0.0, path))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -1,46 +1,53 @@
-"""Quickstart: train a tiny LM with Cyclic Data Parallelism on 4 virtual
-devices (2 data-parallel ranks x 2 model shards), comparing the three update
-rules from the paper.
+"""Quickstart: the engine API in ~30 lines.
+
+Everything runs through two classes sharing one ``RunSpec``:
+
+  * ``RunSpec``     — WHAT to run and WHERE: arch (or explicit ModelConfig),
+                      reduced/full, kernel backend registry (per-op
+                      "jnp"|"pallas" for train_attn / prefill_attn /
+                      decode_attn / ssm_scan), mesh shape, host-device
+                      forcing, seed. ``spec.ensure_host_devices()`` must run
+                      before jax touches device state.
+  * ``TrainEngine`` — build -> jitted CDP step -> log/checkpoint/resume
+                      loop. ``engine.run()`` trains; rerunning with the same
+                      ckpt_dir resumes deterministically.
+  * ``ServeEngine`` — fused prefill (one full-sequence pass fills every
+                      layer's decode cache) + batched sampling decode;
+                      reports prefill AND decode tok/s.
+
+Here: train a tiny LM with Cyclic Data Parallelism on 4 virtual devices
+(2 data-parallel ranks x 2 model shards), comparing the three update rules
+from the paper, then serve a few tokens from the same spec.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+from repro.engine import RunSpec
 
-import jax
-import jax.numpy as jnp
-
-from repro.compat import make_mesh as compat_make_mesh
-from repro.configs import get_reduced
-from repro.core.trainer import TrainerConfig, init_state, jit_train_step
-from repro.data import lm_batch_iterator, make_lm_data
-from repro.models import init_params
-from repro.optim import sgd_momentum
+SPEC = RunSpec(arch="stablelm-1.6b", reduced=True,
+               mesh_data=2, mesh_model=2, host_devices=4,
+               # kernel registry: flip any op to its fused Pallas kernel,
+               # e.g. kernels="pallas" or kernels="decode_attn=pallas"
+               kernels=None)
 
 
 def main():
-    mesh = compat_make_mesh((2, 2), ("data", "model"))
-    cfg = get_reduced("stablelm-1.6b")
-    print(f"model: {cfg.name}, {cfg.num_layers} layers, d={cfg.d_model}")
-
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    opt = sgd_momentum(momentum=0.9)
-    tokens = make_lm_data(cfg.vocab_size, 100_000)
-    it = lm_batch_iterator(tokens, batch=8, seq=64)
-    batch0 = {k: jnp.asarray(v) for k, v in next(it).items()}
+    SPEC.ensure_host_devices()          # before jax initialises devices
+    from repro.engine import ServeEngine, TrainEngine
 
     for rule in ("dp", "cdp_v1", "cdp_v2"):
-        trainer = TrainerConfig(rule=rule, lr_schedule=lambda s: 0.1,
-                                donate=False)
-        state = init_state(cfg, trainer, params, opt)
-        step, _, _ = jit_train_step(cfg, trainer, mesh, opt, state, batch0)
-        losses = []
-        for i in range(40):
-            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
-            state, metrics = step(state, batch)
-            losses.append(float(metrics["loss"]))
+        engine = TrainEngine(SPEC, rule=rule, steps=40, batch=8, seq=64,
+                             lr_schedule=lambda s: 0.05, donate=False,
+                             log_every=1, verbose=False)
+        engine.run()
+        losses = [h["loss"] for h in engine.history]
         print(f"{rule:7s}: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
     print("All three rules train — the CDP delay is benign (paper Table 2).")
+
+    serve = ServeEngine(SPEC, batch=4, prompt_len=32, gen=8)
+    result = serve.generate()
+    print(f"served {result['tokens'].shape} tokens "
+          f"(prefill {result['prefill_tok_s']:.0f} tok/s, "
+          f"decode {result['decode_tok_s']:.0f} tok/s)")
 
 
 if __name__ == "__main__":

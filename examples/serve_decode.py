@@ -1,53 +1,37 @@
-"""Batched serving demo: prefill + KV-cache decode for a reduced config of
-any assigned architecture (incl. the SSM/hybrid state-cache paths).
+"""Batched serving demo through the ServeEngine: fused prefill + KV-cache
+decode for a reduced config of any assigned architecture (incl. the
+SSM/hybrid state-cache paths and the Pallas decode_attn backend).
 
     PYTHONPATH=src python examples/serve_decode.py --arch zamba2-7b
+    PYTHONPATH=src python examples/serve_decode.py --arch stablelm-1.6b \
+        --kernels decode_attn=pallas
 """
 import argparse
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.configs import ARCHS, get_reduced
-from repro.models import decode_step, init_cache, init_params
+from repro.configs import ARCHS
+from repro.engine import RunSpec
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="xlstm-350m", choices=list(ARCHS))
     ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=48)
+    ap.add_argument("--kernels", default=None,
+                    help="per-op kernel backends, e.g. decode_attn=pallas")
+    ap.add_argument("--temperature", type=float, default=0.8)
     args = ap.parse_args()
 
-    cfg = get_reduced(args.arch)
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    B = args.batch
-    cache = init_cache(cfg, B, 256)
-    if cfg.family == "encdec":
-        # stub encoder memory (precomputed frame embeddings -> encoder)
-        cache["memory"] = 0.01 * jnp.ones_like(cache["memory"])
+    spec = RunSpec(arch=args.arch, reduced=True, kernels=args.kernels,
+                   mesh_data=2, mesh_model=2, host_devices=4)
+    spec.ensure_host_devices()
+    from repro.engine import ServeEngine
 
-    step = jax.jit(lambda p, b, c: decode_step(cfg, p, b, c))
-    key = jax.random.PRNGKey(1)
-    tok = jax.random.randint(key, (B,), 0, cfg.vocab_size)
-
-    logits, cache = step(params, {"token": tok}, cache)   # compile
-    t0 = time.time()
-    out = []
-    for i in range(args.gen):
-        key, sub = jax.random.split(key)
-        tok = jax.random.categorical(sub, logits.astype(jnp.float32), -1)
-        out.append(np.asarray(tok))
-        logits, cache = step(params, {"token": tok}, cache)
-    dt = time.time() - t0
-    print(f"{args.arch}: {args.gen} tokens x batch {B} in {dt:.2f}s "
-          f"({B*args.gen/dt:.1f} tok/s on CPU, reduced config)")
-    print("sample:", np.stack(out, 1)[0][:16].tolist())
+    engine = ServeEngine(spec, batch=args.batch, prompt_len=args.prompt_len,
+                         gen=args.gen, temperature=args.temperature)
+    result = engine.generate()
+    print("sample:", result["tokens"][0][:16].tolist())
 
 
 if __name__ == "__main__":

@@ -1,27 +1,14 @@
 """End-to-end driver: train a ~100M-parameter decoder LM with CDP-v2 on a
-(data=2, model=2) mesh of virtual devices, with checkpointing and the sharded
-data loader — the full production path at CPU scale.
+(data=2, model=2) mesh of virtual devices through the TrainEngine — with
+checkpointing, resume, and the sharded data loader. A custom ModelConfig
+slots straight into RunSpec (``config=`` overrides the arch registry).
 
     PYTHONPATH=src python examples/train_cdp_lm.py --steps 300
 """
 import argparse
-import os
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
-import time
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro import checkpoint as ckpt
-from repro.compat import make_mesh as compat_make_mesh
 from repro.configs.base import FAMILY_DENSE, ModelConfig
-from repro.core.trainer import TrainerConfig, init_state, jit_train_step
-from repro.data import ShardedLoader, lm_batch_iterator, make_lm_data
-from repro.models import init_params
-from repro.models.common import count_params
-from repro.optim import cosine_warmup, sgd_momentum
+from repro.engine import RunSpec
 
 CFG_100M = ModelConfig(
     name="gpt-100m", family=FAMILY_DENSE, num_layers=10, d_model=640,
@@ -38,40 +25,16 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/cdp_lm_ckpt")
     args = ap.parse_args()
 
-    mesh = compat_make_mesh((2, 2), ("data", "model"))
-    cfg = CFG_100M
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    print(f"params: {count_params(params)/1e6:.1f}M  rule: {args.rule}")
+    spec = RunSpec(config=CFG_100M, mesh_data=2, mesh_model=2,
+                   host_devices=4)
+    spec.ensure_host_devices()
+    from repro.engine import TrainEngine
 
-    opt = sgd_momentum(0.9, weight_decay=1e-4)
-    trainer = TrainerConfig(
-        rule=args.rule,
-        lr_schedule=cosine_warmup(0.05, args.steps // 10, args.steps))
-    state = init_state(cfg, trainer, params, opt)
-
-    tokens = make_lm_data(cfg.vocab_size, 2_000_000)
-    it = lm_batch_iterator(tokens, args.batch, args.seq)
-    batch0 = {k: jnp.asarray(v) for k, v in next(it).items()}
-    step, _, bsh_fn = jit_train_step(cfg, trainer, mesh, opt, state, batch0)
-
-    start = 0
-    if ckpt.latest_step(args.ckpt_dir) is not None:
-        state, start = ckpt.restore(args.ckpt_dir, state)
-        print(f"resumed from step {start}")
-
-    loader = ShardedLoader(({k: jnp.asarray(v) for k, v in b.items()}
-                            for b in it), bsh_fn(batch0))
-    t0 = time.time()
-    for i in range(start, args.steps):
-        state, metrics = step(state, next(loader))
-        if i % 20 == 0 or i == args.steps - 1:
-            print(f"step {i:4d}  loss {float(metrics['loss']):.4f}  "
-                  f"lr {float(metrics['lr']):.4f}  "
-                  f"{time.time()-t0:.0f}s", flush=True)
-        if (i + 1) % 100 == 0:
-            ckpt.save(args.ckpt_dir, i + 1, state)
-            print(f"checkpointed step {i+1}")
-    loader.close()
+    engine = TrainEngine(spec, rule=args.rule, steps=args.steps,
+                         batch=args.batch, seq=args.seq, lr=0.05,
+                         ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                         log_every=20, data_tokens=2_000_000)
+    engine.run()
 
 
 if __name__ == "__main__":

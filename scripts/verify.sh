@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Repo verification: tier-1 tests + a reduced train/serve smoke THROUGH THE
+# ENGINE API (the only code path the launchers and examples use).
+#
+#     bash scripts/verify.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "=== tier-1: pytest ==="
+python -m pytest -x -q
+
+echo "=== engine smoke: 3-step reduced train (TrainEngine) ==="
+python -m repro.launch.train --arch stablelm-1.6b --reduced \
+    --steps 3 --batch 2 --seq 16 --mesh-data 2 --mesh-model 1 \
+    --host-devices 2 --log-every 1
+
+echo "=== engine smoke: 4-token serve (ServeEngine, fused prefill) ==="
+python -m repro.launch.serve --arch stablelm-1.6b --reduced \
+    --batch 2 --prompt-len 16 --gen 4 --mesh-data 2 --mesh-model 1 \
+    --host-devices 2
+
+echo "verify.sh: OK"

@@ -10,6 +10,8 @@ import dataclasses
 from dataclasses import dataclass, field, replace
 from typing import Optional, Tuple
 
+from repro.kernels.registry import KernelSpec
+
 # ---------------------------------------------------------------------------
 # Enumerations (plain strings; keeps configs trivially serialisable)
 # ---------------------------------------------------------------------------
@@ -113,9 +115,13 @@ class ModelConfig:
     encdec: Optional[EncDecConfig] = None
     vlm: Optional[VLMConfig] = None
     mtp: bool = False                     # DeepSeek multi-token prediction head
-    # train/prefill attention contraction: "jnp" = blockwise online-softmax
-    # in pure jnp (reference, any backend); "pallas" = fused Pallas TPU
-    # flash-attention kernels, forward AND backward (custom_vjp), run in
+    # Per-op kernel backend registry (train_attn / prefill_attn / decode_attn
+    # / ssm_scan, each "jnp" | "pallas"); None -> derived from the deprecated
+    # ``attn_backend`` alias below. See repro.kernels.registry.
+    kernels: Optional[KernelSpec] = None
+    # DEPRECATED alias (populates train_attn/prefill_attn when ``kernels`` is
+    # unset): "jnp" = blockwise online-softmax in pure jnp; "pallas" = fused
+    # Pallas TPU flash-attention kernels (fwd AND bwd via custom_vjp),
     # interpreter mode automatically off-TPU.
     attn_backend: str = "jnp"
     dtype: str = "bfloat16"

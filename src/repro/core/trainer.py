@@ -85,14 +85,20 @@ def _zero1_specs(params, mesh, trainer) -> PyTree:
     return jax.tree.map(one, params, gps, layout)
 
 
+def optimizer_slot_keys(opt_state: PyTree, params: PyTree) -> set:
+    """Params-shaped optimizer slots (see ``sharding.specs.param_slot_keys``
+    — one structural detector shared by the ZeRO-1 and mirrored paths)."""
+    return sh.param_slot_keys(opt_state, params)
+
+
 def state_shardings(cfg, trainer: TrainerConfig, state: PyTree, mesh):
     psh = sh.param_shardings(state["params"], mesh, trainer.model_axis,
                              trainer.zero_axis)
     if trainer.zero1_ring:
+        slots = optimizer_slot_keys(state["opt"], state["params"])
         z1 = jax.tree.map(lambda s: NamedSharding(mesh, s),
                           _zero1_specs(state["params"], mesh, trainer))
-        opt_sh = {k: (z1 if k in ("mom", "m", "v")
-                      else NamedSharding(mesh, P()))
+        opt_sh = {k: (z1 if k in slots else NamedSharding(mesh, P()))
                   for k in state["opt"]}
     else:
         opt_sh = sh.state_shardings(state["opt"], psh)
@@ -115,14 +121,11 @@ def make_train_step(cfg, trainer: TrainerConfig, mesh, opt: Optimizer,
     train_step(state, batch) -> (state, metrics); jit-ready with shardings.
     """
     rule = validate_rule(trainer.rule)
-    # fail fast on a bad attention backend: the knob is threaded
-    # configs/base.py -> models/attention.py -> here, and a typo would
-    # otherwise only surface mid-trace inside the first jitted step
-    from repro.models.attention import ATTN_BACKENDS
-    backend = getattr(cfg, "attn_backend", "jnp")
-    if backend not in ATTN_BACKENDS:
-        raise ValueError(f"cfg.attn_backend={backend!r}; "
-                         f"expected one of {ATTN_BACKENDS}")
+    # fail fast on a bad kernel backend: the registry is threaded
+    # configs/base.py -> kernels/registry.py -> models/* -> here, and a typo
+    # would otherwise only surface mid-trace inside the first jitted step
+    from repro.kernels import registry as kernel_registry
+    kernel_registry.resolve(cfg)
     loss_fn = loss_fn or (lambda p, b: model_mod.loss_fn(cfg, p, b))
     n_data = mesh.shape[trainer.data_axis]
     n_pod = mesh.shape[trainer.pod_axis] if trainer.pod_axis else 1

@@ -32,7 +32,15 @@ class ShardedLoader:
             for batch in self._it:
                 if self._stop.is_set():
                     return
-                self._q.put(self._place(batch))
+                placed = self._place(batch)
+                while not self._stop.is_set():   # stop-aware put: close()
+                    try:                          # must not deadlock on a
+                        self._q.put(placed, timeout=0.1)  # full queue
+                        break
+                    except queue.Full:
+                        continue
+                if self._stop.is_set():
+                    return
         except Exception as e:  # surface loader errors to the consumer
             self._q.put(e)
 
@@ -52,3 +60,7 @@ class ShardedLoader:
                 self._q.get_nowait()
         except queue.Empty:
             pass
+        # wait for the worker to notice the stop flag: letting the daemon
+        # thread die mid device_put at interpreter teardown aborts the
+        # process ("terminate called without an active exception")
+        self._thread.join(timeout=10.0)

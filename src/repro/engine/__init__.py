@@ -1,0 +1,21 @@
+"""Unified engine API: RunSpec + TrainEngine + ServeEngine.
+
+``RunSpec`` (jax-free import) owns config/registry resolution, host-device
+forcing, and mesh construction; the engines own the train and serve loops.
+``TrainEngine``/``ServeEngine`` are re-exported lazily so that importing
+``repro.engine`` to build a RunSpec never initialises jax before
+``ensure_host_devices`` can act.
+"""
+from repro.engine.spec import RunSpec
+
+__all__ = ["RunSpec", "TrainEngine", "ServeEngine"]
+
+
+def __getattr__(name):
+    if name == "TrainEngine":
+        from repro.engine.train import TrainEngine
+        return TrainEngine
+    if name == "ServeEngine":
+        from repro.engine.serve import ServeEngine
+        return ServeEngine
+    raise AttributeError(f"module 'repro.engine' has no attribute {name!r}")

@@ -1,0 +1,95 @@
+"""RunSpec: the execution-plan half of a run, shared by both engines.
+
+One object owns the three things every launcher used to re-implement:
+
+  * config resolution  — arch-id lookup (full or reduced) or an explicit
+    ``ModelConfig``, plus the kernel-backend registry (``kernels=``) with the
+    deprecated ``attn_backend`` alias mapped onto it;
+  * host-device forcing — the CPU-container ``--xla_force_host_platform_
+    device_count`` dance, applied to the environment BEFORE jax initialises
+    its backend;
+  * mesh construction  — (data, model[, pod]) over whatever devices exist.
+
+This module deliberately imports no jax at module scope so a launcher can
+build a RunSpec and call :meth:`ensure_host_devices` before anything touches
+device state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import warnings
+from dataclasses import dataclass
+from typing import Any, Optional, Union
+
+from repro.kernels.registry import KernelSpec, coerce_ops
+
+
+@dataclass(frozen=True)
+class RunSpec:
+    """What to run and where — but not the train/serve loop parameters
+    (those belong to :class:`TrainEngine` / :class:`ServeEngine`)."""
+    arch: str = ""
+    reduced: bool = False
+    config: Optional[Any] = None          # explicit ModelConfig overrides arch
+    # kernel backend registry: KernelSpec | dict | CLI string ("pallas" or
+    # "decode_attn=pallas,ssm_scan=jnp") | None (keep the config's choice)
+    kernels: Union[KernelSpec, dict, str, None] = None
+    attn_backend: Optional[str] = None    # DEPRECATED alias (train+prefill)
+    mesh_data: int = 2
+    mesh_model: int = 2
+    mesh_pod: int = 0
+    host_devices: int = 0                 # force N host CPU devices (0 = off)
+    seed: int = 0
+
+    def with_(self, **kw) -> "RunSpec":
+        return dataclasses.replace(self, **kw)
+
+    # -- config ------------------------------------------------------------
+
+    def resolve_config(self):
+        """The effective ModelConfig: explicit > arch lookup, with the
+        kernel registry and the deprecated attn_backend alias applied and
+        validated (fail fast, not mid-trace)."""
+        from repro.configs import get_config, get_reduced
+        from repro.kernels import registry
+
+        if self.config is not None:
+            cfg = self.config
+        elif self.arch:
+            cfg = get_reduced(self.arch) if self.reduced else get_config(self.arch)
+        else:
+            raise ValueError("RunSpec needs an arch id or an explicit config")
+        ops = coerce_ops(self.kernels)
+        if self.attn_backend is not None:
+            warnings.warn(
+                "RunSpec.attn_backend / --attn-backend is deprecated; use "
+                "kernels=\"train_attn=...,prefill_attn=...\" (or a single "
+                "backend for all ops)", DeprecationWarning, stacklevel=2)
+            cfg = cfg.with_(attn_backend=self.attn_backend)
+            if ops is not None:
+                # the alias fills attention ops the explicit --kernels value
+                # did not name (never silently dropped, never overriding an
+                # explicitly named op)
+                for op in ("train_attn", "prefill_attn"):
+                    ops.setdefault(op, self.attn_backend)
+        if ops is not None:
+            cfg = cfg.with_(kernels=KernelSpec(**ops).validate())
+        registry.resolve(cfg)             # validates, incl. the alias path
+        return cfg
+
+    # -- devices / mesh ----------------------------------------------------
+
+    def ensure_host_devices(self) -> None:
+        """Force ``host_devices`` CPU devices via XLA_FLAGS. Must run before
+        jax initialises its backend — call it first thing in a launcher."""
+        if not self.host_devices:
+            return
+        flag = f"--xla_force_host_platform_device_count={self.host_devices}"
+        flags = os.environ.get("XLA_FLAGS", "")
+        if flag not in flags:
+            os.environ["XLA_FLAGS"] = (flags + " " + flag).strip()
+
+    def build_mesh(self):
+        from repro.launch.mesh import make_host_mesh
+        return make_host_mesh(self.mesh_data, self.mesh_model, self.mesh_pod)

@@ -1,0 +1,207 @@
+"""TrainEngine: build -> jitted CDP step -> log/checkpoint/resume loop.
+
+The one training code path: ``launch/train.py`` is an argparse shim over
+this class, the examples drive it directly, and tests exercise
+checkpoint/resume equality through it.
+
+    spec = RunSpec(arch="stablelm-1.6b", reduced=True, host_devices=4)
+    engine = TrainEngine(spec, rule="cdp_v2", steps=100, ckpt_dir="ckpts/")
+    engine.run()                       # resumes automatically from ckpt_dir
+
+Determinism contract: with a fixed RunSpec.seed the data stream is a pure
+function of the step index — on restore the engine fast-forwards the host
+iterator to the restored step, so an interrupted+resumed run produces
+exactly the same state as an uninterrupted one (tested in
+tests/test_engine.py).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.engine.spec import RunSpec
+
+PyTree = Any
+
+
+class TrainEngine:
+    def __init__(self, spec: RunSpec, *,
+                 rule: str = "cdp_v2",
+                 steps: int = 100,
+                 batch: int = 8,
+                 seq: int = 128,
+                 lr: float = 0.05,
+                 momentum: float = 0.9,
+                 weight_decay: float = 1e-4,
+                 lr_schedule: Optional[Callable] = None,
+                 optimizer=None,
+                 trainer=None,                 # full TrainerConfig override
+                 loss_fn: Optional[Callable] = None,
+                 ckpt_dir: Optional[str] = None,
+                 ckpt_every: int = 50,
+                 log_every: int = 10,
+                 data_tokens: int = 200_000,
+                 donate: bool = True,
+                 verbose: bool = True):
+        spec.ensure_host_devices()
+        self.spec = spec
+        self.rule = rule
+        self.steps = steps
+        self.batch = batch
+        self.seq = seq
+        self.lr = lr
+        self.momentum = momentum
+        self.weight_decay = weight_decay
+        self.lr_schedule = lr_schedule
+        self.optimizer = optimizer
+        self.trainer_override = trainer
+        self.custom_loss_fn = loss_fn
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.log_every = log_every
+        self.data_tokens = data_tokens
+        self.donate = donate
+        self.verbose = verbose
+
+        self.cfg = spec.resolve_config()
+        self.mesh = None
+        self.state = None
+        self.start_step = 0
+        self.history: List[Dict[str, float]] = []
+        self._built = False
+        self._loader = None
+        self._extras = None
+
+    # -- plumbing ----------------------------------------------------------
+
+    def _log(self, msg: str) -> None:
+        if self.verbose:
+            print(msg, flush=True)
+
+    def _make_trainer_config(self):
+        from repro.core.trainer import TrainerConfig
+        from repro.optim import cosine_warmup
+        if self.trainer_override is not None:
+            return self.trainer_override
+        sched = self.lr_schedule or cosine_warmup(
+            self.lr, max(1, self.steps // 10), self.steps)
+        return TrainerConfig(
+            rule=self.rule,
+            pod_axis="pod" if self.spec.mesh_pod else None,
+            lr_schedule=sched, donate=self.donate)
+
+    def _proto_extras(self):
+        """Family side-inputs (patches/frames protos) — constant across
+        steps, so allocated once, not per batch in the loader hot path."""
+        if self._extras is None:
+            from repro.data.synthetic import synthetic_batch
+            proto = synthetic_batch(self.cfg, type("S", (), {
+                "global_batch": self.batch, "seq_len": self.seq})())
+            self._extras = {k: proto[k] for k in ("patches", "frames")
+                            if k in proto}
+        return self._extras
+
+    def _to_batch(self, host_batch):
+        import jax.numpy as jnp
+        b = {"tokens": jnp.asarray(host_batch["tokens"]),
+             "targets": jnp.asarray(host_batch["targets"])}
+        b.update(self._proto_extras())
+        return b
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def build(self) -> "TrainEngine":
+        """Materialise params/optimizer/mesh, jit the step, restore the
+        latest checkpoint when ckpt_dir has one. Idempotent."""
+        if self._built:
+            return self
+        import jax
+        import numpy as np
+        from repro import checkpoint as ckpt
+        from repro.core.trainer import init_state, jit_train_step
+        from repro.data import lm_batch_iterator, make_lm_data
+        from repro.models import init_params
+        from repro.optim import sgd_momentum
+
+        self.mesh = self.spec.build_mesh()
+        self._log(f"mesh: {dict(self.mesh.shape)}  arch: {self.cfg.name}  "
+                  f"rule: {self.rule}")
+
+        params = init_params(self.cfg, jax.random.PRNGKey(self.spec.seed))
+        n_params = sum(int(np.prod(p.shape))
+                       for p in jax.tree.leaves(params))
+        self._log(f"params: {n_params/1e6:.2f}M")
+
+        self.opt = self.optimizer or sgd_momentum(self.momentum,
+                                                  self.weight_decay)
+        self.trainer = self._make_trainer_config()
+        self.state = init_state(self.cfg, self.trainer, params, self.opt)
+
+        tokens = make_lm_data(self.cfg.vocab_size, self.data_tokens,
+                              seed=self.spec.seed)
+        self._host_it = lm_batch_iterator(tokens, self.batch, self.seq,
+                                          seed=self.spec.seed)
+        batch0 = self._to_batch(next(self._host_it))
+        self.step_fn, self.state_sh, self.batch_sh = jit_train_step(
+            self.cfg, self.trainer, self.mesh, self.opt, self.state, batch0,
+            self.custom_loss_fn)
+
+        self.start_step = 0
+        if self.ckpt_dir and ckpt.latest_step(self.ckpt_dir) is not None:
+            self.state, self.start_step = ckpt.restore(self.ckpt_dir,
+                                                       self.state)
+            # the synthetic stream is a pure function of the step index:
+            # skip what the interrupted run already consumed so resumed ==
+            # uninterrupted
+            for _ in range(self.start_step):
+                next(self._host_it)
+            self._log(f"restored step {self.start_step}")
+        self._built = True
+        return self
+
+    def _get_loader(self):
+        """ONE persistent loader per engine: partial ``run()`` calls share
+        it, so prefetched-but-untrained batches are consumed by the next
+        call instead of silently dropped (the determinism contract holds
+        for in-process continuation, not just checkpoint resume)."""
+        from repro.data import ShardedLoader
+        if self._loader is None:
+            self._loader = ShardedLoader(
+                (self._to_batch(b) for b in self._host_it), self.batch_sh)
+        return self._loader
+
+    def close(self) -> None:
+        if self._loader is not None:
+            self._loader.close()
+            self._loader = None
+
+    def run(self, steps: Optional[int] = None) -> PyTree:
+        """Train to ``steps`` (default: the configured total), checkpointing
+        and logging on the way. Returns the final state. Stopping early
+        (``steps < self.steps``) keeps the loader alive for continuation;
+        reaching the configured total closes it."""
+        from repro import checkpoint as ckpt
+        self.build()
+        total = self.steps if steps is None else steps
+        loader = self._get_loader()
+        t0 = time.time()
+        try:
+            for step in range(self.start_step, total):
+                batch = next(loader)
+                self.state, metrics = self.step_fn(self.state, batch)
+                if step % self.log_every == 0 or step == total - 1:
+                    rec = {"step": step,
+                           "loss": float(metrics["loss"]),
+                           "lr": float(metrics["lr"])}
+                    self.history.append(rec)
+                    self._log(f"step {step:5d}  loss {rec['loss']:.4f}  "
+                              f"lr {rec['lr']:.4f}  {time.time()-t0:.1f}s")
+                if self.ckpt_dir and (step + 1) % self.ckpt_every == 0:
+                    ckpt.save(self.ckpt_dir, step + 1, self.state)
+        finally:
+            if total >= self.steps:
+                self.close()
+        # never move the resume pointer backwards: a later run() with a
+        # smaller target must not re-train completed steps
+        self.start_step = max(self.start_step, total)
+        return self.state

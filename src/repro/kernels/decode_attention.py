@@ -21,7 +21,7 @@ NEG_INF = -1e30
 
 
 def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
-                   *, scale: float, bk: int, nk: int):
+                   *, scale: float, bk: int, nk: int, window: int):
     jk = pl.program_id(1)
 
     @pl.when(jk == 0)
@@ -38,7 +38,12 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32) * scale  # [1,bk]
     pos = jk * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
-    s = jnp.where(pos < valid_len, s, NEG_INF)
+    valid = pos < valid_len
+    if window:
+        # sliding window over a linear cache: the query position is
+        # valid_len - 1, so only pos > valid_len - 1 - window contributes
+        valid &= pos > valid_len - 1 - window
+    s = jnp.where(valid, s, NEG_INF)
 
     m_prev = m_ref[...]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
@@ -56,14 +61,18 @@ def _decode_kernel(q_ref, k_ref, v_ref, len_ref, o_ref, m_ref, l_ref, acc_ref,
 
 
 def decode_attention_kernel(q, k, v, cache_len, *, bk: int = 512,
-                            group: int = 1, interpret: bool = False):
-    """q: [BH, d]; k, v: [BKV, T, d]; cache_len: [BKV] int32 -> [BH, dv]."""
+                            group: int = 1, window: int = 0,
+                            interpret: bool = False):
+    """q: [BH, d]; k: [BKV, T, d]; v: [BKV, T, dv]; cache_len: [BKV] int32
+    -> [BH, dv]. ``window`` > 0 masks cache positions more than ``window``
+    behind the query (linear caches; ring buffers pass window=0)."""
     BH, d = q.shape
     BKV, T, dv = v.shape
     nk = T // bk
     scale = 1.0 / math.sqrt(d)
 
-    kernel = functools.partial(_decode_kernel, scale=scale, bk=bk, nk=nk)
+    kernel = functools.partial(_decode_kernel, scale=scale, bk=bk, nk=nk,
+                               window=window)
     q3 = q[:, None, :]                                   # [BH, 1, d]
 
     out = pl.pallas_call(

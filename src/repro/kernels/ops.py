@@ -112,23 +112,28 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
     return jnp.moveaxis(out.reshape(B, H, Sq, dv), 1, 2)
 
 
-@partial(jax.jit, static_argnames=("bk", "interpret"))
-def decode_attention(q, k, v, cache_len, *, bk: int = 512,
+@partial(jax.jit, static_argnames=("window", "bk", "interpret"))
+def decode_attention(q, k, v, cache_len, *, window: int = 0, bk: int = 512,
                      interpret: bool = False):
-    """q: [B,1,H,dh]; k,v: [B,T,KV,dh]; cache_len: [B] -> [B,1,H,dh]."""
+    """q: [B,1,H,dh]; k: [B,T,KV,dh]; v: [B,T,KV,dv]; cache_len: [B]
+    -> [B,1,H,dv]. This is the ``decode_attn="pallas"`` registry op; dv may
+    differ from dh (MLA latent decode). ``window`` > 0 applies sliding-window
+    masking on a linear cache (ring-buffer callers pass window=0 — the
+    wrapped ``cache_len`` semantics already cover the ring)."""
     B, _, H, dh = q.shape
     T, KV = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
     group = H // KV
     bk = min(bk, T)
     qh = q[:, 0].reshape(B, H, dh).reshape(B * H, dh)
     kh = jnp.moveaxis(k, 2, 1).reshape(B * KV, T, dh)
-    vh = jnp.moveaxis(v, 2, 1).reshape(B * KV, T, dh)
+    vh = jnp.moveaxis(v, 2, 1).reshape(B * KV, T, dv)
     kh, _ = _pad_to(kh, 1, bk)
     vh, _ = _pad_to(vh, 1, bk)
     ln = jnp.repeat(cache_len, KV, axis=0)
     out = decode_attention_kernel(qh, kh, vh, ln, bk=bk, group=group,
-                                  interpret=interpret)
-    return out.reshape(B, 1, H, dh)
+                                  window=window, interpret=interpret)
+    return out.reshape(B, 1, H, dv)
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))

@@ -1,0 +1,157 @@
+"""Per-op kernel backend registry.
+
+One execution-plan choice per compute hot-spot, first-class in config
+(``ModelConfig.kernels``) instead of a single scattered ``attn_backend``
+flag:
+
+    op            "jnp" (reference)              "pallas" (fused TPU kernel)
+    ------------  -----------------------------  ------------------------------
+    train_attn    blockwise online-softmax VJP   ops.flash_attention custom_vjp
+    prefill_attn  blockwise forward              ops.flash_attention forward
+    decode_attn   models.attention jnp decode    ops.decode_attention
+    ssm_scan      chunked jnp GLA scan           ops.gla_scan (forward; the
+                                                 backward recomputes via the
+                                                 jnp scan)
+
+Off-TPU every Pallas op runs with ``interpret=True`` automatically
+(``ops.default_interpret``), so all four backends stay CPU-testable.
+
+``ModelConfig.attn_backend`` (and the ``--attn-backend`` CLI flag) survive
+as deprecated aliases: when ``cfg.kernels`` is unset, ``resolve`` populates
+``train_attn``/``prefill_attn`` from the alias.  New code should set
+``cfg.kernels`` (a :class:`KernelSpec`) directly.
+
+This module is dependency-light on purpose (no jax import): ``repro.configs``
+embeds :class:`KernelSpec` in ``ModelConfig`` without pulling in the Pallas
+tool-chain at config time.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from dataclasses import dataclass, replace
+from typing import Optional, Union
+
+KERNEL_OPS = ("train_attn", "prefill_attn", "decode_attn", "ssm_scan")
+KERNEL_BACKENDS = ("jnp", "pallas")
+
+
+@dataclass(frozen=True)
+class KernelSpec:
+    """Backend choice per kernel op; the value of ``ModelConfig.kernels``."""
+    train_attn: str = "jnp"
+    prefill_attn: str = "jnp"
+    decode_attn: str = "jnp"
+    ssm_scan: str = "jnp"
+
+    def validate(self) -> "KernelSpec":
+        for op in KERNEL_OPS:
+            b = getattr(self, op)
+            if b not in KERNEL_BACKENDS:
+                raise ValueError(
+                    f"kernels.{op}={b!r}; expected one of {KERNEL_BACKENDS}")
+        return self
+
+    def with_(self, **kw) -> "KernelSpec":
+        return replace(self, **kw)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def all(cls, backend: str) -> "KernelSpec":
+        return cls(**{op: backend for op in KERNEL_OPS}).validate()
+
+    @classmethod
+    def parse(cls, text: str) -> "KernelSpec":
+        """Parse a CLI value: either one backend for every op ("pallas") or a
+        comma list of op=backend pairs ("decode_attn=pallas,ssm_scan=jnp")."""
+        if "=" in (text or ""):
+            return cls(**coerce_ops(text)).validate()
+        return cls.all(text) if (text or "").strip() else cls()
+
+
+def coerce_ops(value: Union["KernelSpec", dict, str, None]) -> Optional[dict]:
+    """The per-op backend dict a user input EXPLICITLY names (so callers can
+    merge defaults — e.g. the attn_backend alias — into unnamed ops only).
+    KernelSpec names every op; dict/CLI-string name a subset; None -> None."""
+    if value is None:
+        return None
+    if isinstance(value, KernelSpec):
+        return value.validate().as_dict()
+    if isinstance(value, dict):
+        bad = set(value) - set(KERNEL_OPS)
+        if bad:
+            raise ValueError(f"unknown kernel ops {sorted(bad)}; "
+                             f"expected from {KERNEL_OPS}")
+        KernelSpec(**value).validate()
+        return dict(value)
+    if isinstance(value, str):
+        text = value.strip()
+        if not text:
+            return {}
+        if "=" not in text:
+            return KernelSpec.all(text).as_dict()
+        ops = {}
+        for item in text.split(","):
+            op, _, backend = item.partition("=")
+            ops[op.strip()] = backend.strip()
+        return coerce_ops(ops)
+    raise TypeError(f"cannot build a KernelSpec from {type(value).__name__}")
+
+
+def coerce(value: Union["KernelSpec", dict, str, None]) -> Optional["KernelSpec"]:
+    """Normalise user input (KernelSpec | dict | CLI string | None)."""
+    ops = coerce_ops(value)
+    return None if ops is None else KernelSpec(**ops).validate()
+
+
+def resolve(cfg) -> KernelSpec:
+    """The effective KernelSpec of a ModelConfig.
+
+    ``cfg.kernels`` wins when set; otherwise the deprecated
+    ``cfg.attn_backend`` alias populates the attention ops.  Raises
+    ``ValueError`` on any unknown backend — call this where you want to fail
+    fast (a typo would otherwise only surface mid-trace in a jitted step).
+    """
+    spec = getattr(cfg, "kernels", None)
+    if spec is None:
+        alias = getattr(cfg, "attn_backend", "jnp")
+        spec = KernelSpec(train_attn=alias, prefill_attn=alias)
+    return spec.validate()
+
+
+def backend_for(cfg, op: str) -> str:
+    if op not in KERNEL_OPS:
+        raise ValueError(f"unknown kernel op {op!r}")
+    return getattr(resolve(cfg), op)
+
+
+# ---------------------------------------------------------------------------
+# Attention phase: the full-sequence attention contraction is shared by the
+# training forward and the serve prefill, so model code cannot tell from its
+# arguments which registry op applies.  ``prefill_logits`` /
+# ``prefill_with_cache`` enter a prefill scope around their (trace-time)
+# body; everything else defaults to the train op.
+# ---------------------------------------------------------------------------
+
+_ATTN_PHASE = ["train_attn"]
+
+
+def attn_op() -> str:
+    """The registry op of the current full-sequence attention phase."""
+    return _ATTN_PHASE[-1]
+
+
+@contextlib.contextmanager
+def prefill_scope():
+    _ATTN_PHASE.append("prefill_attn")
+    try:
+        yield
+    finally:
+        _ATTN_PHASE.pop()
+
+
+def active_attn_backend(cfg) -> str:
+    """Backend of the current attention phase (train vs prefill)."""
+    return backend_for(cfg, attn_op())

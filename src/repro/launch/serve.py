@@ -1,14 +1,17 @@
-"""Serving launcher: prefill a batch of prompts, then batched decode.
+"""Serving launcher — a thin argparse shim over ``repro.engine.ServeEngine``.
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
-        --reduced --batch 4 --prompt-len 64 --gen 32 --host-devices 4
+        --reduced --batch 4 --prompt-len 64 --gen 32 --host-devices 4 \
+        [--kernels decode_attn=pallas]
+
+Prefill runs as ONE fused ``prefill_with_cache`` pass (prefill tok/s is
+reported alongside decode tok/s); enc-dec archs go through the public
+``models.encode``.
 """
 from __future__ import annotations
 
 import argparse
-import os
 import sys
-import time
 
 
 def main(argv=None):
@@ -18,6 +21,11 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--kernels", default=None,
+                    help="per-op kernel backends (see launch.train --help)")
+    ap.add_argument("--attn-backend", default=None,
+                    choices=["jnp", "pallas"],
+                    help="DEPRECATED alias: sets train_attn+prefill_attn")
     ap.add_argument("--mesh-data", type=int, default=2)
     ap.add_argument("--mesh-model", type=int, default=2)
     ap.add_argument("--host-devices", type=int, default=0)
@@ -25,67 +33,19 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    if args.host_devices:
-        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                                   f" --xla_force_host_platform_device_count={args.host_devices}").strip()
+    from repro.engine import RunSpec
+    spec = RunSpec(arch=args.arch, reduced=args.reduced,
+                   kernels=args.kernels, attn_backend=args.attn_backend,
+                   mesh_data=args.mesh_data, mesh_model=args.mesh_model,
+                   host_devices=args.host_devices, seed=args.seed)
+    spec.ensure_host_devices()          # before anything imports jax state
 
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
-    from repro.configs import get_config, get_reduced
-    from repro.launch.mesh import make_host_mesh
-    from repro.models import decode_step, init_cache, init_params
-    from repro.models import model as model_mod
-    from repro.data.synthetic import make_lm_data
-
-    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    mesh = make_host_mesh(args.mesh_data, args.mesh_model)
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
-
-    B = args.batch
-    cache_len = args.prompt_len + args.gen
-    toks = make_lm_data(cfg.vocab_size, B * args.prompt_len + 1, seed=args.seed)
-    prompts = jnp.asarray(
-        toks[:B * args.prompt_len].reshape(B, args.prompt_len) % cfg.vocab_size)
-
-    # prefill by teacher-forcing the prompt through decode_step (exercises the
-    # cache path end to end; a production server would use the fused prefill)
-    cache = init_cache(cfg, B, cache_len)
-    step = jax.jit(lambda p, b, c: decode_step(cfg, p, b, c))
-
-    if cfg.family == "encdec":
-        frames = jnp.zeros((B, max(1, args.prompt_len), cfg.encdec.frontend_dim),
-                           jnp.dtype(cfg.dtype))
-        memory = jax.jit(lambda p, f: model_mod._run_encoder(cfg, p, f))(params, frames)
-        cache["memory"] = jnp.zeros_like(cache["memory"]).at[:, :memory.shape[1]].set(
-            memory[:, :cache["memory"].shape[1]])
-
-    t0 = time.time()
-    logits = None
-    for i in range(args.prompt_len):
-        logits, cache = step(params, {"token": prompts[:, i]}, cache)
-    t_prefill = time.time() - t0
-
-    out = []
-    tok = jnp.argmax(logits, -1)
-    t0 = time.time()
-    for i in range(args.gen):
-        out.append(np.asarray(tok))
-        logits, cache = step(params, {"token": tok}, cache)
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits / args.temperature, -1)
-        else:
-            tok = jnp.argmax(logits, -1)
-    t_gen = time.time() - t0
-
-    gen = np.stack(out, 1)
-    print(f"prefill: {args.prompt_len} steps in {t_prefill:.2f}s; "
-          f"decode: {args.gen} tokens x batch {B} in {t_gen:.2f}s "
-          f"({B*args.gen/max(t_gen,1e-9):.1f} tok/s)")
-    for b in range(min(B, 2)):
-        print(f"  sample {b}: {gen[b][:16].tolist()}")
+    from repro.engine import ServeEngine
+    engine = ServeEngine(spec, batch=args.batch, prompt_len=args.prompt_len,
+                         gen=args.gen, temperature=args.temperature)
+    result = engine.generate()
+    for b in range(min(args.batch, 2)):
+        print(f"  sample {b}: {result['tokens'][b][:16].tolist()}")
     return 0
 
 

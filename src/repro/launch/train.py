@@ -1,18 +1,19 @@
-"""Training launcher.
+"""Training launcher — a thin argparse shim over ``repro.engine.TrainEngine``.
 
     PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
         --reduced --rule cdp_v2 --steps 100 --batch 8 --seq 128 \
-        --mesh-data 2 --mesh-model 2 [--host-devices 4] [--ckpt-dir ckpts/]
+        --mesh-data 2 --mesh-model 2 [--host-devices 4] [--ckpt-dir ckpts/] \
+        [--kernels pallas | --kernels decode_attn=pallas,ssm_scan=pallas]
 
 On the CPU container use --reduced + --host-devices; on a real TPU slice the
 same flags drive the production mesh (mesh sizes = the slice topology).
+``--attn-backend`` survives as a deprecated alias for
+``--kernels train_attn=...,prefill_attn=...``.
 """
 from __future__ import annotations
 
 import argparse
-import os
 import sys
-import time
 
 
 def main(argv=None):
@@ -21,11 +22,15 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--rule", default="cdp_v2",
                     choices=["dp", "cdp_v1", "cdp_v2", "cdp_random"])
+    ap.add_argument("--kernels", default=None,
+                    help="per-op kernel backends: one backend for all ops "
+                         "('pallas') or a comma list of op=backend pairs "
+                         "('decode_attn=pallas,ssm_scan=jnp'); ops: "
+                         "train_attn, prefill_attn, decode_attn, ssm_scan")
     ap.add_argument("--attn-backend", default=None,
                     choices=["jnp", "pallas"],
-                    help="train/prefill attention contraction (default: the "
-                         "arch config's attn_backend; pallas = fused "
-                         "fwd+bwd kernels, interpreter mode off-TPU)")
+                    help="DEPRECATED alias: sets train_attn+prefill_attn in "
+                         "the kernel registry")
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -43,73 +48,22 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    if args.host_devices:
-        os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
-                                   f" --xla_force_host_platform_device_count={args.host_devices}").strip()
+    from repro.engine import RunSpec
+    spec = RunSpec(arch=args.arch, reduced=args.reduced,
+                   kernels=args.kernels, attn_backend=args.attn_backend,
+                   mesh_data=args.mesh_data, mesh_model=args.mesh_model,
+                   mesh_pod=args.mesh_pod, host_devices=args.host_devices,
+                   seed=args.seed)
+    spec.ensure_host_devices()          # before anything imports jax state
 
-    import jax
-    import jax.numpy as jnp
-    import numpy as np
-    from repro import checkpoint as ckpt
-    from repro.configs import get_config, get_reduced
-    from repro.core.trainer import TrainerConfig, init_state, jit_train_step
-    from repro.data import ShardedLoader, lm_batch_iterator, make_lm_data
-    from repro.data.synthetic import synthetic_batch
-    from repro.launch.mesh import make_host_mesh
-    from repro.models import init_params
-    from repro.optim import sgd_momentum, cosine_warmup
-
-    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
-    if args.attn_backend:
-        cfg = cfg.with_(attn_backend=args.attn_backend)
-    mesh = make_host_mesh(args.mesh_data, args.mesh_model, args.mesh_pod)
-    print(f"mesh: {dict(mesh.shape)}  arch: {cfg.name}  rule: {args.rule}")
-
-    key = jax.random.PRNGKey(args.seed)
-    params = init_params(cfg, key)
-    n_params = sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
-    print(f"params: {n_params/1e6:.2f}M")
-
-    opt = sgd_momentum(args.momentum, args.weight_decay)
-    trainer = TrainerConfig(
-        rule=args.rule, pod_axis="pod" if args.mesh_pod else None,
-        lr_schedule=cosine_warmup(args.lr, args.steps // 10, args.steps))
-    state = init_state(cfg, trainer, params, opt)
-
-    tokens = make_lm_data(cfg.vocab_size, 200_000, seed=args.seed)
-    host_it = lm_batch_iterator(tokens, args.batch, args.seq, seed=args.seed)
-
-    def to_batch(hb):
-        b = {"tokens": jnp.asarray(hb["tokens"]),
-             "targets": jnp.asarray(hb["targets"])}
-        proto = synthetic_batch(cfg, type("S", (), {
-            "global_batch": args.batch, "seq_len": args.seq})())
-        for k in ("patches", "frames"):
-            if k in proto:
-                b[k] = proto[k]
-        return b
-
-    batch0 = to_batch(next(host_it))
-    jitted, ssh, bsh = jit_train_step(cfg, trainer, mesh, opt, state, batch0)
-
-    start_step = 0
-    if args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
-        state, start_step = ckpt.restore(args.ckpt_dir, state)
-        print(f"restored step {start_step}")
-
-    loader = ShardedLoader((to_batch(b) for b in host_it), bsh)
-    t0 = time.time()
-    for step in range(start_step, args.steps):
-        batch = next(loader)
-        state, metrics = jitted(state, batch)
-        if step % args.log_every == 0 or step == args.steps - 1:
-            loss = float(metrics["loss"])
-            print(f"step {step:5d}  loss {loss:.4f}  "
-                  f"lr {float(metrics['lr']):.4f}  "
-                  f"{(time.time()-t0):.1f}s", flush=True)
-        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-            ckpt.save(args.ckpt_dir, step + 1, state)
-    loader.close()
+    from repro.engine import TrainEngine
+    engine = TrainEngine(spec, rule=args.rule, steps=args.steps,
+                         batch=args.batch, seq=args.seq, lr=args.lr,
+                         momentum=args.momentum,
+                         weight_decay=args.weight_decay,
+                         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                         log_every=args.log_every)
+    engine.run()
     print("done.")
     return 0
 

@@ -1,6 +1,8 @@
 from repro.models.common import count_params
-from repro.models.model import (analytic_param_count, init_cache, init_params,
-                                loss_fn, prefill_logits, decode_step)
+from repro.models.model import (analytic_param_count, decode_step, encode,
+                                init_cache, init_params, loss_fn,
+                                prefill_logits, prefill_with_cache)
 
 __all__ = ["analytic_param_count", "init_cache", "init_params", "loss_fn",
-           "prefill_logits", "decode_step", "count_params"]
+           "prefill_logits", "prefill_with_cache", "encode", "decode_step",
+           "count_params"]

@@ -4,12 +4,14 @@ Prefill/train attention is computed **blockwise over the KV axis** with an
 online softmax (flash-attention structure in pure jnp) so that no [S, S]
 score tensor is ever materialised — required for the 32k prefill shapes.
 
-``blockwise_attention`` dispatches on the ``attn_backend`` config knob:
-the jnp path here is the reference/default, and ``backend="pallas"`` routes
-both forward and backward through the fused Pallas TPU kernels in
-``repro.kernels`` (``ops.flash_attention``'s custom_vjp — dq + dk/dv
-kernels), falling back to interpreter mode off-TPU. See the backend matrix
-in ROADMAP.md.
+``blockwise_attention`` dispatches on the per-op kernel backend registry
+(``repro.kernels.registry``; ``cfg.kernels``, with ``cfg.attn_backend`` as
+the deprecated alias): the jnp path here is the reference/default, and
+``backend="pallas"`` routes both forward and backward through the fused
+Pallas TPU kernels in ``repro.kernels`` (``ops.flash_attention``'s
+custom_vjp — dq + dk/dv kernels), falling back to interpreter mode off-TPU.
+Decode dispatches ``ops.decode_attention`` (flash-decode) the same way via
+the ``decode_attn`` op. See the backend matrix in ROADMAP.md.
 """
 from __future__ import annotations
 
@@ -20,6 +22,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.models.common import dense_init, split_dict
 from repro.models.layers import apply_rope
 
@@ -187,12 +190,20 @@ def blockwise_attention(q, k, v, *, causal: bool, window: int = 0,
     return out.reshape(B, Sq, H, dv).astype(q.dtype)
 
 
-def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0):
+def decode_attention(q, k_cache, v_cache, cache_len, *, window: int = 0,
+                     backend: str = "jnp"):
     """Single-token attention. q: [B,1,H,dh]; caches: [B,T,KV,dh/dv].
 
     ``cache_len``: [B] int32 — number of valid cache entries (the new token's
-    position is cache_len - 1 after insertion).
+    position is cache_len - 1 after insertion).  ``backend`` is the
+    ``decode_attn`` registry op: ``"pallas"`` dispatches the flash-decode
+    kernel (``ops.decode_attention``, interpreter mode off-TPU).
     """
+    if backend == "pallas":
+        from repro.kernels import ops
+        return ops.decode_attention(q, k_cache, v_cache, cache_len,
+                                    window=window,
+                                    interpret=ops.default_interpret())
     B, _, H, dh = q.shape
     T, KV = k_cache.shape[1], k_cache.shape[2]
     G = H // KV
@@ -242,8 +253,10 @@ def _project_qkv(p, cfg, x):
             v.reshape(B, S, KV, hd))
 
 
-def gqa_apply(p, cfg, x, positions, *, causal=True, window=None):
-    """Self-attention over x: [B,S,d]. positions: [B,S] or [S]."""
+def _gqa_attend(p, cfg, x, positions, *, causal, window):
+    """Shared project + rope + blockwise-attention body of apply/prefill.
+    Returns (ctx [B,S,H*dv], roped k, v) so prefill can cache k/v without
+    re-deriving them (one body — the numerics cannot diverge)."""
     B, S, _ = x.shape
     q, k, v = _project_qkv(p, cfg, x)
     if positions.ndim == 1:
@@ -252,10 +265,46 @@ def gqa_apply(p, cfg, x, positions, *, causal=True, window=None):
                    interleaved=cfg.rope_2d)
     k = apply_rope(k, positions, cfg.rope_theta, cfg.partial_rotary_factor,
                    interleaved=cfg.rope_2d)
+    out = blockwise_attention(q, k, v, causal=causal, window=window,
+                              backend=registry.active_attn_backend(cfg))
+    return out.reshape(B, S, -1), k, v
+
+
+def gqa_apply(p, cfg, x, positions, *, causal=True, window=None):
+    """Self-attention over x: [B,S,d]. positions: [B,S] or [S]."""
     win = cfg.attn_window if window is None else window
-    out = blockwise_attention(q, k, v, causal=causal, window=win,
-                              backend=cfg.attn_backend)
-    return out.reshape(B, S, -1) @ p["wo"]
+    ctx, _, _ = _gqa_attend(p, cfg, x, positions, causal=causal, window=win)
+    return ctx @ p["wo"]
+
+
+def gqa_prefill(p, cfg, x, positions, cache, *, window=None):
+    """Fused full-sequence prefill: ONE blockwise/flash attention pass over
+    the prompt that also fills the decode cache (rope'd k/v at every prompt
+    position) — replaces teacher-forcing the prompt through ``gqa_decode``
+    token by token. Returns (out [B,S,d], new_cache)."""
+    S = x.shape[1]
+    win = cfg.attn_window if window is None else window
+    ctx, k, v = _gqa_attend(p, cfg, x, positions, causal=True, window=win)
+    T = cache["k"].shape[1]
+    ring = bool(win) and win == T
+    new_cache = {"k": _prefill_fill(cache["k"], k, ring),
+                 "v": _prefill_fill(cache["v"], v, ring),
+                 "len": cache["len"] + S}
+    return ctx @ p["wo"], new_cache
+
+
+def _prefill_fill(buf, new, ring: bool):
+    """Write a [B,S,...] prefill projection into a [B,T,...] cache buffer,
+    preserving the decode-slot invariant (position p lives at slot p % T on
+    the ring, slot p otherwise)."""
+    T, S = buf.shape[1], new.shape[1]
+    new = new.astype(buf.dtype)
+    if S <= T:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, 0, axis=1)
+    if not ring:
+        raise ValueError(f"prompt length {S} exceeds cache length {T}")
+    # keep the last T positions; position p = S-T+i -> slot p % T = (i + S) % T
+    return jnp.roll(new[:, S - T:], S % T, axis=1)
 
 
 def gqa_decode(p, cfg, x, cache, *, window=None):
@@ -282,7 +331,8 @@ def gqa_decode(p, cfg, x, cache, *, window=None):
     v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot0, axis=1)
     new_len = cache["len"] + 1
     out = decode_attention(q, k_cache, v_cache, new_len,
-                           window=0 if ring else win)
+                           window=0 if ring else win,
+                           backend=registry.backend_for(cfg, "decode_attn"))
     new_cache = {"k": k_cache, "v": v_cache, "len": new_len}
     return out.reshape(B, 1, -1) @ p["wo"], new_cache
 
@@ -310,7 +360,7 @@ def cross_attn_apply(p, cfg, x, memory, memory_len=None):
     k = (memory @ p["wk"]).reshape(B, memory.shape[1], KV, hd)
     v = (memory @ p["wv"]).reshape(B, memory.shape[1], KV, hd)
     out = blockwise_attention(q, k, v, causal=False,
-                              backend=cfg.attn_backend)
+                              backend=registry.active_attn_backend(cfg))
     return out.reshape(B, S, -1) @ p["wo"]
 
 
@@ -363,8 +413,10 @@ def _mla_latent(p, cfg, x, positions):
     return c_kv, k_rope
 
 
-def mla_apply(p, cfg, x, positions):
-    """Training/prefill MLA: materialise per-head K/V from the latent."""
+def _mla_attend(p, cfg, x, positions):
+    """Shared materialised full-sequence MLA body of apply/prefill.
+    Returns (ctx [B,S,H*vd], c_kv, k_rope) so prefill can cache the
+    compressed latents without re-deriving them."""
     m = cfg.mla
     B, S, _ = x.shape
     H = cfg.num_heads
@@ -378,8 +430,28 @@ def mla_apply(p, cfg, x, positions):
     k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
                                                   q_rope.shape)], -1)
     out = blockwise_attention(q, k, v, causal=True, window=cfg.attn_window,
-                              backend=cfg.attn_backend)
-    return out.reshape(B, S, -1) @ p["wo"]
+                              backend=registry.active_attn_backend(cfg))
+    return out.reshape(B, S, -1), c_kv, k_rope
+
+
+def mla_apply(p, cfg, x, positions):
+    """Training/prefill MLA: materialise per-head K/V from the latent."""
+    ctx, _, _ = _mla_attend(p, cfg, x, positions)
+    return ctx @ p["wo"]
+
+
+def mla_prefill(p, cfg, x, positions, cache):
+    """Fused MLA prefill: the materialised full-sequence pass of
+    ``mla_apply`` plus a fill of the compressed (c_kv, k_rope) decode cache.
+    Returns (out [B,S,d], new_cache)."""
+    S = x.shape[1]
+    ctx, c_kv, k_rope = _mla_attend(p, cfg, x, positions)
+    T = cache["c_kv"].shape[1]
+    ring = bool(cfg.attn_window) and cfg.attn_window == T
+    new_cache = {"c_kv": _prefill_fill(cache["c_kv"], c_kv, ring),
+                 "k_rope": _prefill_fill(cache["k_rope"], k_rope, ring),
+                 "len": cache["len"] + S}
+    return ctx @ p["wo"], new_cache
 
 
 def mla_decode(p, cfg, x, cache):
@@ -409,13 +481,27 @@ def mla_decode(p, cfg, x, cache):
     # absorb W_UK into the query
     q_lat = jnp.einsum("bshn,rhn->bshr", q_nope, w_uk)   # [B,1,H,kvr]
     scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
-    s = (jnp.einsum("bshr,btr->bhst", q_lat, c_cache, preferred_element_type=jnp.float32)
-         + jnp.einsum("bshr,btr->bhst", q_rope, r_cache, preferred_element_type=jnp.float32)
-         ) * scale                                   # [B,H,1,T]
-    valid = jnp.arange(T)[None, None, None, :] < new_len[:, None, None, None]
-    s = jnp.where(valid, s, NEG_INF)
-    pattn = jax.nn.softmax(s, axis=-1)
-    ctx_lat = jnp.einsum("bhst,btr->bshr", pattn, c_cache.astype(jnp.float32))
+    if registry.backend_for(cfg, "decode_attn") == "pallas":
+        # flash-decode in the latent space: every head attends the SAME
+        # compressed cache, i.e. GQA with one kv "head" holding
+        # [c_kv | k_rope]. The kernel scales by 1/sqrt(d_cat); pre-scale q
+        # so the effective scale is the MLA 1/sqrt(nope+rope).
+        from repro.kernels import ops
+        d_cat = m.kv_lora_rank + m.qk_rope_head_dim
+        q_cat = jnp.concatenate([q_lat, q_rope], -1) * (math.sqrt(d_cat) * scale)
+        k_cat = jnp.concatenate([c_cache, r_cache], -1)[:, :, None, :]
+        v_lat = c_cache[:, :, None, :]               # [B,T,1,kvr]
+        ctx_lat = ops.decode_attention(q_cat.astype(x.dtype), k_cat, v_lat,
+                                       new_len,
+                                       interpret=ops.default_interpret())
+    else:
+        s = (jnp.einsum("bshr,btr->bhst", q_lat, c_cache, preferred_element_type=jnp.float32)
+             + jnp.einsum("bshr,btr->bhst", q_rope, r_cache, preferred_element_type=jnp.float32)
+             ) * scale                               # [B,H,1,T]
+        valid = jnp.arange(T)[None, None, None, :] < new_len[:, None, None, None]
+        s = jnp.where(valid, s, NEG_INF)
+        pattn = jax.nn.softmax(s, axis=-1)
+        ctx_lat = jnp.einsum("bhst,btr->bshr", pattn, c_cache.astype(jnp.float32))
     out = jnp.einsum("bshr,rhv->bshv", ctx_lat.astype(x.dtype), w_uv)
     out = out.reshape(B, 1, -1) @ p["wo"]
     return out, {"c_kv": c_cache, "k_rope": r_cache, "len": new_len}

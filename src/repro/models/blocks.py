@@ -107,6 +107,27 @@ def decoder_layer_decode(p, cfg, x, cache, *, use_moe: bool):
     return x + y, cache
 
 
+def decoder_layer_prefill(p, cfg, x, positions, cache, *, use_moe: bool):
+    """Fused full-sequence prefill of one decoder layer: the training-shaped
+    forward (blockwise/flash attention, dropless MoE) that also fills the
+    decode cache. Returns (x, new_cache)."""
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    if cfg.attn_kind == "mla":
+        a, cache = attn.mla_prefill(p["attn"], cfg, h, positions, cache)
+    else:
+        a, cache = attn.gqa_prefill(p["attn"], cfg, h, positions, cache)
+    x = x + a
+    h = apply_norm(cfg.norm, p["ln2"], x)
+    if use_moe:
+        B, S, d = h.shape
+        y, _ = moe_mod.moe_apply(p["ffn"], cfg, h.reshape(B * S, d),
+                                 drop=False)
+        y = y.reshape(B, S, d)
+    else:
+        y = apply_mlp(p["ffn"], h, cfg.act)
+    return x + y, cache
+
+
 def decoder_layer_cache_init(cfg, batch, cache_len, dtype):
     if cfg.attn_kind == "mla":
         return attn.mla_cache_init(cfg, batch, cache_len, dtype)
@@ -194,6 +215,16 @@ def xdec_layer_decode(p, cfg, x, cache, memory):
     return x + apply_mlp(p["ffn"], h, cfg.act), self_cache
 
 
+def xdec_layer_prefill(p, cfg, x, positions, cache, memory):
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    a, self_cache = attn.gqa_prefill(p["self"], cfg, h, positions, cache)
+    x = x + a
+    h = apply_norm(cfg.norm, p["ln_x"], x)
+    x = x + attn.cross_attn_apply(p["cross"], cfg, h, memory)
+    h = apply_norm(cfg.norm, p["ln2"], x)
+    return x + apply_mlp(p["ffn"], h, cfg.act), self_cache
+
+
 # ---------------------------------------------------------------------------
 # Hybrid (zamba2): mamba2 stack + ONE shared attention+MLP block
 # ---------------------------------------------------------------------------
@@ -222,6 +253,14 @@ def shared_attn_block_decode(p, cfg, x, cache):
     return x + apply_mlp(p["ffn"], h, cfg.act), cache
 
 
+def shared_attn_block_prefill(p, cfg, x, positions, cache):
+    h = apply_norm(cfg.norm, p["ln1"], x)
+    a, cache = attn.gqa_prefill(p["attn"], cfg, h, positions, cache)
+    x = x + a
+    h = apply_norm(cfg.norm, p["ln2"], x)
+    return x + apply_mlp(p["ffn"], h, cfg.act), cache
+
+
 def mamba_layer_init(key, cfg, dtype):
     ks = split_dict(key, ["m"])
     return {"ln": norm_init(cfg.norm, cfg.d_model, dtype),
@@ -237,6 +276,12 @@ def mamba_layer_apply(p, cfg, x):
 def mamba_layer_decode(p, cfg, x, cache):
     h = apply_norm(cfg.norm, p["ln"], x)
     y, cache = ssm_mod.mamba2_decode(p["mamba"], cfg, h, cache)
+    return x + y.astype(x.dtype), cache
+
+
+def mamba_layer_prefill(p, cfg, x, cache):
+    h = apply_norm(cfg.norm, p["ln"], x)
+    y, cache = ssm_mod.mamba2_prefill(p["mamba"], cfg, h, cache)
     return x + y.astype(x.dtype), cache
 
 
@@ -259,6 +304,12 @@ def mlstm_layer_apply(p, cfg, x):
 def mlstm_layer_decode(p, cfg, x, cache):
     h = apply_norm(cfg.norm, p["ln"], x)
     y, cache = ssm_mod.mlstm_decode(p["mlstm"], cfg, h, cache)
+    return x + y.astype(x.dtype), cache
+
+
+def mlstm_layer_prefill(p, cfg, x, cache):
+    h = apply_norm(cfg.norm, p["ln"], x)
+    y, cache = ssm_mod.mlstm_prefill(p["mlstm"], cfg, h, cache)
     return x + y.astype(x.dtype), cache
 
 

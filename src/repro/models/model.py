@@ -4,11 +4,23 @@ Public API (all pure functions of (cfg, params, ...)):
     init_params(cfg, key)               -> params pytree
     loss_fn(cfg, params, batch)         -> (loss, metrics)
     prefill_logits(cfg, params, batch)  -> last-position logits (+ cache-free)
+    prefill_with_cache(cfg, params, batch, cache)
+                                        -> (last-position logits, filled
+                                           decode cache) — ONE fused
+                                           full-sequence pass, no per-token
+                                           teacher forcing
+    encode(cfg, params, frames)         -> encoder memory (encdec archs)
     init_cache(cfg, batch, cache_len)   -> decode cache pytree
     decode_step(cfg, params, batch, cache) -> (logits [B,V], new cache)
     param_stage_ids(cfg, params, n_stages) -> pytree of int32 stage ids
                                            (broadcastable to each leaf; used
                                            by the CDP update rules)
+
+Full-sequence attention dispatches on the kernel-backend registry: the
+train path uses the ``train_attn`` op, ``prefill_logits`` /
+``prefill_with_cache`` enter ``registry.prefill_scope()`` so the same
+layer code resolves ``prefill_attn``; decode and the SSM scan read their
+own ops directly.
 """
 from __future__ import annotations
 
@@ -22,6 +34,7 @@ import numpy as np
 from repro.configs.base import (FAMILY_DENSE, FAMILY_ENCDEC, FAMILY_HYBRID,
                                 FAMILY_MOE, FAMILY_SSM, FAMILY_VLM,
                                 ModelConfig)
+from repro.kernels import registry
 from repro.models import blocks as B
 from repro.models import moe as moe_mod
 from repro.models import ssm as ssm_mod
@@ -231,6 +244,17 @@ def _run_encoder(cfg, params, frames):
     return apply_norm(cfg.norm, params["encoder"]["final_norm"], x)
 
 
+def encode(cfg: ModelConfig, params: PyTree, frames) -> jnp.ndarray:
+    """Public encoder forward for enc-dec archs: precomputed frame
+    embeddings [B, T_frames, frontend_dim] -> memory [B, T_frames, d_model].
+    Serving code uses this (under the prefill attention op) instead of
+    reaching into the private ``_run_encoder``."""
+    if cfg.family != FAMILY_ENCDEC:
+        raise ValueError(f"encode() is for encdec archs, not {cfg.family!r}")
+    with registry.prefill_scope():
+        return _run_encoder(cfg, params, frames)
+
+
 def forward(cfg: ModelConfig, params: PyTree, batch: Dict[str, Any]):
     """Full-sequence forward. Returns (logits [B,S,V], aux_loss, hidden)."""
     fam = cfg.family
@@ -312,32 +336,34 @@ def prefill_logits(cfg, params, batch):
     """Last-position logits only: the [B,S,V] logits tensor of a 32k prefill
     is tens of GiB, so the head matmul runs on the final hidden state."""
     fam = cfg.family
-    tokens = batch["tokens"]
-    x = _embed(cfg, params, tokens)
-    positions = jnp.arange(tokens.shape[1])
-    if fam == FAMILY_VLM:
-        v = cfg.vlm
-        pr = params["projector"]
-        pe = apply_norm("layernorm", pr["ln"], batch["patches"])
-        pe = jax.nn.gelu(pe @ pr["w1"]) @ pr["w2"]
-        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
-        positions = jnp.arange(x.shape[1])
-        h, _ = _run_decoder_stack(cfg, params, x, positions,
-                                  drop_tokens=False)
-    elif fam in (FAMILY_DENSE, FAMILY_MOE):
-        h, _ = _run_decoder_stack(cfg, params, x, positions,
-                                  drop_tokens=False)
-    elif fam == FAMILY_ENCDEC:
-        memory = _run_encoder(cfg, params, batch["frames"])
-        fn = lambda lp, hh: B.xdec_layer_apply(lp, cfg, hh, positions, memory)
-        h, _ = B.scan_layers(fn, params["blocks"]["xdec"], x)
-    elif fam == FAMILY_SSM:
-        h, _ = _run_ssm_stack(cfg, params, x)
-    elif fam == FAMILY_HYBRID:
-        h, _ = _run_hybrid_stack(cfg, params, x, positions)
-    else:
-        raise ValueError(fam)
-    return _head(cfg, params, h[:, -1:])[:, 0]
+    with registry.prefill_scope():
+        tokens = batch["tokens"]
+        x = _embed(cfg, params, tokens)
+        positions = jnp.arange(tokens.shape[1])
+        if fam == FAMILY_VLM:
+            v = cfg.vlm
+            pr = params["projector"]
+            pe = apply_norm("layernorm", pr["ln"], batch["patches"])
+            pe = jax.nn.gelu(pe @ pr["w1"]) @ pr["w2"]
+            x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+            positions = jnp.arange(x.shape[1])
+            h, _ = _run_decoder_stack(cfg, params, x, positions,
+                                      drop_tokens=False)
+        elif fam in (FAMILY_DENSE, FAMILY_MOE):
+            h, _ = _run_decoder_stack(cfg, params, x, positions,
+                                      drop_tokens=False)
+        elif fam == FAMILY_ENCDEC:
+            memory = _run_encoder(cfg, params, batch["frames"])
+            fn = lambda lp, hh: B.xdec_layer_apply(lp, cfg, hh, positions,
+                                                   memory)
+            h, _ = B.scan_layers(fn, params["blocks"]["xdec"], x)
+        elif fam == FAMILY_SSM:
+            h, _ = _run_ssm_stack(cfg, params, x)
+        elif fam == FAMILY_HYBRID:
+            h, _ = _run_hybrid_stack(cfg, params, x, positions)
+        else:
+            raise ValueError(fam)
+        return _head(cfg, params, h[:, -1:])[:, 0]
 
 
 # ---------------------------------------------------------------------------
@@ -475,6 +501,97 @@ def _decode_scan(layer_fn, stacked, caches, x):
         h, nc = layer_fn(lp, h, c)
         return h, nc
     return jax.lax.scan(body, x, (stacked, caches))
+
+
+# ---------------------------------------------------------------------------
+# Fused prefill: one full-sequence pass that fills the decode cache
+# ---------------------------------------------------------------------------
+
+def prefill_with_cache(cfg: ModelConfig, params: PyTree,
+                       batch: Dict[str, Any], cache: PyTree):
+    """Fused prefill from a FRESH ``init_cache`` pytree: one blockwise/flash
+    full-sequence forward per layer that also writes every layer's decode
+    state (KV / latent / recurrent), replacing the per-token teacher-forcing
+    loop. Returns (last-position logits [B,V], filled cache).
+
+    The attention contraction resolves the ``prefill_attn`` registry op; the
+    enc-dec memory is the EXACT encoder output (no zeros-padded splice — the
+    returned cache's memory shape follows the encoder, and decode re-traces
+    on it)."""
+    fam = cfg.family
+    with registry.prefill_scope():
+        tokens = batch["tokens"]
+        x = _embed(cfg, params, tokens)
+        positions = jnp.arange(tokens.shape[1])
+        blk = params["blocks"]
+        new_cache: Dict[str, Any] = {}
+
+        if fam == FAMILY_VLM:
+            pr = params["projector"]
+            pe = apply_norm("layernorm", pr["ln"], batch["patches"])
+            pe = jax.nn.gelu(pe @ pr["w1"]) @ pr["w2"]
+            x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+            positions = jnp.arange(x.shape[1])
+
+        if fam in (FAMILY_DENSE, FAMILY_MOE, FAMILY_VLM):
+            if "dense" in blk:
+                fn = lambda lp, h, c: B.decoder_layer_prefill(
+                    lp, cfg, h, positions, c, use_moe=False)
+                x, nc = _decode_scan(fn, blk["dense"], cache["dense"], x)
+                new_cache["dense"] = nc
+            if "moe" in blk:
+                fn = lambda lp, h, c: B.decoder_layer_prefill(
+                    lp, cfg, h, positions, c, use_moe=True)
+                x, nc = _decode_scan(fn, blk["moe"], cache["moe"], x)
+                new_cache["moe"] = nc
+            if cfg.mtp:
+                new_cache["mtp"] = cache["mtp"]
+        elif fam == FAMILY_ENCDEC:
+            memory = _run_encoder(cfg, params, batch["frames"])
+            fn = lambda lp, h, c: B.xdec_layer_prefill(lp, cfg, h, positions,
+                                                       c, memory)
+            x, nc = _decode_scan(fn, blk["xdec"], cache["self"], x)
+            new_cache = {"self": nc, "memory": memory}
+        elif fam == FAMILY_SSM:
+            if "periods" in blk:
+                def period_fn(h, inp):
+                    pp, pc = inp
+                    fn = lambda lp, hh, c: B.mlstm_layer_prefill(lp, cfg, hh, c)
+                    h, mlc = _decode_scan(fn, pp["mlstm"], pc["mlstm"], h)
+                    h, slc = B.slstm_layer_apply(pp["slstm"], cfg, h,
+                                                 pc["slstm"])
+                    return h, {"mlstm": mlc, "slstm": slc}
+                x, nc = jax.lax.scan(period_fn, x,
+                                     (blk["periods"], cache["periods"]))
+                new_cache = {"periods": nc}
+            else:
+                fn = lambda lp, h, c: B.mlstm_layer_prefill(lp, cfg, h, c)
+                x, nc = _decode_scan(fn, blk["mlstm"], cache["mlstm"], x)
+                new_cache = {"mlstm": nc}
+        elif fam == FAMILY_HYBRID:
+            shared = blk["shared"]
+
+            def period_fn(h, inp):
+                pp, pc_m, pc_a = inp
+                fn = lambda lp, hh, c: B.mamba_layer_prefill(lp, cfg, hh, c)
+                h, mc = _decode_scan(fn, pp, pc_m, h)
+                h, ac = B.shared_attn_block_prefill(shared, cfg, h,
+                                                    positions, pc_a)
+                return h, (mc, ac)
+
+            x, (mc, ac) = jax.lax.scan(
+                period_fn, x, (blk["mamba_main"], cache["mamba_main"],
+                               cache["shared"]))
+            new_cache = {"mamba_main": mc, "shared": ac}
+            if "mamba_tail" in blk:
+                fn = lambda lp, h, c: B.mamba_layer_prefill(lp, cfg, h, c)
+                x, tc = _decode_scan(fn, blk["mamba_tail"],
+                                     cache["mamba_tail"], x)
+                new_cache["mamba_tail"] = tc
+        else:
+            raise ValueError(fam)
+
+        return _head(cfg, params, x[:, -1:])[:, 0], new_cache
 
 
 # ---------------------------------------------------------------------------

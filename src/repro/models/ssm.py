@@ -5,7 +5,10 @@ scan (the "state-space duality" form of Mamba2 [arXiv:2405.21060] and the
 matrix-memory mLSTM [arXiv:2405.04517]): within a chunk the recurrence is a
 masked quadratic contraction (MXU-friendly), across chunks a short
 ``lax.scan`` carries the [dk, dv] state. ``repro.kernels.ssm_scan`` is the
-Pallas TPU kernel for the same contraction.
+Pallas TPU kernel for the same contraction, dispatched on the ``ssm_scan``
+kernel-registry op (``cfg.kernels``): the kernel runs the forward, and the
+backward recomputes through the jnp chunked scan (``_gla_pallas``'s
+custom_vjp) until the kernel pair grows its own VJP.
 
 Decode is the exact recurrent update: O(1) state per token — this is what
 makes the SSM/hybrid architectures eligible for the long_500k shape.
@@ -13,11 +16,13 @@ makes the SSM/hybrid architectures eligible for the long_500k shape.
 from __future__ import annotations
 
 import math
+from functools import partial
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import registry
 from repro.models.common import dense_init, split_dict
 from repro.models.layers import apply_norm, norm_init
 
@@ -80,6 +85,42 @@ def chunked_gla(q, k, v, g, state=None, chunk: int = 64):
     return y.astype(q.dtype), state
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _gla_pallas(q, k, v, g, chunk):
+    """Pallas-kernel forward of the zero-initial-state chunked GLA scan.
+
+    The kernel pair has no fused backward yet (ROADMAP item), so the VJP
+    recomputes gradients through the jnp ``chunked_gla`` — the two forwards
+    are numerically twin contractions, keeping train + eval on one path."""
+    from repro.kernels import ops
+    return ops.gla_scan(q, k, v, g, chunk=chunk,
+                        interpret=ops.default_interpret())
+
+
+def _gla_pallas_fwd(q, k, v, g, chunk):
+    return _gla_pallas(q, k, v, g, chunk), (q, k, v, g)
+
+
+def _gla_pallas_bwd(chunk, res, dy):
+    q, k, v, g = res
+    _, vjp = jax.vjp(lambda q, k, v, g: chunked_gla(q, k, v, g, chunk=chunk)[0],
+                     q, k, v, g)
+    return vjp(dy)
+
+
+_gla_pallas.defvjp(_gla_pallas_fwd, _gla_pallas_bwd)
+
+
+def _gla_forward(cfg, q, k, v, g, *, chunk: int):
+    """Full-sequence GLA forward (no initial/final state) dispatched on the
+    ``ssm_scan`` registry op. Stateful callers (prefill, chunk streaming) use
+    ``chunked_gla`` directly — the kernel does not return the final state."""
+    if registry.backend_for(cfg, "ssm_scan") == "pallas":
+        return _gla_pallas(q, k, v, g, chunk)
+    y, _ = chunked_gla(q, k, v, g, chunk=chunk)
+    return y
+
+
 def gla_decode_step(q, k, v, g, state):
     """One-token recurrent update. q,k: [B,H,dk]; v: [B,H,dv]; g: [B,H]."""
     a = jnp.exp(g.astype(jnp.float32))[..., None, None]
@@ -136,12 +177,15 @@ def _mamba2_proj(p, cfg, x):
     return x @ p["w_z"], x @ p["w_xbc"], x @ p["w_dt"], inner, H
 
 
-def mamba2_apply(p, cfg, x, state=None):
-    """x: [B,S,d] -> [B,S,d] (training/prefill path)."""
+def _mamba2_run(p, cfg, x, state, want_state: bool):
+    """Shared full-sequence Mamba2 body. Returns (out [B,S,d], final_state
+    or None, raw xBC projections) — apply/prefill are thin views of this so
+    their numerics can never diverge. ``want_state`` forces the jnp chunked
+    scan (the kernel does not return the final state)."""
     s = cfg.ssm
     B, S, d = x.shape
-    z, xbc, dt, inner, H = _mamba2_proj(p, cfg, x)
-    xbc = jax.nn.silu(_depthwise_conv(xbc, p["conv_w"], p["conv_b"]))
+    z, xbc_raw, dt, inner, H = _mamba2_proj(p, cfg, x)
+    xbc = jax.nn.silu(_depthwise_conv(xbc_raw, p["conv_w"], p["conv_b"]))
     xs = xbc[..., :inner].reshape(B, S, H, s.head_dim)
     Bmat = xbc[..., inner:inner + s.state_dim]               # [B,S,N] (1 group)
     Cmat = xbc[..., inner + s.state_dim:]
@@ -151,12 +195,33 @@ def mamba2_apply(p, cfg, x, state=None):
     kk = jnp.broadcast_to(Bmat[:, :, None, :], (B, S, H, s.state_dim))
     qq = jnp.broadcast_to(Cmat[:, :, None, :], (B, S, H, s.state_dim))
     vv = xs * dt[..., None].astype(xs.dtype)
-    y, _ = chunked_gla(qq, kk, vv, g, state=state, chunk=s.chunk)
+    if want_state or state is not None:
+        y, st = chunked_gla(qq, kk, vv, g, state=state, chunk=s.chunk)
+    else:
+        y, st = _gla_forward(cfg, qq, kk, vv, g, chunk=s.chunk), None
     y = y + xs * p["D"][None, None, :, None]
     y = y.reshape(B, S, inner)
     # gated RMSNorm (Mamba2 norm-before-out)
     y = apply_norm("rmsnorm", {"scale": p["norm"]}, y * jax.nn.silu(z))
-    return y @ p["out_proj"]
+    return y @ p["out_proj"], st, xbc_raw
+
+
+def mamba2_apply(p, cfg, x, state=None):
+    """x: [B,S,d] -> [B,S,d] (training/prefill path)."""
+    out, _, _ = _mamba2_run(p, cfg, x, state, want_state=False)
+    return out
+
+
+def mamba2_prefill(p, cfg, x, cache):
+    """Full-sequence prefill that also fills the recurrent decode cache:
+    final SSM state + the last conv_dim-1 raw xBC rows (the depthwise-conv
+    history ``mamba2_decode`` consumes). x: [B,S,d] from a FRESH cache."""
+    out, st, xbc_raw = _mamba2_run(p, cfg, x, cache["state"], want_state=True)
+    K1 = cache["conv"].shape[1]                       # conv_dim - 1
+    conv_hist = jnp.concatenate(
+        [cache["conv"], xbc_raw.astype(cache["conv"].dtype)], axis=1)[:, -K1:] \
+        if K1 else cache["conv"]
+    return out, {"state": st, "conv": conv_hist}
 
 
 def mamba2_cache_init(cfg, batch: int, dtype):
@@ -243,13 +308,30 @@ def _mlstm_readout(p, y_aug, z, inner):
     return y @ p["down"]
 
 
-def mlstm_apply(p, cfg, x, state=None):
+def _mlstm_run(p, cfg, x, state, want_state: bool):
+    """Shared full-sequence mLSTM body (see ``_mamba2_run``)."""
     s = cfg.ssm
     q, k, v, i_g, log_f, z, (inner, H, dk, dv) = _mlstm_qkvg(p, cfg, x)
     v_aug = jnp.concatenate([v, jnp.ones(v.shape[:-1] + (1,), v.dtype)], -1)
     k_in = k * i_g[..., None].astype(k.dtype)
-    y_aug, _ = chunked_gla(q, k_in, v_aug, log_f, state=state, chunk=s.chunk)
-    return _mlstm_readout(p, y_aug, z, inner)
+    if want_state or state is not None:
+        y_aug, st = chunked_gla(q, k_in, v_aug, log_f, state=state,
+                                chunk=s.chunk)
+    else:
+        y_aug, st = _gla_forward(cfg, q, k_in, v_aug, log_f,
+                                 chunk=s.chunk), None
+    return _mlstm_readout(p, y_aug, z, inner), st
+
+
+def mlstm_apply(p, cfg, x, state=None):
+    out, _ = _mlstm_run(p, cfg, x, state, want_state=False)
+    return out
+
+
+def mlstm_prefill(p, cfg, x, cache):
+    """Full-sequence prefill returning the matrix-memory decode state."""
+    out, st = _mlstm_run(p, cfg, x, cache["state"], want_state=True)
+    return out, {"state": st}
 
 
 def mlstm_cache_init(cfg, batch: int):

@@ -180,17 +180,20 @@ def cache_pspecs(cache: PyTree, mesh, data_axes=("data",),
     return jax.tree.map(spec_one, cache)
 
 
-def state_shardings(state: PyTree, params_sh: PyTree) -> PyTree:
-    """Optimizer state mirrors the parameter shardings; scalars replicated.
+def param_slot_keys(state: PyTree, params_like: PyTree) -> set:
+    """Optimizer-state entries that are params-shaped trees (momenta,
+    first/second moments, ...) — detected structurally against a
+    params-structured template, NOT a hardcoded key list, so a new
+    optimizer's slots shard correctly instead of silently replicating."""
+    pdef = jax.tree.structure(params_like)
+    return {k for k, v in state.items()
+            if jax.tree.structure(v) == pdef}
 
-    Works for the optimizers in repro.optim: keys "mom"/"m"/"v" are
-    params-shaped trees; anything else (e.g. "t") is a replicated scalar.
-    """
+
+def state_shardings(state: PyTree, params_sh: PyTree) -> PyTree:
+    """Optimizer state mirrors the parameter shardings; everything that is
+    not a params-shaped slot (step counters, scalars) is replicated."""
     mesh = jax.tree.leaves(params_sh)[0].mesh
-    out = {}
-    for k, v in state.items():
-        if k in ("mom", "m", "v"):
-            out[k] = params_sh
-        else:
-            out[k] = NamedSharding(mesh, P())
-    return out
+    slots = param_slot_keys(state, params_sh)
+    return {k: (params_sh if k in slots else NamedSharding(mesh, P()))
+            for k in state}
