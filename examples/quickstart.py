@@ -34,14 +34,16 @@ def main():
     SPEC.ensure_host_devices()          # before jax initialises devices
     from repro.engine import ServeEngine, TrainEngine
 
-    for rule in ("dp", "cdp_v1", "cdp_v2"):
-        engine = TrainEngine(SPEC, rule=rule, steps=40, batch=8, seq=64,
+    # the parallelism strategy is a one-line plan selection (repro.parallel
+    # registry: dp | cdp_v1 | cdp_v2 | cdp_random | zero1_ring | zero_cdp)
+    for plan in ("dp", "cdp_v1", "cdp_v2"):
+        engine = TrainEngine(SPEC, plan=plan, steps=40, batch=8, seq=64,
                              lr_schedule=lambda s: 0.05, donate=False,
                              log_every=1, verbose=False)
         engine.run()
         losses = [h["loss"] for h in engine.history]
-        print(f"{rule:7s}: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
-    print("All three rules train — the CDP delay is benign (paper Table 2).")
+        print(f"{plan:7s}: loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    print("All three plans train — the CDP delay is benign (paper Table 2).")
 
     serve = ServeEngine(SPEC, batch=4, prompt_len=32, gen=8)
     result = serve.generate()

@@ -21,7 +21,8 @@ def main():
     ap.add_argument("--steps", type=int, default=300)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
-    ap.add_argument("--rule", default="cdp_v2")
+    ap.add_argument("--plan", default="cdp_v2",
+                    help="parallelism plan (repro.parallel registry)")
     ap.add_argument("--ckpt-dir", default="/tmp/cdp_lm_ckpt")
     args = ap.parse_args()
 
@@ -30,7 +31,7 @@ def main():
     spec.ensure_host_devices()
     from repro.engine import TrainEngine
 
-    engine = TrainEngine(spec, rule=args.rule, steps=args.steps,
+    engine = TrainEngine(spec, plan=args.plan, steps=args.steps,
                          batch=args.batch, seq=args.seq, lr=0.05,
                          ckpt_dir=args.ckpt_dir, ckpt_every=100,
                          log_every=20, data_tokens=2_000_000)

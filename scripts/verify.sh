@@ -15,6 +15,11 @@ python -m repro.launch.train --arch stablelm-1.6b --reduced \
     --steps 3 --batch 2 --seq 16 --mesh-data 2 --mesh-model 1 \
     --host-devices 2 --log-every 1
 
+echo "=== engine smoke: 3-step ZeRO-CDP reduced train (--plan zero_cdp) ==="
+python -m repro.launch.train --arch stablelm-1.6b --reduced \
+    --plan zero_cdp --steps 3 --batch 4 --seq 16 --mesh-data 4 \
+    --mesh-model 1 --host-devices 4 --log-every 1
+
 echo "=== engine smoke: 4-token serve (ServeEngine, fused prefill) ==="
 python -m repro.launch.serve --arch stablelm-1.6b --reduced \
     --batch 2 --prompt-len 16 --gen 4 --mesh-data 2 --mesh-model 1 \

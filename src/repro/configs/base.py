@@ -3,6 +3,11 @@
 Every assigned architecture gets a module in this package exporting a
 ``CONFIG`` (the exact published numbers, cited) and a ``reduced()`` variant
 (same family, <=2 layers, d_model<=512, <=4 experts) used by CPU smoke tests.
+
+``ModelConfig`` is purely architectural plus the per-op kernel backend
+choice (``kernels``); the *parallelism* strategy (DP/CDP/ZeRO plans) is
+deliberately not a model property — it lives in ``repro.parallel`` and is
+selected per run on ``RunSpec``/``TrainerConfig``.
 """
 from __future__ import annotations
 

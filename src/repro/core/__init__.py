@@ -1,9 +1,25 @@
+"""Core CDP machinery: the schedule spec (numpy-only) and the SPMD trainer.
+
+The schedule symbols are re-exported eagerly (numpy-only, cheap); the
+trainer symbols lazily — importing this package must NOT pull in jax, so
+that ``repro.parallel`` (which reads the rule constants from
+``repro.core.schedule``) stays genuinely jax-free for launchers that list
+``--plan`` choices before device initialisation.
+"""
 from repro.core.schedule import (RULE_CDP_V1, RULE_CDP_V2, RULE_DP, RULES,
                                  cdp_phase, comm_events, dp_phase,
                                  fresh_threshold, table1, u_matrix)
-from repro.core.trainer import (TrainerConfig, init_state, jit_train_step,
-                                make_train_step)
 
 __all__ = ["RULE_CDP_V1", "RULE_CDP_V2", "RULE_DP", "RULES", "cdp_phase",
            "comm_events", "dp_phase", "fresh_threshold", "table1", "u_matrix",
            "TrainerConfig", "init_state", "jit_train_step", "make_train_step"]
+
+_TRAINER_EXPORTS = ("TrainerConfig", "init_state", "jit_train_step",
+                    "make_train_step")
+
+
+def __getattr__(name):
+    if name in _TRAINER_EXPORTS:
+        from repro.core import trainer
+        return getattr(trainer, name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

@@ -211,6 +211,28 @@ def zero1_layout(tree: PyTree, n: int, pspecs: PyTree) -> PyTree:
     return jax.tree.map(one, tree, pspecs)
 
 
+def sync_gradients(sync: str, tree: PyTree, axis_name: str, n: int,
+                   pspecs: PyTree = None,
+                   comm_dtype=jnp.float32) -> PyTree:
+    """Gradient-merge dispatch for ``repro.parallel`` plans.
+
+    ``psum`` -> the baseline all-reduce burst; ``ring`` -> the CDP balanced
+    point-to-point ring; ``zero1_ring`` -> per-leaf ring reduce-scatter
+    (returns data-sharded chunks whose layout ``zero1_layout`` describes).
+    ``stream`` never reaches here: ZeRO-CDP's gradient merge is the
+    transposed parameter ring itself (repro.parallel.zero_cdp).
+    """
+    if sync == "psum":
+        return psum_all_reduce(tree, axis_name)
+    if sync == "ring":
+        return ring_all_reduce(tree, axis_name, n, pspecs)
+    if sync == "zero1_ring":
+        chunks, _ = zero1_reduce_scatter(tree, axis_name, n, pspecs,
+                                         comm_dtype=comm_dtype)
+        return chunks
+    raise ValueError(f"no gradient-sync implementation for {sync!r}")
+
+
 def reduce_scatter_ring(vec, axis_name: str, n: int):
     """Ring reduce-scatter only: rank r returns reduced chunk (r+1)%n.
     Used by the ZeRO-CDP optimizer path (each rank updates only its shard)."""

@@ -14,9 +14,13 @@ step", with no collective broadcast. The backward pass is obtained by
 ``jax.grad`` through the ppermute chain (transposed automatically), giving
 the reverse point-to-point schedule.
 
-Implemented for a homogeneous stack of stages (stage = contiguous layer
-group folded into one callable). This is both a library feature and the
-paper-representative hillclimb target of §Perf.
+Implemented here for a homogeneous stack of stages (stage = contiguous
+layer group folded into one callable) — the minimal, schedule-exact
+SPECIFICATION of the streaming pattern, kept as the reference the tests
+check hop-by-hop. The production path — any registered architecture,
+stages partitioned from real parameter trees via ``models.model``'s stage
+ids, driven by ``--plan zero_cdp`` through ``RunSpec``/``TrainEngine`` —
+lives in ``repro.parallel.zero_cdp``.
 """
 from __future__ import annotations
 

@@ -1,10 +1,12 @@
 """RunSpec: the execution-plan half of a run, shared by both engines.
 
-One object owns the three things every launcher used to re-implement:
+One object owns the things every launcher used to re-implement:
 
   * config resolution  — arch-id lookup (full or reduced) or an explicit
     ``ModelConfig``, plus the kernel-backend registry (``kernels=``) with the
     deprecated ``attn_backend`` alias mapped onto it;
+  * plan resolution    — the parallelism strategy (``plan=``, a
+    ``repro.parallel`` registry name or ParallelPlan), validated fail-fast;
   * host-device forcing — the CPU-container ``--xla_force_host_platform_
     device_count`` dance, applied to the environment BEFORE jax initialises
     its backend;
@@ -36,6 +38,11 @@ class RunSpec:
     # "decode_attn=pallas,ssm_scan=jnp") | None (keep the config's choice)
     kernels: Union[KernelSpec, dict, str, None] = None
     attn_backend: Optional[str] = None    # DEPRECATED alias (train+prefill)
+    # parallelism strategy: a registered plan name ("dp", "cdp_v1", "cdp_v2",
+    # "cdp_random", "zero1_ring", "zero_cdp") or a repro.parallel.ParallelPlan
+    # object; None -> the engine default (cdp_v2). Resolved fail-fast by
+    # resolve_plan() exactly like kernels resolve through the kernel registry.
+    plan: Optional[Any] = None
     mesh_data: int = 2
     mesh_model: int = 2
     mesh_pod: int = 0
@@ -78,7 +85,27 @@ class RunSpec:
         registry.resolve(cfg)             # validates, incl. the alias path
         return cfg
 
+    # -- parallelism plan --------------------------------------------------
+
+    def resolve_plan(self, default: str = "cdp_v2"):
+        """The effective ParallelPlan (validated fail-fast: an unknown plan
+        name raises here, not mid-build). Jax-free, like the rest of
+        RunSpec resolution."""
+        from repro.parallel import resolve_plan
+        return resolve_plan(self.plan, default=default)
+
     # -- devices / mesh ----------------------------------------------------
+
+    def auto_host_devices(self) -> "RunSpec":
+        """``host_devices`` defaulted to the mesh size when unset and >1.
+        The XLA flag only multiplies CPU devices, so this is inert on an
+        accelerator machine while making any multi-rank mesh work out of
+        the box on the CPU container. Launch shims call this; explicit
+        ``host_devices`` always wins."""
+        if self.host_devices:
+            return self
+        need = self.mesh_data * self.mesh_model * max(self.mesh_pod, 1)
+        return self.with_(host_devices=need) if need > 1 else self
 
     def ensure_host_devices(self) -> None:
         """Force ``host_devices`` CPU devices via XLA_FLAGS. Must run before

@@ -5,8 +5,13 @@ this class, the examples drive it directly, and tests exercise
 checkpoint/resume equality through it.
 
     spec = RunSpec(arch="stablelm-1.6b", reduced=True, host_devices=4)
-    engine = TrainEngine(spec, rule="cdp_v2", steps=100, ckpt_dir="ckpts/")
+    engine = TrainEngine(spec, plan="zero_cdp", steps=100, ckpt_dir="ckpts/")
     engine.run()                       # resumes automatically from ckpt_dir
+
+The parallelism strategy is a ``repro.parallel`` plan (``plan=`` here or on
+the RunSpec): ``dp`` | ``cdp_v1`` | ``cdp_v2`` | ``cdp_random`` |
+``zero1_ring`` | ``zero_cdp``. ``rule=`` survives as an alias for the plan
+of the same name.
 
 Determinism contract: with a fixed RunSpec.seed the data stream is a pure
 function of the step index — on restore the engine fast-forwards the host
@@ -26,7 +31,8 @@ PyTree = Any
 
 class TrainEngine:
     def __init__(self, spec: RunSpec, *,
-                 rule: str = "cdp_v2",
+                 plan=None,                    # ParallelPlan | name | None
+                 rule: Optional[str] = None,   # alias: plan of the same name
                  steps: int = 100,
                  batch: int = 8,
                  seq: int = 128,
@@ -45,7 +51,23 @@ class TrainEngine:
                  verbose: bool = True):
         spec.ensure_host_devices()
         self.spec = spec
-        self.rule = rule
+        if plan is not None and rule is not None:
+            raise ValueError("pass plan= or rule= (alias), not both")
+        # precedence: trainer= override's plan > explicit plan > rule alias
+        # > spec.plan > cdp_v2; a bad name fails fast here, before any jax
+        # work (repro.parallel is jax-free, like RunSpec resolution)
+        if trainer is not None:
+            if plan is not None or rule is not None:
+                raise ValueError(
+                    "a trainer= override carries its own plan; do not also "
+                    "pass plan=/rule=")
+            self.plan = trainer.resolved_plan()
+        else:
+            from repro.parallel import resolve_plan
+            self.plan = resolve_plan(
+                plan if plan is not None else
+                (rule if rule is not None else spec.plan))
+        self.rule = self.plan.name            # back-compat: engine.rule
         self.steps = steps
         self.batch = batch
         self.seq = seq
@@ -71,6 +93,8 @@ class TrainEngine:
         self._built = False
         self._loader = None
         self._extras = None
+        self._hlo_text = None
+        self._step_exec = None        # AOT executable (set by hlo_text)
 
     # -- plumbing ----------------------------------------------------------
 
@@ -86,7 +110,7 @@ class TrainEngine:
         sched = self.lr_schedule or cosine_warmup(
             self.lr, max(1, self.steps // 10), self.steps)
         return TrainerConfig(
-            rule=self.rule,
+            plan=self.plan,
             pod_axis="pod" if self.spec.mesh_pod else None,
             lr_schedule=sched, donate=self.donate)
 
@@ -125,7 +149,8 @@ class TrainEngine:
 
         self.mesh = self.spec.build_mesh()
         self._log(f"mesh: {dict(self.mesh.shape)}  arch: {self.cfg.name}  "
-                  f"rule: {self.rule}")
+                  f"plan: {self.plan.name} (rule={self.plan.rule}, "
+                  f"sync={self.plan.sync}, placement={self.plan.placement})")
 
         params = init_params(self.cfg, jax.random.PRNGKey(self.spec.seed))
         n_params = sum(int(np.prod(p.shape))
@@ -135,13 +160,15 @@ class TrainEngine:
         self.opt = self.optimizer or sgd_momentum(self.momentum,
                                                   self.weight_decay)
         self.trainer = self._make_trainer_config()
-        self.state = init_state(self.cfg, self.trainer, params, self.opt)
+        self.state = init_state(self.cfg, self.trainer, params, self.opt,
+                                mesh=self.mesh)
 
         tokens = make_lm_data(self.cfg.vocab_size, self.data_tokens,
                               seed=self.spec.seed)
         self._host_it = lm_batch_iterator(tokens, self.batch, self.seq,
                                           seed=self.spec.seed)
         batch0 = self._to_batch(next(self._host_it))
+        self._batch0 = batch0
         self.step_fn, self.state_sh, self.batch_sh = jit_train_step(
             self.cfg, self.trainer, self.mesh, self.opt, self.state, batch0,
             self.custom_loss_fn)
@@ -170,6 +197,26 @@ class TrainEngine:
                 (self._to_batch(b) for b in self._host_it), self.batch_sh)
         return self._loader
 
+    def hlo_text(self) -> str:
+        """Optimized HLO of the compiled train step (builds if needed) —
+        feed to ``launch.roofline.parse_collectives`` to read the plan's
+        communication signature (all-reduce burst vs collective-permute
+        ring vs streamed stages) off the real program. The AOT executable
+        is kept and ``run()`` steps with it — call this BEFORE run() (the
+        demo/benchmark order) and the whole engine compiles exactly once;
+        after run() it costs one extra compile (the jit cache is not
+        shared), cached for repeat calls."""
+        if self._hlo_text is None:
+            import jax
+            self.build()
+            compiled = self.step_fn.lower(self.state, self._batch0).compile()
+            self._hlo_text = compiled.as_text()
+            # unlike jit dispatch, the AOT executable does not auto-place
+            # its inputs — commit the state to its shardings once
+            self.state = jax.device_put(self.state, self.state_sh)
+            self._step_exec = compiled
+        return self._hlo_text
+
     def close(self) -> None:
         if self._loader is not None:
             self._loader.close()
@@ -186,9 +233,11 @@ class TrainEngine:
         loader = self._get_loader()
         t0 = time.time()
         try:
+            step_fn = self._step_exec if self._step_exec is not None \
+                else self.step_fn
             for step in range(self.start_step, total):
                 batch = next(loader)
-                self.state, metrics = self.step_fn(self.state, batch)
+                self.state, metrics = step_fn(self.state, batch)
                 if step % self.log_every == 0 or step == total - 1:
                     rec = {"step": step,
                            "loss": float(metrics["loss"]),

@@ -145,10 +145,12 @@ def lower_pair(arch: str, shape_name: str, *, multi_pod: bool = False,
     else:
         opt = sgd_momentum(0.9, state_dtype=jnp.bfloat16
                            if analytic_param_count(cfg) > 5e10 else jnp.float32)
+        from repro.parallel import plan_from_legacy_flags
         trainer = TrainerConfig(
-            rule=rule, pod_axis="pod" if multi_pod else None,
+            plan=plan_from_legacy_flags(rule=rule, zero1_ring=zero1_ring),
+            pod_axis="pod" if multi_pod else None,
             lr_schedule=lambda s: 1e-2,
-            zero1_ring=zero1_ring, seq_parallel=seq_parallel,
+            seq_parallel=seq_parallel,
             grad_comm_dtype=grad_comm_dtype)
         step_fn, state_sh_fn, batch_sh_fn = make_train_step(
             cfg, trainer, mesh, opt)

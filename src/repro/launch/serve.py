@@ -38,6 +38,7 @@ def main(argv=None):
                    kernels=args.kernels, attn_backend=args.attn_backend,
                    mesh_data=args.mesh_data, mesh_model=args.mesh_model,
                    host_devices=args.host_devices, seed=args.seed)
+    spec = spec.auto_host_devices()     # CPU container: default to mesh size
     spec.ensure_host_devices()          # before anything imports jax state
 
     from repro.engine import ServeEngine

@@ -1,14 +1,19 @@
 """Training launcher — a thin argparse shim over ``repro.engine.TrainEngine``.
 
     PYTHONPATH=src python -m repro.launch.train --arch stablelm-1.6b \
-        --reduced --rule cdp_v2 --steps 100 --batch 8 --seq 128 \
+        --reduced --plan cdp_v2 --steps 100 --batch 8 --seq 128 \
         --mesh-data 2 --mesh-model 2 [--host-devices 4] [--ckpt-dir ckpts/] \
         [--kernels pallas | --kernels decode_attn=pallas,ssm_scan=pallas]
 
-On the CPU container use --reduced + --host-devices; on a real TPU slice the
-same flags drive the production mesh (mesh sizes = the slice topology).
-``--attn-backend`` survives as a deprecated alias for
-``--kernels train_attn=...,prefill_attn=...``.
+``--plan`` selects the parallelism strategy from the ``repro.parallel``
+registry (dp | cdp_v1 | cdp_v2 | cdp_random | zero1_ring | zero_cdp);
+``--rule`` survives as a deprecated alias for the plan of the same name,
+exactly as ``--attn-backend`` aliases ``--kernels``.
+
+On the CPU container use --reduced (+ --host-devices, auto-defaulted to the
+mesh size when the host platform is the default backend); on a real TPU
+slice the same flags drive the production mesh (mesh sizes = the slice
+topology; the host-device flag only multiplies CPU devices and is inert).
 """
 from __future__ import annotations
 
@@ -17,11 +22,18 @@ import sys
 
 
 def main(argv=None):
+    from repro.parallel import available_plans, plan_help
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--rule", default="cdp_v2",
-                    choices=["dp", "cdp_v1", "cdp_v2", "cdp_random"])
+    ap.add_argument("--plan", default=None, choices=available_plans(),
+                    help="parallelism strategy (repro.parallel registry). "
+                         + plan_help())
+    ap.add_argument("--rule", default=None,
+                    choices=["dp", "cdp_v1", "cdp_v2", "cdp_random"],
+                    help="DEPRECATED alias: selects the plan of the same "
+                         "name (use --plan)")
     ap.add_argument("--kernels", default=None,
                     help="per-op kernel backends: one backend for all ops "
                          "('pallas') or a comma list of op=backend pairs "
@@ -41,23 +53,34 @@ def main(argv=None):
     ap.add_argument("--mesh-model", type=int, default=2)
     ap.add_argument("--mesh-pod", type=int, default=0)
     ap.add_argument("--host-devices", type=int, default=0,
-                    help="force N host CPU devices (CPU container only)")
+                    help="force N host CPU devices (0 = auto: the mesh size "
+                         "when >1; inert when an accelerator is the default "
+                         "jax backend)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
+    if args.plan and args.rule:
+        ap.error("pass --plan or --rule (deprecated alias), not both")
+    if args.rule:
+        import warnings
+        warnings.warn(f"--rule is deprecated; use --plan {args.rule}",
+                      DeprecationWarning, stacklevel=2)
+
     from repro.engine import RunSpec
     spec = RunSpec(arch=args.arch, reduced=args.reduced,
                    kernels=args.kernels, attn_backend=args.attn_backend,
+                   plan=args.plan or args.rule,
                    mesh_data=args.mesh_data, mesh_model=args.mesh_model,
                    mesh_pod=args.mesh_pod, host_devices=args.host_devices,
                    seed=args.seed)
+    spec = spec.auto_host_devices()     # CPU container: default to mesh size
     spec.ensure_host_devices()          # before anything imports jax state
 
     from repro.engine import TrainEngine
-    engine = TrainEngine(spec, rule=args.rule, steps=args.steps,
+    engine = TrainEngine(spec, steps=args.steps,
                          batch=args.batch, seq=args.seq, lr=args.lr,
                          momentum=args.momentum,
                          weight_decay=args.weight_decay,

@@ -1,0 +1,21 @@
+"""Parallelism strategies as first-class plans.
+
+``ParallelPlan`` + the strategy registry (``dp``, ``cdp_v1``, ``cdp_v2``,
+``cdp_random``, ``zero1_ring``, ``zero_cdp``) live in ``plan`` (jax-free so
+launchers can enumerate ``--plan`` choices before device init); the
+ZeRO-CDP stage-streaming execution path lives in ``zero_cdp`` (imported
+lazily by the trainer — do not import it here).
+"""
+from repro.parallel.plan import (PLACE_REPLICATED, PLACE_STAGE_SHARDED,
+                                 PLACE_ZERO1, PLAN_REGISTRY, SYNC_PSUM,
+                                 SYNC_RING, SYNC_STREAM, SYNC_ZERO1_RING,
+                                 ParallelPlan, available_plans, get_plan,
+                                 plan_from_legacy_flags, plan_help,
+                                 register_plan, resolve_plan)
+
+__all__ = [
+    "ParallelPlan", "PLAN_REGISTRY", "available_plans", "get_plan",
+    "plan_from_legacy_flags", "plan_help", "register_plan", "resolve_plan",
+    "SYNC_PSUM", "SYNC_RING", "SYNC_STREAM", "SYNC_ZERO1_RING",
+    "PLACE_REPLICATED", "PLACE_ZERO1", "PLACE_STAGE_SHARDED",
+]

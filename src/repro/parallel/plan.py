@@ -1,0 +1,236 @@
+"""First-class parallelism plans: the paper's *choice of schedule* as one
+composable object instead of a soup of ``TrainerConfig`` flags.
+
+A :class:`ParallelPlan` names the three decisions every strategy in the
+paper makes:
+
+  * ``rule``      — the u_{i,j} update rule (which theta each micro-batch
+                    differentiates at): ``dp`` | ``cdp_v1`` | ``cdp_v2`` |
+                    ``cdp_random`` (see ``repro.core.schedule``);
+  * ``sync``      — the gradient-merge / parameter-movement implementation:
+                    ``psum`` (baseline all-reduce burst), ``ring`` (the CDP
+                    balanced point-to-point ring), ``zero1_ring`` (ring
+                    reduce-scatter + sharded optimizer + param all-gather),
+                    ``stream`` (ZeRO-CDP stage streaming, Sec. 4.4);
+  * ``placement`` — where parameters/optimizer state live: ``replicated``,
+                    ``zero1`` (data-sharded optimizer slots), or
+                    ``stage_sharded`` (each rank persistently owns one
+                    layer-group stage — the ZeRO memory layout).
+
+The registry maps strategy names to plans exactly the way
+``repro.kernels.registry`` maps op names to kernel backends; the deprecated
+``TrainerConfig`` flags (``rule=``, ``ring_grads=``, ``zero1_ring=``,
+``zero_axis=``) resolve onto a plan via :func:`plan_from_legacy_flags`, the
+same pattern ``attn_backend`` uses for the kernel registry.
+
+This module is dependency-light on purpose (no jax import): launchers list
+``available_plans()`` for ``--plan`` help before jax initialises devices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, replace
+from typing import Dict, Optional, Tuple, Union
+
+from repro.core.schedule import (ALL_RULES, RULE_CDP_RANDOM, RULE_CDP_V1,
+                                 RULE_CDP_V2, RULE_DP)
+
+# Gradient-sync / parameter-movement implementations (owned by
+# repro.core.grad_sync and repro.parallel.zero_cdp).
+SYNC_PSUM = "psum"
+SYNC_RING = "ring"
+SYNC_ZERO1_RING = "zero1_ring"
+SYNC_STREAM = "stream"
+SYNCS = (SYNC_PSUM, SYNC_RING, SYNC_ZERO1_RING, SYNC_STREAM)
+
+# Parameter / optimizer-state placement.
+PLACE_REPLICATED = "replicated"
+PLACE_ZERO1 = "zero1"
+PLACE_STAGE_SHARDED = "stage_sharded"
+PLACEMENTS = (PLACE_REPLICATED, PLACE_ZERO1, PLACE_STAGE_SHARDED)
+
+# Rules the single-stream ZeRO-CDP path supports: ``cdp_v1`` (every stage
+# one step stale — the delay the cyclic parameter rotation induces) and
+# ``dp`` (no staleness; streaming becomes a point-to-point re-materialise
+# of theta_t). ``cdp_v2``'s per-rank fresh/stale mix would need BOTH
+# parameter versions on the ring (2x volume) — not implemented.
+STREAM_RULES = (RULE_DP, RULE_CDP_V1)
+
+
+@dataclass(frozen=True)
+class ParallelPlan:
+    """One parallelism strategy: update rule + gradient sync + placement.
+
+    ``zero_axis`` optionally names a mesh axis over which large 2D weights
+    are additionally FSDP-sharded (GSPMD inserts the per-layer all-gathers).
+    ``n_stages`` optionally pins the ZeRO-CDP stage count: the stage ring is
+    always the data axis (chunk storage is sharded over it), so a non-zero
+    pin is a fail-fast assertion in :meth:`validate_mesh`, not a resize.
+    """
+    name: str
+    rule: str = RULE_CDP_V2
+    sync: str = SYNC_RING
+    placement: str = PLACE_REPLICATED
+    zero_axis: Optional[str] = None
+    n_stages: int = 0
+    min_data: int = 1
+    description: str = ""
+
+    def with_(self, **kw) -> "ParallelPlan":
+        return replace(self, **kw).validate()
+
+    def validate(self) -> "ParallelPlan":
+        if self.rule not in ALL_RULES:
+            raise ValueError(
+                f"plan {self.name!r}: unknown rule {self.rule!r}; "
+                f"one of {ALL_RULES}")
+        if self.sync not in SYNCS:
+            raise ValueError(
+                f"plan {self.name!r}: unknown sync {self.sync!r}; "
+                f"one of {SYNCS}")
+        if self.placement not in PLACEMENTS:
+            raise ValueError(
+                f"plan {self.name!r}: unknown placement {self.placement!r}; "
+                f"one of {PLACEMENTS}")
+        if (self.sync == SYNC_STREAM) != (self.placement == PLACE_STAGE_SHARDED):
+            raise ValueError(
+                f"plan {self.name!r}: stage streaming and stage-sharded "
+                "placement imply each other (sync='stream' <-> "
+                "placement='stage_sharded')")
+        if (self.sync == SYNC_ZERO1_RING) != (self.placement == PLACE_ZERO1):
+            raise ValueError(
+                f"plan {self.name!r}: the ZeRO-1 ring implies zero1 "
+                "placement (sync='zero1_ring' <-> placement='zero1')")
+        if self.sync == SYNC_STREAM and self.rule not in STREAM_RULES:
+            raise ValueError(
+                f"plan {self.name!r}: ZeRO-CDP parameter streaming supports "
+                f"rule in {STREAM_RULES} (cdp_v2 would need both parameter "
+                "versions on the ring)")
+        if self.placement == PLACE_STAGE_SHARDED and self.zero_axis:
+            raise ValueError(
+                f"plan {self.name!r}: zero_axis has no effect on a "
+                "stage-sharded plan (params AND optimizer state are already "
+                "fully sharded over the data axis)")
+        return self
+
+    def validate_mesh(self, mesh, data_axis: str = "data",
+                      pod_axis: Optional[str] = None) -> "ParallelPlan":
+        """Fail fast on a plan/mesh mismatch (before any tracing)."""
+        n = mesh.shape[data_axis]
+        if n < self.min_data:
+            raise ValueError(
+                f"plan {self.name!r} needs a {data_axis!r} axis of >= "
+                f"{self.min_data} (got {n}); stage cycling degenerates on a "
+                "single rank")
+        if self.placement == PLACE_STAGE_SHARDED:
+            if self.n_stages and self.n_stages != n:
+                raise ValueError(
+                    f"plan {self.name!r}: n_stages={self.n_stages} must "
+                    f"equal the {data_axis!r} axis size {n} (stage chunks "
+                    "are sharded over it)")
+            if pod_axis:
+                raise ValueError(
+                    f"plan {self.name!r} does not compose with a pod axis "
+                    "yet (the stage ring spans exactly the data axis)")
+        return self
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+PLAN_REGISTRY: Dict[str, ParallelPlan] = {}
+
+
+def register_plan(plan: ParallelPlan) -> ParallelPlan:
+    PLAN_REGISTRY[plan.name] = plan.validate()
+    return plan
+
+
+def available_plans() -> Tuple[str, ...]:
+    return tuple(sorted(PLAN_REGISTRY))
+
+
+def get_plan(name: str) -> ParallelPlan:
+    if name not in PLAN_REGISTRY:
+        raise ValueError(
+            f"unknown parallel plan {name!r}; one of {available_plans()}")
+    return PLAN_REGISTRY[name]
+
+
+def resolve_plan(value: Union[ParallelPlan, str, None],
+                 default: str = RULE_CDP_V2) -> ParallelPlan:
+    """Normalise user input (plan object | registered name | None)."""
+    if value is None:
+        return get_plan(default)
+    if isinstance(value, ParallelPlan):
+        return value.validate()
+    if isinstance(value, str):
+        return get_plan(value)
+    raise TypeError(
+        f"cannot resolve a ParallelPlan from {type(value).__name__}")
+
+
+def plan_from_legacy_flags(rule: Optional[str] = None,
+                           ring_grads: Optional[bool] = None,
+                           zero1_ring: Optional[bool] = None,
+                           zero_axis: Optional[str] = None) -> ParallelPlan:
+    """The plan the deprecated ``TrainerConfig`` flag combination meant.
+
+    Mirrors the pre-plan dispatch exactly: ``zero1_ring`` wins over the
+    merge choice; ``rule='dp'`` or ``ring_grads=False`` collapse the ring
+    to the psum all-reduce; everything else rides the CDP ring.
+    """
+    rule = rule or RULE_CDP_V2
+    if zero1_ring:
+        base = get_plan("zero1_ring").with_(rule=rule)
+    elif rule == RULE_DP or ring_grads is False:
+        base = get_plan(rule) if rule == RULE_DP else ParallelPlan(
+            name=f"{rule}+psum", rule=rule, sync=SYNC_PSUM,
+            description=f"{rule} update rule, collective all-reduce merge")
+    else:
+        base = get_plan(rule)
+    if zero_axis:
+        base = base.with_(zero_axis=zero_axis)
+    return base.validate()
+
+
+# ---------------------------------------------------------------------------
+# The paper's strategies (Table 1 rows that map onto pure data parallelism)
+# ---------------------------------------------------------------------------
+
+register_plan(ParallelPlan(
+    name="dp", rule=RULE_DP, sync=SYNC_PSUM,
+    description="baseline Data Parallelism: every rank differentiates at "
+                "theta_t; one all-reduce burst merges gradients"))
+register_plan(ParallelPlan(
+    name="cdp_v1", rule=RULE_CDP_V1, sync=SYNC_RING,
+    description="CDP-v1: all stages differentiate at theta_{t-1}; gradients "
+                "merge on the point-to-point ring"))
+register_plan(ParallelPlan(
+    name="cdp_v2", rule=RULE_CDP_V2, sync=SYNC_RING,
+    description="CDP-v2 (paper default): stage-wise theta_t/theta_{t-1} mix "
+                "per u_{i,j}; ring gradient merge"))
+register_plan(ParallelPlan(
+    name="cdp_random", rule=RULE_CDP_RANDOM, sync=SYNC_RING,
+    description="beyond-paper: per-step random freshness threshold between "
+                "cdp_v2 and cdp_v1; ring merge"))
+register_plan(ParallelPlan(
+    name="zero1_ring", rule=RULE_CDP_V2, sync=SYNC_ZERO1_RING,
+    placement=PLACE_ZERO1,
+    description="ring reduce-scatter + data-sharded optimizer state + "
+                "parameter all-gather (ZeRO-1 on the CDP ring)"))
+register_plan(ParallelPlan(
+    name="zero_cdp", rule=RULE_CDP_V1, sync=SYNC_STREAM,
+    placement=PLACE_STAGE_SHARDED, min_data=2,
+    description="ZeRO-CDP (paper Sec. 4.4): parameters stage-sharded over "
+                "the data axis, streamed point-to-point with "
+                "collective-permute instead of the ZeRO-DP all-gather; "
+                "gradient chunks return to their owner rank through the "
+                "transposed ring"))
+
+
+def plan_help() -> str:
+    """One line per registered plan (CLI ``--plan`` help text)."""
+    return "; ".join(f"{n}: {PLAN_REGISTRY[n].description}"
+                     for n in available_plans())

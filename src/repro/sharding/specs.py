@@ -157,6 +157,15 @@ def batch_sharding(batch: PyTree, mesh, data_axes=("data",)) -> PyTree:
     return jax.tree.map(shard_one, batch)
 
 
+def batch_manual_pspecs(batch: PyTree, data_axes=("data",)) -> PyTree:
+    """Per-leaf specs for a batch entering a shard_map manual over the data
+    axes: leading dim sharded, scalars replicated (shared by the tree-layout
+    trainer and the ZeRO-CDP stage-streaming step)."""
+    ax = tuple(data_axes) if len(data_axes) > 1 else data_axes[0]
+    return jax.tree.map(
+        lambda x: P(ax) if getattr(x, "ndim", 0) else P(), batch)
+
+
 def cache_pspecs(cache: PyTree, mesh, data_axes=("data",),
                  model_axis="model", batch: Optional[int] = None) -> PyTree:
     """KV/state caches: shard the batch dim over data. Caches may be stacked
@@ -178,6 +187,38 @@ def cache_pspecs(cache: PyTree, mesh, data_axes=("data",),
                 break
         return NamedSharding(mesh, P(*spec))
     return jax.tree.map(spec_one, cache)
+
+
+# ---------------------------------------------------------------------------
+# Plan placements (repro.parallel): ZeRO-1 slots and ZeRO-CDP stage chunks
+# ---------------------------------------------------------------------------
+
+def zero1_param_pspecs(params: PyTree, mesh, data_axis: str = "data",
+                       model_axis: str = "model",
+                       zero_axis=None) -> PyTree:
+    """Param pspecs with the data axis inserted at each leaf's ring slice
+    axis — the layout of reduce-scattered grads and ZeRO-1 optimizer state
+    (``placement='zero1'``)."""
+    from repro.core import grad_sync
+    gps = param_pspecs(params, mesh, model_axis, zero_axis)
+    n = mesh.shape[data_axis]
+    layout = grad_sync.zero1_layout(params, n, gps)
+
+    def one(leaf, spec, ax):
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        if ax >= 0:
+            entries[ax] = data_axis
+        return P(*entries)
+    return jax.tree.map(one, params, gps, layout)
+
+
+def stage_chunk_shardings(tree: PyTree, mesh,
+                          data_axis: str = "data") -> PyTree:
+    """ZeRO-CDP placement (``placement='stage_sharded'``): every leaf is a
+    [n_stages, chunk] stack of per-stage parameter chunks, stage j resident
+    on data-rank j."""
+    return jax.tree.map(
+        lambda _: NamedSharding(mesh, P(data_axis, None)), tree)
 
 
 def param_slot_keys(state: PyTree, params_like: PyTree) -> set:
