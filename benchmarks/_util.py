@@ -1,0 +1,24 @@
+"""Shared benchmark plumbing: the compile-then-average timing loop and the
+artifact directory, so every bench module measures the same way (a change
+here — warmup, donation — moves all of them in lockstep, keeping the
+cross-bench ratios in BENCH_kernels.json comparable)."""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def time_us(fn, *args, iters: int = 3):
+    """us/call of ``fn(*args)``: one untimed call to compile, then the mean
+    of ``iters`` blocked calls."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) * 1e6 / iters

@@ -26,7 +26,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+from benchmarks._util import ARTIFACTS, time_us
 
 # B, T (cache len), H, KV, dh — decode-shaped (one query token)
 KERNEL_SHAPES = [
@@ -34,16 +34,6 @@ KERNEL_SHAPES = [
     (16, 512, 8, 8, 64),
 ]
 ITERS = 10
-
-
-def _time(fn, *args):
-    out = fn(*args)                                    # compile
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    for _ in range(ITERS):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) * 1e6 / ITERS    # us/call
 
 
 def run():
@@ -69,7 +59,7 @@ def run():
                 q, k, v, cl, interpret=interpret)),
         }
         for name, fn in backends.items():
-            us = _time(fn, q, k, v, cl)
+            us = time_us(fn, q, k, v, cl, iters=ITERS)
             tok_s = B / (us * 1e-6)
             records.append({
                 "level": "kernel", "backend": name, "shape": tag,

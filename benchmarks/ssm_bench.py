@@ -1,0 +1,107 @@
+"""ssm_scan micro-benchmark: fwd and fwd+bwd wall-clock for both
+``ssm_scan`` backends ("jnp" chunked GLA scan vs the Pallas kernel pair
+``ops.gla_scan``), plus a structural check that the Pallas backward is the
+fused single-pass reverse chunk-scan.
+
+The ``single_pass_bwd`` field is derived from the traced gradient: the
+pallas path must contain exactly two pallas_calls (forward-with-checkpoints
++ reverse scan) and NO ``lax.scan`` — i.e. the backward never recomputes
+through the jnp chunked scan. That property is what drops two full
+forwards per training step on mLSTM/Mamba2/hybrid architectures.
+
+Writes ``benchmarks/artifacts/ssm_bench.json`` and yields rows in the
+``name,us_per_call,derived`` CSV convention of ``benchmarks/run.py``.
+Off-TPU the Pallas rows run in interpreter mode (tagged ``"interpret":
+true``) — correct but slow; never mistake them for kernel timings.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._util import ARTIFACTS, time_us
+
+# B, S, H, dk, dv, chunk — mLSTM/Mamba2-ish training shapes
+SHAPES = [
+    (1, 2048, 4, 64, 64, 64),
+    (2, 1024, 4, 32, 64, 64),
+]
+
+
+def _gla_flops(B, S, H, dk, dv, chunk, *, bwd=False):
+    """Matmul MACs of the chunked scan per position: [Q,Q] scores (dk) +
+    intra output (dv) + inter readout and state update (2*dk*dv);
+    the fused backward re-does the contractions ~3x."""
+    f = 2 * B * H * S * (chunk * (dk + dv) + 2 * dk * dv)
+    return int(f * 3) if bwd else int(f)
+
+
+def run():
+    from repro.kernels import ops
+    from repro.models.ssm import chunked_gla
+
+    interpret = ops.default_interpret()
+    records, rows = [], []
+    for B, S, H, dk, dv, chunk in SHAPES:
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        q = jax.random.normal(ks[0], (B, S, H, dk), jnp.float32)
+        k = jax.random.normal(ks[1], (B, S, H, dk), jnp.float32) * 0.3
+        v = jax.random.normal(ks[2], (B, S, H, dv), jnp.float32)
+        g = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+        dy = jax.random.normal(ks[4], (B, S, H, dv), jnp.float32)
+        tag = f"b{B}s{S}h{H}dk{dk}dv{dv}c{chunk}"
+
+        backends = {
+            "jnp": jax.jit(lambda q, k, v, g: chunked_gla(
+                q, k, v, g, chunk=chunk)[0]),
+            "pallas": jax.jit(lambda q, k, v, g: ops.gla_scan(
+                q, k, v, g, chunk=chunk, interpret=interpret)),
+        }
+        for name, fwd in backends.items():
+            fwd_us = time_us(fwd, q, k, v, g)
+            loss = lambda q, k, v, g: jnp.sum(fwd(q, k, v, g) * dy)
+            grad = jax.jit(jax.grad(loss, argnums=(0, 1, 2, 3)))
+            fwdbwd_us = time_us(grad, q, k, v, g)
+            rec = {
+                "backend": name, "shape": tag,
+                "B": B, "S": S, "H": H, "dk": dk, "dv": dv, "chunk": chunk,
+                "interpret": bool(name == "pallas" and interpret),
+                "fwd_us": round(fwd_us, 1),
+                "fwdbwd_us": round(fwdbwd_us, 1),
+                "fwd_achieved_gflops": round(
+                    _gla_flops(B, S, H, dk, dv, chunk) / fwd_us * 1e-3, 2),
+                "fwdbwd_achieved_gflops": round(
+                    _gla_flops(B, S, H, dk, dv, chunk, bwd=True)
+                    / fwdbwd_us * 1e-3, 2),
+            }
+            if name == "pallas":
+                text = str(jax.make_jaxpr(
+                    jax.grad(loss, argnums=(0, 1, 2, 3)))(q, k, v, g))
+                n_calls = text.count("pallas_call")
+                rec["bwd_pallas_calls"] = n_calls
+                rec["single_pass_bwd"] = bool(
+                    n_calls == 2 and not re.search(r"\bscan\[", text))
+            records.append(rec)
+            rows.append((f"ssm.{name}.{tag}.fwd", rec["fwd_us"],
+                         f"{rec['fwd_achieved_gflops']}GFLOP/s"))
+            rows.append((f"ssm.{name}.{tag}.fwdbwd", rec["fwdbwd_us"],
+                         f"{rec['fwdbwd_achieved_gflops']}GFLOP/s"))
+        sp = [r for r in records if r["shape"] == tag
+              and r["backend"] == "pallas"][0]["single_pass_bwd"]
+        rows.append((f"ssm.pallas.{tag}.single_pass_bwd", 0.0, str(sp)))
+
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, "ssm_bench.json")
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+    rows.append(("ssm.artifact", 0.0, path))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

@@ -20,6 +20,19 @@ python -m repro.launch.train --arch stablelm-1.6b --reduced \
     --plan zero_cdp --steps 3 --batch 4 --seq 16 --mesh-data 4 \
     --mesh-model 1 --host-devices 4 --log-every 1
 
+echo "=== kernel smoke: 2-step pallas-kernel train, attention arch ==="
+# interpret-mode Pallas on CPU: exercises the fused flash VJP (block-sparse
+# pruned grids) end-to-end through the jitted CDP training step
+python -m repro.launch.train --arch stablelm-1.6b --reduced \
+    --kernels pallas --steps 2 --batch 2 --seq 16 --mesh-data 1 \
+    --mesh-model 1 --host-devices 1 --log-every 1
+
+echo "=== kernel smoke: 2-step pallas-kernel train, ssm arch ==="
+# exercises the fused gla_scan backward (reverse chunk-scan kernel)
+python -m repro.launch.train --arch xlstm-350m --reduced \
+    --kernels ssm_scan=pallas --steps 2 --batch 2 --seq 16 --mesh-data 1 \
+    --mesh-model 1 --host-devices 1 --log-every 1
+
 echo "=== engine smoke: 4-token serve (ServeEngine, fused prefill) ==="
 python -m repro.launch.serve --arch stablelm-1.6b --reduced \
     --batch 2 --prompt-len 16 --gen 4 --mesh-data 2 --mesh-model 1 \

@@ -6,9 +6,19 @@ vs TPU execution).
 backward pass through the fused Pallas dq and dk/dv kernels in
 ``repro.kernels.flash_attention`` (FlashAttention-2 style — the forward
 saves the per-row logsumexp, the backward recomputes probabilities blockwise
-from it after a precomputed ``delta = sum(dO * O)`` pass). This is the
-kernel pair behind ``attn_backend="pallas"`` in ``ModelConfig``; with
-``interpret=True`` the same VJP runs on CPU for tier-1 validation.
+from it after a precomputed ``delta = sum(dO * O)`` pass). The pruned
+block-sparse grids are picked automatically from the ``causal``/``window``
+statics — every kernel call walks ``flash_grid_plan``'s tile list, so
+causal training skips the upper block triangle and sliding-window training
+visits a constant ~ceil(window/bk)+1 kv blocks per q block.
+
+``gla_scan`` is differentiable the same way: its ``jax.custom_vjp`` pairs
+the forward chunk-scan kernel (which checkpoints the per-chunk entering
+states) with the fused reverse chunk-scan kernel in
+``repro.kernels.ssm_scan`` — a single backward pass, no recompute through
+the jnp scan. These are the kernels behind ``kernels="pallas"`` in
+``ModelConfig``; with ``interpret=True`` the same VJPs run on CPU for
+tier-1 validation.
 """
 from __future__ import annotations
 
@@ -21,7 +31,7 @@ from repro.kernels.decode_attention import decode_attention_kernel
 from repro.kernels.flash_attention import (flash_attention_bwd_dkv,
                                            flash_attention_bwd_dq,
                                            flash_attention_kernel)
-from repro.kernels.ssm_scan import gla_scan_kernel
+from repro.kernels.ssm_scan import gla_scan_bwd_kernel, gla_scan_kernel
 
 
 def default_interpret() -> bool:
@@ -136,10 +146,75 @@ def decode_attention(q, k, v, cache_len, *, window: int = 0, bk: int = 512,
     return out.reshape(B, 1, H, dv)
 
 
-@partial(jax.jit, static_argnames=("chunk", "interpret"))
-def gla_scan(q, k, v, g, *, chunk: int = 64, interpret: bool = False):
+# ---------------------------------------------------------------------------
+# GLA chunk scan with a fused-kernel VJP. Like flash attention, the
+# custom_vjp core operates on the folded, chunk-padded layout (q,k [BH,S,dk];
+# v [BH,S,dv]; g [BH,S]) so the residuals — inputs + the per-chunk entering
+# states the forward checkpoints — are exactly the kernel operands; head
+# fold/unfold and padding live in the public wrapper, where plain jax AD
+# transposes them (padded rows therefore carry zero cotangents).
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _gla_core(qh, kh, vh, gh, chunk, s_valid, interpret):
+    y, _ = gla_scan_kernel(qh, kh, vh, gh, chunk=chunk, s_valid=s_valid,
+                           interpret=interpret)
+    return y
+
+
+def _gla_core_fwd(qh, kh, vh, gh, chunk, s_valid, interpret):
+    y, states, _ = gla_scan_kernel(qh, kh, vh, gh, chunk=chunk,
+                                   s_valid=s_valid, collect_states=True,
+                                   interpret=interpret)
+    return y, (qh, kh, vh, gh, states)
+
+
+def _gla_core_bwd(chunk, s_valid, interpret, res, dy):
+    qh, kh, vh, gh, states = res
+    return gla_scan_bwd_kernel(qh, kh, vh, gh, states, dy, chunk=chunk,
+                               s_valid=s_valid, interpret=interpret)
+
+
+_gla_core.defvjp(_gla_core_fwd, _gla_core_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _gla_core_with_state(qh, kh, vh, gh, chunk, s_valid, interpret):
+    return gla_scan_kernel(qh, kh, vh, gh, chunk=chunk, s_valid=s_valid,
+                           interpret=interpret)
+
+
+def _gla_core_with_state_fwd(qh, kh, vh, gh, chunk, s_valid, interpret):
+    return _gla_core_with_state(qh, kh, vh, gh, chunk, s_valid,
+                                interpret), None
+
+
+def _gla_core_with_state_bwd(chunk, s_valid, interpret, res, dy):
+    raise NotImplementedError(
+        "ops.gla_scan(return_final_state=True) is a forward-only path "
+        "(prefill/decode-cache fill); differentiate the default "
+        "gla_scan(...) instead — its custom_vjp runs the fused reverse "
+        "chunk-scan kernel.")
+
+
+_gla_core_with_state.defvjp(_gla_core_with_state_fwd,
+                            _gla_core_with_state_bwd)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret",
+                                   "return_final_state"))
+def gla_scan(q, k, v, g, *, chunk: int = 64, interpret: bool = False,
+             return_final_state: bool = False):
     """Chunked gated-linear-attention. q,k: [B,S,H,dk]; v: [B,S,H,dv];
-    g: [B,S,H] log-decay. Returns y: [B,S,H,dv]."""
+    g: [B,S,H] log-decay. Returns y: [B,S,H,dv].
+
+    Differentiable — ``jax.grad`` through this runs the fused reverse
+    chunk-scan kernel (single backward pass; the forward checkpoints its
+    per-chunk states). With ``return_final_state=True`` also returns the
+    [B,H,dk,dv] float32 state after the last VALID position — padded rows
+    are masked out of the state update inside the kernel, so the state is
+    exact for any S (this path is forward-only; training consumers use the
+    default)."""
     B, S, H, dk = q.shape
     dv = v.shape[-1]
     chunk = min(chunk, S)
@@ -153,6 +228,12 @@ def gla_scan(q, k, v, g, *, chunk: int = 64, interpret: bool = False):
     kh, _ = _pad_to(kh, 1, chunk)
     vh, _ = _pad_to(vh, 1, chunk)
     gh, _ = _pad_to(gh, 1, chunk)
-    y = gla_scan_kernel(qh, kh, vh, gh, chunk=chunk, interpret=interpret)
+    if return_final_state:
+        # forward-only path: the custom_vjp exists solely to turn an AD
+        # attempt into a clear error at the API (not deep inside pallas)
+        y, fin = _gla_core_with_state(qh, kh, vh, gh, chunk, s0, interpret)
+        y = jnp.moveaxis(y[:, :s0].reshape(B, H, S, dv), 1, 2)
+        return y, fin.reshape(B, H, dk, dv)
+    y = _gla_core(qh, kh, vh, gh, chunk, s0, interpret)
     y = y[:, :s0]
     return jnp.moveaxis(y.reshape(B, H, S, dv), 1, 2)

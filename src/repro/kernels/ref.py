@@ -45,12 +45,7 @@ def decode_attention_ref(q, k, v, cache_len, *, group: int = 1):
     return jnp.einsum("bt,btd->bd", p, vq.astype(jnp.float32)).astype(q.dtype)
 
 
-def gla_scan_ref(q, k, v, g):
-    """Exact sequential recurrence: S_t = exp(g_t) S_{t-1} + k_t v_t^T;
-    y_t = q_t . S_t.  q,k: [BH,S,dk]; v: [BH,S,dv]; g: [BH,S]."""
-    BH, S, dk = q.shape
-    dv = v.shape[-1]
-
+def _gla_scan_full(q, k, v, g):
     def step(state, inp):
         qt, kt, vt, gt = inp
         state = jnp.exp(gt.astype(jnp.float32))[:, None, None] * state + \
@@ -59,9 +54,22 @@ def gla_scan_ref(q, k, v, g):
         yt = jnp.einsum("bd,bdv->bv", qt.astype(jnp.float32), state)
         return state, yt
 
-    s0 = jnp.zeros((BH, dk, dv), jnp.float32)
-    _, ys = jax.lax.scan(step, s0, (jnp.moveaxis(q, 1, 0),
-                                    jnp.moveaxis(k, 1, 0),
-                                    jnp.moveaxis(v, 1, 0),
-                                    jnp.moveaxis(g, 1, 0)))
-    return jnp.moveaxis(ys, 0, 1).astype(q.dtype)
+    BH, _, dk = q.shape
+    s0 = jnp.zeros((BH, dk, v.shape[-1]), jnp.float32)
+    state, ys = jax.lax.scan(step, s0, (jnp.moveaxis(q, 1, 0),
+                                        jnp.moveaxis(k, 1, 0),
+                                        jnp.moveaxis(v, 1, 0),
+                                        jnp.moveaxis(g, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1).astype(q.dtype), state
+
+
+def gla_scan_ref(q, k, v, g):
+    """Exact sequential recurrence: S_t = exp(g_t) S_{t-1} + k_t v_t^T;
+    y_t = q_t . S_t.  q,k: [BH,S,dk]; v: [BH,S,dv]; g: [BH,S]."""
+    return _gla_scan_full(q, k, v, g)[0]
+
+
+def gla_final_state_ref(q, k, v, g):
+    """The [BH, dk, dv] float32 state after the last position — the oracle
+    for the kernel's final-state output (and its padded-row masking)."""
+    return _gla_scan_full(q, k, v, g)[1]

@@ -7,11 +7,12 @@ flag:
     op            "jnp" (reference)              "pallas" (fused TPU kernel)
     ------------  -----------------------------  ------------------------------
     train_attn    blockwise online-softmax VJP   ops.flash_attention custom_vjp
+                                                 (block-sparse pruned grids)
     prefill_attn  blockwise forward              ops.flash_attention forward
     decode_attn   models.attention jnp decode    ops.decode_attention
-    ssm_scan      chunked jnp GLA scan           ops.gla_scan (forward; the
-                                                 backward recomputes via the
-                                                 jnp scan)
+    ssm_scan      chunked jnp GLA scan           ops.gla_scan custom_vjp (fused
+                                                 one-pass reverse chunk-scan
+                                                 backward)
 
 Off-TPU every Pallas op runs with ``interpret=True`` automatically
 (``ops.default_interpret``), so all four backends stay CPU-testable.

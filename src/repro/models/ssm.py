@@ -1,14 +1,15 @@
 """State-space / recurrent blocks: Mamba2 (SSD chunked scan), mLSTM, sLSTM.
 
-The shared compute core is ``chunked_gla`` — a chuntched gated-linear-attention
+The shared compute core is ``chunked_gla`` — a chunked gated-linear-attention
 scan (the "state-space duality" form of Mamba2 [arXiv:2405.21060] and the
 matrix-memory mLSTM [arXiv:2405.04517]): within a chunk the recurrence is a
 masked quadratic contraction (MXU-friendly), across chunks a short
 ``lax.scan`` carries the [dk, dv] state. ``repro.kernels.ssm_scan`` is the
-Pallas TPU kernel for the same contraction, dispatched on the ``ssm_scan``
-kernel-registry op (``cfg.kernels``): the kernel runs the forward, and the
-backward recomputes through the jnp chunked scan (``_gla_pallas``'s
-custom_vjp) until the kernel pair grows its own VJP.
+Pallas TPU kernel pair for the same contraction, dispatched on the
+``ssm_scan`` kernel-registry op (``cfg.kernels``): ``ops.gla_scan`` carries
+a fused custom_vjp — the forward kernel checkpoints per-chunk states and a
+reverse chunk-scan kernel emits dq/dk/dv/dg in one pass, so training never
+recomputes through the jnp scan.
 
 Decode is the exact recurrent update: O(1) state per token — this is what
 makes the SSM/hybrid architectures eligible for the long_500k shape.
@@ -16,8 +17,6 @@ makes the SSM/hybrid architectures eligible for the long_500k shape.
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -85,30 +84,16 @@ def chunked_gla(q, k, v, g, state=None, chunk: int = 64):
     return y.astype(q.dtype), state
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(4,))
 def _gla_pallas(q, k, v, g, chunk):
-    """Pallas-kernel forward of the zero-initial-state chunked GLA scan.
+    """Pallas-kernel path of the zero-initial-state chunked GLA scan.
 
-    The kernel pair has no fused backward yet (ROADMAP item), so the VJP
-    recomputes gradients through the jnp ``chunked_gla`` — the two forwards
-    are numerically twin contractions, keeping train + eval on one path."""
+    Fully differentiable: ``ops.gla_scan`` carries a ``jax.custom_vjp``
+    pairing the forward kernel (which checkpoints per-chunk states) with the
+    fused reverse chunk-scan kernel — the backward is a single pass, no
+    recompute through the jnp ``chunked_gla``."""
     from repro.kernels import ops
     return ops.gla_scan(q, k, v, g, chunk=chunk,
                         interpret=ops.default_interpret())
-
-
-def _gla_pallas_fwd(q, k, v, g, chunk):
-    return _gla_pallas(q, k, v, g, chunk), (q, k, v, g)
-
-
-def _gla_pallas_bwd(chunk, res, dy):
-    q, k, v, g = res
-    _, vjp = jax.vjp(lambda q, k, v, g: chunked_gla(q, k, v, g, chunk=chunk)[0],
-                     q, k, v, g)
-    return vjp(dy)
-
-
-_gla_pallas.defvjp(_gla_pallas_fwd, _gla_pallas_bwd)
 
 
 def _gla_forward(cfg, q, k, v, g, *, chunk: int):

@@ -250,6 +250,189 @@ def test_gla_pallas_forward_dispatch_and_grad():
                                    rtol=1e-4, err_msg=f"d{name}")
 
 
+# ---------------------------------------------------------------------------
+# Block-sparse grid pruning: the Pallas kernels walk flash_grid_plan's tile
+# list instead of the dense rectangle. Parity exactly at block boundaries
+# (window % bk == 0, window < bk, q_offset != 0) against the dense jnp
+# references, plus the plan's own pruning ledger.
+# ---------------------------------------------------------------------------
+
+PRUNED_CASES = [
+    # B, Sq, Sk, H, KV, dh, causal, window, q_offset, bq, bk
+    (2, 128, 128, 4, 2, 32, True, 64, 0, 32, 32),    # window % bk == 0
+    (2, 128, 128, 4, 2, 32, True, 16, 0, 32, 32),    # window < bk
+    (1, 32, 128, 4, 2, 16, True, 0, 96, 32, 32),     # q_offset != 0
+    (1, 32, 128, 4, 2, 16, True, 48, 96, 32, 32),    # offset + window
+    (1, 17, 128, 2, 1, 16, True, 0, 50, 16, 32),     # ragged q + offset
+    (2, 128, 128, 4, 2, 32, False, 48, 0, 32, 32),   # non-causal window
+]
+
+
+@pytest.mark.parametrize("case", PRUNED_CASES)
+def test_flash_pruned_grid_parity_at_block_boundaries(case):
+    B, Sq, Sk, H, KV, dh, causal, window, q_offset, bq, bk = case
+    ks = jax.random.split(jax.random.PRNGKey(11), 4)
+    q = _mk(ks[0], (B, Sq, H, dh), jnp.float32)
+    k = _mk(ks[1], (B, Sk, KV, dh), jnp.float32)
+    v = _mk(ks[2], (B, Sk, KV, dh), jnp.float32)
+    do = _mk(ks[3], (B, Sq, H, dh), jnp.float32)
+
+    def pallas(q, k, v):
+        return ops.flash_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, bq=bq, bk=bk,
+                                   interpret=True)
+
+    def dense(q, k, v):
+        return blockwise_attention(q, k, v, causal=causal, window=window,
+                                   q_offset=q_offset, block=bk)
+
+    np.testing.assert_allclose(np.asarray(pallas(q, k, v)),
+                               np.asarray(dense(q, k, v)),
+                               atol=2e-5, rtol=2e-5)
+
+    def scal(fn):
+        return lambda q, k, v: jnp.sum(fn(q, k, v) * do)
+
+    g_p = jax.grad(scal(pallas), argnums=(0, 1, 2))(q, k, v)
+    g_d = jax.grad(scal(dense), argnums=(0, 1, 2))(q, k, v)
+    for name, gp, gd in zip("qkv", g_p, g_d):
+        np.testing.assert_allclose(np.asarray(gp), np.asarray(gd), atol=1e-3,
+                                   rtol=1e-3, err_msg=f"pruned d{name}")
+
+
+def test_flash_grid_plan_prunes_masked_tiles():
+    from repro.kernels.flash_attention import flash_grid_plan
+    # causal square triangle: nq*(nq+1)/2 of nq^2
+    plan = flash_grid_plan(512, 512, 64, 64, True, 0, 0, 512)
+    assert plan["total"] == 64
+    assert plan["visited"] == 8 * 9 // 2
+    # sliding window: constant ceil(window/bk)+1 kv blocks per q block
+    # (minus the clipped rows at the start of the sequence)
+    plan = flash_grid_plan(1024, 1024, 128, 128, True, 256, 0, 1024)
+    assert plan["visited"] < plan["total"]
+    assert plan["visited"] <= 8 * (256 // 128 + 1)
+    # both orders enumerate the same tile set, every block has >= 1 tile
+    for a, b in ((plan["qblk"], plan["qblk2"]), (plan["kblk"], plan["kblk2"])):
+        assert set(np.asarray(a).tolist()) == set(np.asarray(b).tolist())
+    assert set(np.asarray(plan["qblk"]).tolist()) == set(range(8))
+    assert set(np.asarray(plan["kblk"]).tolist()) == set(range(8))
+    # non-causal dense: nothing pruned
+    plan = flash_grid_plan(256, 256, 64, 64, False, 0, 0, 256)
+    assert plan["visited"] == plan["total"]
+    # windowed prefill chunk (small Sq, long kv prefix): the dkv zeros
+    # sentinels for unattended kv blocks must NOT leak into the fwd/dq list
+    plan = flash_grid_plan(128, 1024, 128, 128, True, 256, 896, 1024)
+    assert plan["visited"] == 3                 # the window band only
+    assert plan["visited_dkv"] == 8             # every kv block written
+
+
+# ---------------------------------------------------------------------------
+# Fused GLA backward: gradient parity of the reverse chunk-scan kernel pair
+# vs autodiff through the jnp chunked scan, final-state exactness with
+# padded tails, and the single-pass property of the traced backward.
+# ---------------------------------------------------------------------------
+
+GLA_GRAD_CASES = [
+    # B, S, H, dk, dv, chunk, dtype — S not a multiple of chunk covers the
+    # zero-padded tail rows; the masked state update keeps them inert.
+    (2, 128, 2, 16, 16, 32, jnp.float32),
+    (1, 100, 2, 16, 16, 32, jnp.float32),     # padded tail
+    (1, 33, 2, 8, 8, 16, jnp.float32),        # mostly-padding last chunk
+    (1, 80, 2, 16, 16, 32, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize("case", GLA_GRAD_CASES)
+def test_gla_fused_backward_parity(case):
+    from repro.models.ssm import chunked_gla
+    B, S, H, dk, dv, chunk, dt = case
+    ks = jax.random.split(jax.random.PRNGKey(13), 5)
+    q = _mk(ks[0], (B, S, H, dk), dt)
+    k = _mk(ks[1], (B, S, H, dk), dt) * 0.3
+    v = _mk(ks[2], (B, S, H, dv), dt)
+    g = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    dy = _mk(ks[4], (B, S, H, dv), dt)
+
+    def loss(fn):
+        return lambda q, k, v, g: jnp.sum(
+            (fn(q, k, v, g) * dy).astype(jnp.float32))
+
+    g_fused = jax.grad(loss(lambda q, k, v, g: ops.gla_scan(
+        q, k, v, g, chunk=chunk, interpret=True)),
+        argnums=(0, 1, 2, 3))(q, k, v, g)
+    g_jnp = jax.grad(loss(lambda q, k, v, g: chunked_gla(
+        q, k, v, g, chunk=chunk)[0]), argnums=(0, 1, 2, 3))(q, k, v, g)
+    tol = 1e-1 if dt == jnp.bfloat16 else 1e-4
+    for name, gf, gj in zip("qkvg", g_fused, g_jnp):
+        np.testing.assert_allclose(np.asarray(gf, np.float32),
+                                   np.asarray(gj, np.float32), atol=tol,
+                                   rtol=tol, err_msg=f"fused d{name}")
+
+
+def test_gla_final_state_exact_with_padding():
+    """ops.gla_scan(return_final_state=True) matches the jnp chunked scan's
+    final state when S is not a chunk multiple (regression: padded rows used
+    to feed the carried state)."""
+    from repro.models.ssm import chunked_gla
+    B, S, H, dk, dv, chunk = 2, 77, 2, 8, 8, 32
+    ks = jax.random.split(jax.random.PRNGKey(17), 4)
+    q = _mk(ks[0], (B, S, H, dk), jnp.float32)
+    k = _mk(ks[1], (B, S, H, dk), jnp.float32) * 0.3
+    v = _mk(ks[2], (B, S, H, dv), jnp.float32)
+    g = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+    y, fin = ops.gla_scan(q, k, v, g, chunk=chunk, interpret=True,
+                          return_final_state=True)
+    y_ref, st_ref = chunked_gla(q, k, v, g, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref), atol=5e-5,
+                               rtol=5e-5)
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(st_ref),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_gla_state_update_masks_padded_rows():
+    """Direct kernel call with a GARBAGE padded tail (g > 0, nonzero k/v):
+    s_valid must keep the tail out of the carried state entirely."""
+    from repro.kernels.ssm_scan import gla_scan_kernel
+    BH, S, Spad, dk, dv, chunk = 2, 33, 48, 8, 8, 16
+    ks = jax.random.split(jax.random.PRNGKey(19), 4)
+    q = _mk(ks[0], (BH, Spad, dk), jnp.float32)
+    k = _mk(ks[1], (BH, Spad, dk), jnp.float32) * 0.3
+    v = _mk(ks[2], (BH, Spad, dv), jnp.float32)
+    g = -jax.nn.softplus(jax.random.normal(ks[3], (BH, Spad)))
+    g = g.at[:, S:].set(0.7)              # decay > 1 garbage in the pad
+    y, fin = gla_scan_kernel(q, k, v, g, chunk=chunk, s_valid=S,
+                             interpret=True)
+    ref_state = ref.gla_final_state_ref(q[:, :S], k[:, :S], v[:, :S],
+                                        g[:, :S])
+    np.testing.assert_allclose(np.asarray(fin), np.asarray(ref_state),
+                               atol=5e-5, rtol=5e-5)
+    r = ref.gla_scan_ref(q[:, :S], k[:, :S], v[:, :S], g[:, :S])
+    np.testing.assert_allclose(np.asarray(y[:, :S]), np.asarray(r),
+                               atol=5e-5, rtol=5e-5)
+
+
+def test_gla_pallas_backward_is_single_pass():
+    """The traced backward of the pallas ssm_scan path is the fused kernel
+    pair: exactly two pallas_calls (fwd + reverse scan) and NO lax.scan
+    recompute through the jnp chunked scan."""
+    import re
+    B, S, H, dk, dv = 1, 64, 2, 8, 8
+    ks = jax.random.split(jax.random.PRNGKey(23), 4)
+    q = _mk(ks[0], (B, S, H, dk), jnp.float32)
+    k = _mk(ks[1], (B, S, H, dk), jnp.float32) * 0.3
+    v = _mk(ks[2], (B, S, H, dv), jnp.float32)
+    g = -jax.nn.softplus(jax.random.normal(ks[3], (B, S, H)))
+
+    def loss(q, k, v, g):
+        return jnp.sum(ops.gla_scan(q, k, v, g, chunk=16, interpret=True)
+                       ** 2)
+
+    text = str(jax.make_jaxpr(jax.grad(loss, argnums=(0, 1, 2, 3)))(
+        q, k, v, g))
+    assert text.count("pallas_call") == 2, text.count("pallas_call")
+    assert not re.search(r"\bscan\[", text)
+
+
 GLA_CASES = [
     (2, 128, 2, 16, 32, 32, jnp.float32),
     (1, 100, 4, 8, 8, 16, jnp.float32),
