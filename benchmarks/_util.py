@@ -11,6 +11,12 @@ import jax
 
 ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
 
+# BENCH_SMOKE=1 (CI benchmark-smoke job): every module shrinks its shapes /
+# iteration counts so the whole suite runs in minutes on a CPU runner. The
+# artifacts keep their schema (that IS what the job validates) but the
+# numbers are smoke-tagged, never perf-gated.
+SMOKE = os.environ.get("BENCH_SMOKE", "") not in ("", "0")
+
 
 def time_us(fn, *args, iters: int = 3):
     """us/call of ``fn(*args)``: one untimed call to compile, then the mean

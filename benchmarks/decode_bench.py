@@ -2,12 +2,17 @@
 ``decode_attn`` backends ("jnp" single-token attention vs the Pallas
 flash-decode kernel ``ops.decode_attention``).
 
-Two levels per backend:
+Three levels:
 
-  * kernel — one decode-attention call over a long KV cache (the
-    memory-bound hot loop of batched serving);
-  * model  — a reduced-config ``decode_step`` (tok/s) and the fused
-    ``prefill_with_cache`` pass (prefill latency) through the registry.
+  * kernel  — one decode-attention call over a long KV cache (the
+    memory-bound hot loop of batched serving), per backend;
+  * model   — a reduced-config ``decode_step`` (tok/s) and the fused
+    ``prefill_with_cache`` pass (prefill latency) through the registry,
+    per backend;
+  * serving — continuous batching vs the static-batch baseline on a
+    staggered-length Poisson workload through ``ServeEngine.serve``
+    (same jitted functions for both policies), recording throughput AND
+    p50/p99 request latency.
 
 Writes a JSON artifact to ``benchmarks/artifacts/decode_bench.json`` so the
 serving-perf trajectory accumulates across PRs, and yields rows in the
@@ -26,14 +31,22 @@ import time
 import jax
 import jax.numpy as jnp
 
-from benchmarks._util import ARTIFACTS, time_us
+from benchmarks._util import ARTIFACTS, SMOKE, time_us
 
 # B, T (cache len), H, KV, dh — decode-shaped (one query token)
 KERNEL_SHAPES = [
+    (4, 256, 8, 2, 64),
+] if SMOKE else [
     (4, 1024, 8, 2, 64),
     (16, 512, 8, 8, 64),
 ]
-ITERS = 10
+ITERS = 3 if SMOKE else 10
+
+# serving-level workload: staggered generation lengths (half short, half
+# long) — the shape continuous batching wins on (a long row no longer
+# holds every slot hostage)
+SERVE_REQS, SERVE_SLOTS, SERVE_PROMPT, SERVE_GEN = \
+    (6, 2, 8, 16) if SMOKE else (12, 4, 16, 48)
 
 
 def run():
@@ -116,6 +129,43 @@ def run():
                      f"B{B}xS{S}"))
         rows.append((f"decode.model.{name}.decode",
                      round(dt * 1e6 / GEN, 1), f"{tok_s:.0f}tok/s"))
+
+    # ---- serving level: continuous batching vs static batch --------------
+    from repro.engine import RunSpec
+    from repro.engine.batching import synthetic_requests
+    from repro.engine.serve import ServeEngine
+
+    spec = RunSpec(arch="stablelm-1.6b", reduced=True, mesh_data=1,
+                   mesh_model=1, host_devices=0)
+    engine = ServeEngine(spec, batch=SERVE_SLOTS, prompt_len=SERVE_PROMPT,
+                         gen=SERVE_GEN, verbose=False)
+    # continuous FIRST so any residual process warmth (allocator, CPU
+    # caches) biases AGAINST the policy whose win this records; compile is
+    # excluded for both — serve() warms its jitted admit/step fns outside
+    # the timed loop and both policies share the same executables
+    for policy in ("continuous", "static"):
+        reqs = synthetic_requests(SERVE_REQS, engine.cfg.vocab_size,
+                                  SERVE_PROMPT, SERVE_GEN,
+                                  arrival="poisson", rate=1.0, seed=0)
+        m = engine.serve(reqs, max_slots=SERVE_SLOTS, policy=policy)["metrics"]
+        records.append({
+            "level": "serving", "policy": policy, "arch": "stablelm-1.6b",
+            "n_requests": m["n_requests"], "n_slots": m["n_slots"],
+            "prompt_len": SERVE_PROMPT, "gen": SERVE_GEN, "smoke": SMOKE,
+            "total_generated": m["total_generated"],
+            "decode_steps": m["decode_steps"],
+            "prefill_calls": m["prefill_calls"],
+            "admitted_mid_decode": m["admitted_mid_decode"],
+            "decode_tok_s": m["decode_tok_s"],
+            "p50_latency_s": m["latency_s"]["p50"],
+            "p99_latency_s": m["latency_s"]["p99"],
+            "p50_latency_steps": m["latency_steps"]["p50"],
+            "p99_latency_steps": m["latency_steps"]["p99"],
+        })
+        rows.append((f"decode.serving.{policy}",
+                     round(m["wall_s"] * 1e6, 1),
+                     f"{m['decode_tok_s']:.0f}tok/s_p99_"
+                     f"{m['latency_s']['p99']}s"))
 
     os.makedirs(ARTIFACTS, exist_ok=True)
     path = os.path.join(ARTIFACTS, "decode_bench.json")

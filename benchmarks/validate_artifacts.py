@@ -1,0 +1,111 @@
+"""Schema validator for the benchmark artifacts — the CI benchmark-smoke
+gate. No perf numbers are gated (interpret-mode CPU timings are noise);
+what IS enforced is that every record a future PR will aggregate or plot
+still carries the fields the tooling reads:
+
+  * repo-root ``BENCH_kernels.json`` — the cross-PR kernel-speedup
+    trajectory appended by ``benchmarks/run.py`` (commit / when /
+    interpret / pallas_speedup_vs_jnp);
+  * ``benchmarks/artifacts/decode_bench.json`` — per-level required keys,
+    including the serving-level continuous-vs-static throughput + p50/p99
+    latency records.
+
+    PYTHONPATH=src python -m benchmarks.validate_artifacts
+
+Exits non-zero listing every violation (never just the first).
+"""
+from __future__ import annotations
+
+import json
+import numbers
+import os
+import sys
+
+_ART = os.path.join(os.path.dirname(os.path.abspath(__file__)), "artifacts")
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+TRAJECTORY_KEYS = {"commit": str, "when": str, "interpret": bool,
+                   "pallas_speedup_vs_jnp": dict}
+DECODE_LEVEL_KEYS = {
+    "kernel": {"backend": str, "shape": str, "interpret": bool,
+               "us_per_call": numbers.Real, "decode_tok_s": numbers.Real},
+    "model": {"backend": str, "arch": str, "interpret": bool,
+              "prefill_us": numbers.Real, "decode_tok_s": numbers.Real},
+    "serving": {"policy": str, "n_requests": int, "n_slots": int,
+                "total_generated": int, "decode_steps": int,
+                "admitted_mid_decode": int, "decode_tok_s": numbers.Real,
+                "p50_latency_s": numbers.Real, "p99_latency_s": numbers.Real,
+                "p50_latency_steps": numbers.Real,
+                "p99_latency_steps": numbers.Real},
+}
+
+
+def _check_keys(rec, schema, where, errors):
+    for key, typ in schema.items():
+        if key not in rec:
+            errors.append(f"{where}: missing key {key!r}")
+        elif not isinstance(rec[key], typ):
+            errors.append(f"{where}: {key!r} is {type(rec[key]).__name__}, "
+                          f"expected {getattr(typ, '__name__', typ)}")
+
+
+def validate(errors=None):
+    errors = [] if errors is None else errors
+
+    traj_path = os.path.join(_ROOT, "BENCH_kernels.json")
+    if not os.path.exists(traj_path):
+        errors.append(f"missing trajectory {traj_path}")
+    else:
+        with open(traj_path) as f:
+            traj = json.load(f)
+        if not isinstance(traj, list) or not traj:
+            errors.append("BENCH_kernels.json: expected a non-empty list")
+        else:
+            for i, rec in enumerate(traj):
+                _check_keys(rec, TRAJECTORY_KEYS,
+                            f"BENCH_kernels.json[{i}]", errors)
+                for op, v in rec.get("pallas_speedup_vs_jnp", {}).items():
+                    if not isinstance(v, numbers.Real) or v <= 0:
+                        errors.append(f"BENCH_kernels.json[{i}]: speedup "
+                                      f"{op}={v!r} is not a positive number")
+
+    dec_path = os.path.join(_ART, "decode_bench.json")
+    if not os.path.exists(dec_path):
+        errors.append(f"missing artifact {dec_path} (run benchmarks first)")
+    else:
+        with open(dec_path) as f:
+            records = json.load(f)
+        levels = {r.get("level") for r in records}
+        for need in ("kernel", "model", "serving"):
+            if need not in levels:
+                errors.append(f"decode_bench.json: no {need!r}-level records")
+        for i, rec in enumerate(records):
+            schema = DECODE_LEVEL_KEYS.get(rec.get("level"))
+            if schema is None:
+                errors.append(f"decode_bench.json[{i}]: unknown level "
+                              f"{rec.get('level')!r}")
+            else:
+                _check_keys(rec, schema, f"decode_bench.json[{i}]", errors)
+        policies = {r.get("policy") for r in records
+                    if r.get("level") == "serving"}
+        if policies >= {"continuous", "static"}:
+            pass
+        elif "serving" in levels:
+            errors.append("decode_bench.json: serving records must cover "
+                          "both 'continuous' and 'static' policies")
+    return errors
+
+
+def main() -> int:
+    errors = validate()
+    if errors:
+        for e in errors:
+            print(f"SCHEMA ERROR: {e}", file=sys.stderr)
+        return 1
+    print("benchmark artifact schemas OK "
+          "(BENCH_kernels.json + decode_bench.json)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

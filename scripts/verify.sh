@@ -1,41 +1,77 @@
 #!/usr/bin/env bash
-# Repo verification: tier-1 tests + a reduced train/serve smoke THROUGH THE
+# Repo verification: tier-1 tests + reduced train/serve smokes THROUGH THE
 # ENGINE API (the only code path the launchers and examples use).
 #
-#     bash scripts/verify.sh
+# Each smoke group is an individually invocable target so CI jobs can run
+# them in parallel instead of one serial script:
+#
+#     bash scripts/verify.sh            # everything (the pre-CI default)
+#     bash scripts/verify.sh tests      # tier-1 pytest only
+#     bash scripts/verify.sh train      # TrainEngine smokes (dp + zero_cdp)
+#     bash scripts/verify.sh kernels    # pallas-kernel train smokes
+#     bash scripts/verify.sh serve      # ServeEngine smokes (static + CB)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-echo "=== tier-1: pytest ==="
-python -m pytest -x -q
+run_tests() {
+    echo "=== tier-1: pytest ==="
+    python -m pytest -x -q
+}
 
-echo "=== engine smoke: 3-step reduced train (TrainEngine) ==="
-python -m repro.launch.train --arch stablelm-1.6b --reduced \
-    --steps 3 --batch 2 --seq 16 --mesh-data 2 --mesh-model 1 \
-    --host-devices 2 --log-every 1
+run_train() {
+    echo "=== engine smoke: 3-step reduced train (TrainEngine) ==="
+    python -m repro.launch.train --arch stablelm-1.6b --reduced \
+        --steps 3 --batch 2 --seq 16 --mesh-data 2 --mesh-model 1 \
+        --host-devices 2 --log-every 1
 
-echo "=== engine smoke: 3-step ZeRO-CDP reduced train (--plan zero_cdp) ==="
-python -m repro.launch.train --arch stablelm-1.6b --reduced \
-    --plan zero_cdp --steps 3 --batch 4 --seq 16 --mesh-data 4 \
-    --mesh-model 1 --host-devices 4 --log-every 1
+    echo "=== engine smoke: 3-step ZeRO-CDP reduced train (--plan zero_cdp) ==="
+    python -m repro.launch.train --arch stablelm-1.6b --reduced \
+        --plan zero_cdp --steps 3 --batch 4 --seq 16 --mesh-data 4 \
+        --mesh-model 1 --host-devices 4 --log-every 1
+}
 
-echo "=== kernel smoke: 2-step pallas-kernel train, attention arch ==="
-# interpret-mode Pallas on CPU: exercises the fused flash VJP (block-sparse
-# pruned grids) end-to-end through the jitted CDP training step
-python -m repro.launch.train --arch stablelm-1.6b --reduced \
-    --kernels pallas --steps 2 --batch 2 --seq 16 --mesh-data 1 \
-    --mesh-model 1 --host-devices 1 --log-every 1
+run_kernels() {
+    echo "=== kernel smoke: 2-step pallas-kernel train, attention arch ==="
+    # interpret-mode Pallas on CPU: exercises the fused flash VJP
+    # (block-sparse pruned grids) end-to-end through the jitted CDP step
+    python -m repro.launch.train --arch stablelm-1.6b --reduced \
+        --kernels pallas --steps 2 --batch 2 --seq 16 --mesh-data 1 \
+        --mesh-model 1 --host-devices 1 --log-every 1
 
-echo "=== kernel smoke: 2-step pallas-kernel train, ssm arch ==="
-# exercises the fused gla_scan backward (reverse chunk-scan kernel)
-python -m repro.launch.train --arch xlstm-350m --reduced \
-    --kernels ssm_scan=pallas --steps 2 --batch 2 --seq 16 --mesh-data 1 \
-    --mesh-model 1 --host-devices 1 --log-every 1
+    echo "=== kernel smoke: 2-step pallas-kernel train, ssm arch ==="
+    # exercises the fused gla_scan backward (reverse chunk-scan kernel)
+    python -m repro.launch.train --arch xlstm-350m --reduced \
+        --kernels ssm_scan=pallas --steps 2 --batch 2 --seq 16 --mesh-data 1 \
+        --mesh-model 1 --host-devices 1 --log-every 1
+}
 
-echo "=== engine smoke: 4-token serve (ServeEngine, fused prefill) ==="
-python -m repro.launch.serve --arch stablelm-1.6b --reduced \
-    --batch 2 --prompt-len 16 --gen 4 --mesh-data 2 --mesh-model 1 \
-    --host-devices 2
+run_serve() {
+    echo "=== engine smoke: 4-token serve (ServeEngine, fused prefill) ==="
+    python -m repro.launch.serve --arch stablelm-1.6b --reduced \
+        --batch 2 --prompt-len 16 --gen 4 --mesh-data 2 --mesh-model 1 \
+        --host-devices 2
 
-echo "verify.sh: OK"
+    echo "=== engine smoke: continuous batching (slots + poisson arrivals) ==="
+    # iteration-level scheduler: ragged prefill with per-row cache lengths,
+    # requests admitted into freed decode slots mid-decode
+    python -m repro.launch.serve --arch stablelm-1.6b --reduced \
+        --max-slots 4 --arrival poisson --rate 0.5 --num-requests 6 \
+        --prompt-len 16 --gen 12 --mesh-data 1 --mesh-model 1 \
+        --host-devices 1
+}
+
+target="${1:-all}"
+case "$target" in
+    tests)   run_tests ;;
+    train)   run_train ;;
+    kernels) run_kernels ;;
+    serve)   run_serve ;;
+    all)     run_tests; run_train; run_kernels; run_serve ;;
+    *)
+        echo "unknown target '$target' (expected tests|train|kernels|serve|all)" >&2
+        exit 2
+        ;;
+esac
+
+echo "verify.sh[$target]: OK"

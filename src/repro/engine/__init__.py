@@ -8,7 +8,8 @@ forcing, and mesh construction; the engines own the train and serve loops.
 """
 from repro.engine.spec import RunSpec
 
-__all__ = ["RunSpec", "TrainEngine", "ServeEngine"]
+__all__ = ["RunSpec", "TrainEngine", "ServeEngine", "Request",
+           "poisson_trace"]
 
 
 def __getattr__(name):
@@ -18,4 +19,8 @@ def __getattr__(name):
     if name == "ServeEngine":
         from repro.engine.serve import ServeEngine
         return ServeEngine
+    if name in ("Request", "poisson_trace"):
+        # continuous-batching workload types (jax-free import, like RunSpec)
+        from repro.engine import batching
+        return getattr(batching, name)
     raise AttributeError(f"module 'repro.engine' has no attribute {name!r}")

@@ -1,0 +1,193 @@
+"""Continuous-batching building blocks for :class:`ServeEngine`.
+
+Iteration-level (Orca-style) scheduling: the engine keeps ONE fixed-shape
+decode batch of ``n_slots`` rows and admits a queued request into a slot the
+moment the slot's previous request finishes — a single long generation no
+longer holds every slot hostage until the whole batch drains (the same
+peak-resource pathology the paper's cyclic schedule removes from training).
+
+Three framework-light pieces live here so the engine stays a thin loop:
+
+  * :class:`Request` / :func:`poisson_trace` — the workload description and
+    a deterministic arrival-trace generator (arrival times are measured in
+    decode STEPS, the scheduler's logical clock, so replays are exact).
+  * :class:`SlotScheduler` — host-side slot bookkeeping with an event log.
+    Invariants (tested): a slot serves at most ONE live request; a request
+    occupies exactly one contiguous slot interval; tokens are only ever
+    attributed to the slot's live owner.
+  * cache surgery — :func:`cache_batch_axes` discovers each cache leaf's
+    batch axis STRUCTURALLY (build the cache shape at two batch sizes and
+    see which axis scaled; stacked-layer layouts put the row axis at
+    different depths per family), and :func:`merge_caches` uses it to
+    splice freshly prefilled rows into a live cache, which is what lets a
+    new prompt prefill into a running batch without retracing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import numpy as np
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# Requests and arrival traces
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Request:
+    """One serving request. ``arrival_step`` is in decode steps (the
+    scheduler's logical clock); ``tokens`` is filled in by the engine after
+    the request completes."""
+    rid: int
+    prompt: np.ndarray                  # [S] int32, unpadded
+    max_gen: int
+    arrival_step: int = 0
+    tokens: Optional[np.ndarray] = None
+
+
+def poisson_trace(n: int, rate: float, seed: int = 0) -> List[int]:
+    """Deterministic Poisson arrival steps: cumulative exponential gaps with
+    mean ``1/rate`` decode steps, floored to the step grid."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / max(rate, 1e-9), size=n)
+    return np.floor(np.cumsum(gaps)).astype(int).tolist()
+
+
+def synthetic_requests(n: int, vocab: int, prompt_len: int, max_gen: int,
+                       *, arrival: str = "none", rate: float = 0.5,
+                       seed: int = 0) -> List[Request]:
+    """A staggered-length workload: prompt lengths in [prompt_len//2,
+    prompt_len], generation lengths alternating short (max_gen//4) and long
+    (max_gen) — the shape continuous batching wins on. ``arrival`` is
+    "none" (all at step 0) or "poisson" (trace replay via
+    :func:`poisson_trace`)."""
+    rng = np.random.default_rng(seed)
+    arrivals = (poisson_trace(n, rate, seed) if arrival == "poisson"
+                else [0] * n)
+    reqs = []
+    for i in range(n):
+        plen = int(rng.integers(max(1, prompt_len // 2), prompt_len + 1))
+        gen = max(1, max_gen // 4) if i % 2 else max_gen
+        prompt = rng.integers(0, vocab, size=plen).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_gen=gen,
+                            arrival_step=arrivals[i]))
+    return reqs
+
+
+# ---------------------------------------------------------------------------
+# Slot scheduler (host-side, framework-free)
+# ---------------------------------------------------------------------------
+
+class SlotScheduler:
+    """Iteration-level slot bookkeeping. The engine drives it:
+
+        admit(slot, req, step, hist_idx)  — slot takes a queued request
+        log_emissions(step, now)          — one token logged per live slot;
+                                            returns slots that just finished
+
+    ``events`` is an append-only log of ("admit"|"complete", step, slot,
+    rid) tuples for tests and reporting."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self.owner: List[Optional[int]] = [None] * n_slots
+        self.logged = [0] * n_slots
+        self.requests: Dict[int, Request] = {}
+        self.slot_of: Dict[int, int] = {}
+        self.first_hist: Dict[int, int] = {}
+        self.admit_step: Dict[int, int] = {}
+        self.complete_step: Dict[int, int] = {}
+        self.complete_time: Dict[int, float] = {}
+        self.gen_done: Dict[int, int] = {}
+        self.events: List[tuple] = []
+
+    # -- queries ------------------------------------------------------------
+
+    def free_slots(self) -> List[int]:
+        return [i for i, o in enumerate(self.owner) if o is None]
+
+    def live_slots(self) -> List[int]:
+        return [i for i, o in enumerate(self.owner) if o is not None]
+
+    # -- transitions ---------------------------------------------------------
+
+    def admit(self, slot: int, req: Request, step: int, hist_idx: int) -> None:
+        if self.owner[slot] is not None:
+            raise RuntimeError(
+                f"slot {slot} already serves request {self.owner[slot]}")
+        if req.rid in self.requests:
+            raise RuntimeError(f"request {req.rid} admitted twice")
+        self.owner[slot] = req.rid
+        self.logged[slot] = 0
+        self.requests[req.rid] = req
+        self.slot_of[req.rid] = slot
+        self.first_hist[req.rid] = hist_idx
+        self.admit_step[req.rid] = step
+        self.events.append(("admit", step, slot, req.rid))
+
+    def log_emissions(self, step: int, now: float,
+                      eos_hit: Optional[List[bool]] = None) -> List[int]:
+        """One emission was just logged for every live slot. Rows that hit
+        their generation budget (or EOS) complete and free their slot.
+        Returns the freed slot ids."""
+        freed = []
+        for slot in self.live_slots():
+            rid = self.owner[slot]
+            self.logged[slot] += 1
+            done = self.logged[slot] >= self.requests[rid].max_gen
+            if eos_hit is not None and eos_hit[slot]:
+                done = True
+            if done:
+                self.gen_done[rid] = self.logged[slot]
+                self.complete_step[rid] = step
+                self.complete_time[rid] = now
+                self.events.append(("complete", step, slot, rid))
+                self.owner[slot] = None
+                freed.append(slot)
+        return freed
+
+
+# ---------------------------------------------------------------------------
+# Cache surgery: structural batch-axis discovery + per-row merge
+# ---------------------------------------------------------------------------
+
+def cache_batch_axes(init_fn: Callable[[int], PyTree]) -> PyTree:
+    """Per-leaf batch-axis index of the cache pytree built by
+    ``init_fn(batch)``. Discovered structurally via ``jax.eval_shape`` at
+    two batch sizes (no memory is allocated): the one axis whose extent
+    scaled with the batch is the row axis — stacked-layer layouts put it at
+    depth 1 ([L,B,T,...]) or 2 ([P,per,B,...]) depending on the family, so
+    hardcoding would couple this module to every cache layout."""
+    import jax
+
+    s2 = jax.eval_shape(lambda: init_fn(2))
+    s3 = jax.eval_shape(lambda: init_fn(3))
+
+    def axis(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y]
+        if len(diffs) != 1:
+            raise ValueError(
+                f"cannot identify a unique batch axis: {a.shape} vs {b.shape}")
+        return diffs[0]
+
+    return jax.tree.map(axis, s2, s3)
+
+
+def merge_caches(live: PyTree, fresh: PyTree, admit_mask, axes: PyTree):
+    """Row-select between a live cache and a freshly prefilled one:
+    ``admit_mask`` ([B] bool) rows take ``fresh``, the rest keep ``live``.
+    This is the slot-local cache reset: ONE jitted where per leaf, no
+    retrace, no host round-trip."""
+    import jax
+    import jax.numpy as jnp
+
+    def sel(old, new, ax):
+        m = admit_mask.reshape((1,) * ax + (-1,) +
+                               (1,) * (old.ndim - ax - 1))
+        return jnp.where(m, new, old)
+
+    return jax.tree.map(sel, live, fresh, axes)

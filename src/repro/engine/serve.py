@@ -11,6 +11,17 @@ prefill tok/s is a first-class serving metric alongside decode tok/s.
     result = engine.generate()
     print(result["prefill_tok_s"], result["decode_tok_s"])
 
+Continuous batching (:meth:`serve`): a request queue plus an
+iteration-level scheduler over ``max_slots`` fixed decode slots. Ragged
+prompts prefill LEFT-ALIGNED with per-row cache lengths
+(``batch["lengths"]`` through ``models.prefill_with_cache``), decode runs
+ONE jitted ``decode_step(..., ragged=True)`` whose per-row slot writes let
+every row sit at its own position, and a finished row's slot is re-filled
+by splicing a freshly prefilled cache row into the live cache
+(``engine.batching.merge_caches`` — no retrace). Per-row generation state
+(step count, done bookkeeping, sampling key) lives in
+``engine.batching.SlotScheduler`` + a [B] sampling-key batch.
+
 For enc-dec archs the encoder runs through the public ``models.encode``
 and the memory cache is the EXACT encoder output (shape follows the
 encoder; no zeros-padded splice for cross-attention to leak onto).
@@ -18,8 +29,9 @@ encoder; no zeros-padded splice for cross-attention to leak onto).
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
+from repro.engine import batching
 from repro.engine.spec import RunSpec
 
 PyTree = Any
@@ -48,6 +60,7 @@ class ServeEngine:
         self.cache = None
         self._built = False
         self._warm = set()                # traced (fn, shapes) signatures
+        self._serving = {}                # slot-count -> jitted serving fns
 
     def _log(self, msg: str) -> None:
         if self.verbose:
@@ -154,7 +167,9 @@ class ServeEngine:
         out = []
         t0 = time.time()
         for _ in range(n):
-            out.append(np.asarray(tok))
+            # buffer DEVICE-side: np.asarray(tok) here would force a host
+            # sync per token inside the timed loop
+            out.append(tok)
             logits, self.cache = self._decode_fn(
                 self.params, {"token": tok}, self.cache)
             if self.temperature > 0:
@@ -166,7 +181,7 @@ class ServeEngine:
         jax.block_until_ready(logits)
         self.decode_s = time.time() - t0
         self.decode_tok_s = len(out) * logits.shape[0] / max(self.decode_s, 1e-9)
-        return np.stack(out, 1)
+        return np.asarray(jnp.stack(out, 1))     # ONE transfer, post-timing
 
     def generate(self, prompts=None,
                  extras: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
@@ -197,3 +212,253 @@ class ServeEngine:
                 "prefill_tok_s": self.prefill_tok_s,
                 "decode_s": self.decode_s,
                 "decode_tok_s": self.decode_tok_s}
+
+    # -- continuous batching ------------------------------------------------
+
+    _SLOT_FAMILIES = ("dense", "moe", "vlm")
+
+    def _serving_fns(self, n_slots: int):
+        """Build (once per slot count) the two jitted serving functions:
+
+        ``admit``  — ragged prefill of the admission batch into a FRESH
+                     cache, per-row spliced into the live cache
+                     (``merge_caches``), first token sampled per admitted
+                     row, sampling keys re-seeded from the request id (so a
+                     request's stream never depends on its co-residents);
+        ``step``   — one ``decode_step(..., ragged=True)`` + per-row
+                     sampling.
+
+        Both are shape-static: every serve() call with the same slot count
+        reuses the same executables — admission never retraces."""
+        key = (n_slots, self.prompt_len, self.gen, self.temperature)
+        if key in self._serving:
+            return self._serving[key]
+        import jax
+        import jax.numpy as jnp
+        from repro.models import init_cache
+        from repro.models import model as model_mod
+
+        cfg = self.cfg
+        B, S_pad = n_slots, self.prompt_len
+        cache_len = self.cache_len           # honor the constructor override
+        if cache_len < S_pad + self.gen:
+            raise ValueError(
+                f"cache_len={cache_len} cannot hold prompt_len={S_pad} + "
+                f"gen={self.gen} (a row would overflow its slot)")
+        vlm_prefix = cfg.vlm.num_patches if cfg.vlm else 0
+        init_fn = lambda b: init_cache(cfg, b, cache_len + vlm_prefix)
+        axes = batching.cache_batch_axes(init_fn)
+        base_key = jax.random.PRNGKey(self.spec.seed + 1)
+        temp = self.temperature
+
+        def sample(logits, keys):
+            if temp <= 0:
+                return jnp.argmax(logits, -1).astype(jnp.int32), keys
+
+            def one(k, lg):
+                nk, sub = jax.random.split(k)
+                t = jax.random.categorical(
+                    sub, lg.astype(jnp.float32) / temp, -1)
+                return nk, t
+            keys, toks = jax.vmap(one)(keys, logits)
+            return toks.astype(jnp.int32), keys
+
+        def admit(params, prompts, lengths, mask, rids, tok, cache, keys):
+            b = {"tokens": prompts, "lengths": lengths}
+            if cfg.family == "vlm":
+                v = cfg.vlm
+                b["patches"] = jnp.zeros((B, v.num_patches, v.vision_dim),
+                                         jnp.dtype(cfg.dtype))
+            logits, filled = model_mod.prefill_with_cache(cfg, params, b,
+                                                          init_fn(B))
+            cache = batching.merge_caches(cache, filled, mask, axes)
+            fresh_keys = jax.vmap(
+                lambda r: jax.random.fold_in(base_key, r))(rids)
+            keys = jnp.where(mask[:, None], fresh_keys, keys)
+            tok0, keys2 = sample(logits, keys)
+            keys = jnp.where(mask[:, None], keys2, keys)
+            tok = jnp.where(mask, tok0, tok)
+            return tok, cache, keys
+
+        def step(params, tok, cache, keys):
+            logits, cache = model_mod.decode_step(cfg, params, {"token": tok},
+                                                  cache, ragged=True)
+            tok, keys = sample(logits, keys)
+            return tok, cache, keys
+
+        fns = {"admit": jax.jit(admit), "step": jax.jit(step),
+               "init": init_fn, "base_key": base_key}
+        self._serving[key] = fns
+        return fns
+
+    def serve(self, requests: Optional[List[batching.Request]] = None, *,
+              max_slots: Optional[int] = None,
+              num_requests: int = 8,
+              arrival: str = "none",
+              rate: float = 0.5,
+              eos_id: Optional[int] = None,
+              policy: str = "continuous",
+              max_steps: int = 1_000_000) -> Dict[str, Any]:
+        """Serve a request queue with iteration-level (continuous) batching.
+
+        ``requests``: list of ``batching.Request`` (prompt lengths must fit
+        ``prompt_len``, ``max_gen`` must fit ``gen``); None synthesises a
+        staggered workload of ``num_requests`` with the given ``arrival``
+        trace ("none" | "poisson" at ``rate`` requests per decode step).
+
+        ``policy="continuous"`` admits into any freed slot the moment a row
+        finishes; ``policy="static"`` is the fixed-batch baseline (a new
+        batch is admitted only when EVERY slot is free) — same jitted
+        functions, so the two are directly comparable.
+
+        ``eos_id``: optional early-stop token. Checking it needs the token
+        values on the host, so it costs one [B]-int transfer per step;
+        leave None for fully async stepping.
+
+        Returns the completed requests (``tokens`` filled), the scheduler
+        event log, and throughput/latency metrics (p50/p99)."""
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        self.build()
+        if self.cfg.family not in self._SLOT_FAMILIES:
+            raise NotImplementedError(
+                f"continuous batching serves attention-cache families "
+                f"{self._SLOT_FAMILIES}, not {self.cfg.family!r} (a "
+                f"recurrent prefill state would absorb ragged pad tails)")
+        if policy not in ("continuous", "static"):
+            raise ValueError(f"unknown policy {policy!r}")
+        B = max_slots or self.batch
+        S_pad = self.prompt_len
+        if requests is None:
+            requests = batching.synthetic_requests(
+                num_requests, self.cfg.vocab_size, S_pad, self.gen,
+                arrival=arrival, rate=rate, seed=self.spec.seed)
+        if not requests:
+            raise ValueError("serve() needs at least one request")
+        for r in requests:
+            if len(r.prompt) > S_pad or len(r.prompt) < 1:
+                raise ValueError(
+                    f"request {r.rid}: prompt length {len(r.prompt)} not in "
+                    f"[1, prompt_len={S_pad}]")
+            if r.max_gen > self.gen or r.max_gen < 1:
+                raise ValueError(
+                    f"request {r.rid}: max_gen {r.max_gen} not in "
+                    f"[1, gen={self.gen}]")
+
+        fns = self._serving_fns(B)
+        sched = batching.SlotScheduler(B)
+        pending = sorted(requests, key=lambda r: (r.arrival_step, r.rid))
+        tok = jnp.zeros((B,), jnp.int32)
+        cache = fns["init"](B)
+        keys = jax.vmap(lambda i: jax.random.fold_in(fns["base_key"], i))(
+            jnp.arange(B))
+
+        # compile both serving fns outside the timed loop
+        zp = jnp.zeros((B, S_pad), jnp.int32)
+        zl = jnp.ones((B,), jnp.int32)
+        zm = jnp.zeros((B,), bool)
+        zr = jnp.zeros((B,), jnp.int32)
+        self._warmup(("serve_admit", B), fns["admit"], self.params, zp, zl,
+                     zm, zr, tok, cache, keys)
+        self._warmup(("serve_step", B), fns["step"], self.params, tok, cache,
+                     keys)
+
+        history: List[Any] = []          # device [B] token vectors
+        owners_log: List[np.ndarray] = []
+        arrival_wall: Dict[int, float] = {}
+        t = 0
+        decode_steps = prefill_calls = admitted_mid_decode = 0
+        t_start = time.perf_counter()
+        while pending or sched.live_slots():
+            if t >= max_steps:
+                raise RuntimeError(f"serve() exceeded max_steps={max_steps}")
+            now = time.perf_counter()
+            for r in pending:
+                if r.arrival_step > t:
+                    break                # pending is sorted by arrival
+                arrival_wall.setdefault(r.rid, now)
+            # -- admissions --------------------------------------------------
+            free = sched.free_slots()
+            elig = [] if (policy == "static" and sched.live_slots()) else \
+                [r for r in pending if r.arrival_step <= t]
+            take = min(len(free), len(elig))
+            if take:
+                was_live = bool(sched.live_slots())
+                prompts = np.zeros((B, S_pad), np.int32)
+                lengths = np.ones((B,), np.int32)
+                mask = np.zeros((B,), bool)
+                rids = np.zeros((B,), np.int32)
+                for slot, req in zip(free[:take], elig[:take]):
+                    prompts[slot, :len(req.prompt)] = req.prompt
+                    lengths[slot] = len(req.prompt)
+                    mask[slot] = True
+                    rids[slot] = req.rid
+                    sched.admit(slot, req, t, len(history))
+                    if was_live and t > 0:
+                        admitted_mid_decode += 1
+                pending = pending[take:]
+                tok, cache, keys = fns["admit"](
+                    self.params, jnp.asarray(prompts), jnp.asarray(lengths),
+                    jnp.asarray(mask), jnp.asarray(rids), tok, cache, keys)
+                prefill_calls += 1
+            live = sched.live_slots()
+            if not live:
+                t += 1                   # idle tick: clock runs to the next
+                continue                 # arrival without touching devices
+            # -- log this iteration's emission for every live slot ----------
+            history.append(tok)
+            owners = np.full((B,), -1, np.int64)
+            for s in live:
+                owners[s] = sched.owner[s]
+            owners_log.append(owners)
+            eos_hit = None
+            if eos_id is not None:
+                th = np.asarray(tok)     # documented per-step host sync
+                eos_hit = [bool(th[s] == eos_id) for s in range(B)]
+            sched.log_emissions(t, time.perf_counter(), eos_hit)
+            # -- one ragged decode step for the whole slot batch -------------
+            # (only when a live row still needs it: a freshly admitted
+            # request's first token comes from admit(), not step)
+            if sched.live_slots():
+                tok, cache, keys = fns["step"](self.params, tok, cache, keys)
+                decode_steps += 1
+            t += 1
+        jax.block_until_ready(tok)
+        wall = time.perf_counter() - t_start
+
+        hist = (np.asarray(jnp.stack(history))
+                if history else np.zeros((0, B), np.int32))   # ONE transfer
+        for rid, req in sched.requests.items():
+            h0, n = sched.first_hist[rid], sched.gen_done[rid]
+            req.tokens = hist[h0:h0 + n, sched.slot_of[rid]].astype(np.int32)
+
+        lat_s = np.array([sched.complete_time[r.rid] - arrival_wall[r.rid]
+                          for r in requests])
+        lat_steps = np.array([sched.complete_step[r.rid] - r.arrival_step
+                              for r in requests])
+        total = int(sum(sched.gen_done.values()))
+        metrics = {
+            "policy": policy, "n_requests": len(requests),
+            "n_slots": B, "total_generated": total,
+            "wall_s": round(wall, 4),
+            "decode_tok_s": round(total / max(wall, 1e-9), 2),
+            "decode_steps": decode_steps, "prefill_calls": prefill_calls,
+            "admitted_mid_decode": admitted_mid_decode,
+            "latency_s": {"p50": round(float(np.percentile(lat_s, 50)), 4),
+                          "p99": round(float(np.percentile(lat_s, 99)), 4),
+                          "mean": round(float(lat_s.mean()), 4)},
+            "latency_steps": {"p50": float(np.percentile(lat_steps, 50)),
+                              "p99": float(np.percentile(lat_steps, 99))},
+        }
+        self._log(
+            f"serve[{policy}]: {len(requests)} requests over {B} slots in "
+            f"{wall:.2f}s — {metrics['decode_tok_s']} tok/s, "
+            f"{decode_steps} decode steps, {prefill_calls} admission "
+            f"prefills ({admitted_mid_decode} requests admitted mid-decode), "
+            f"latency p50/p99 {metrics['latency_s']['p50']}/"
+            f"{metrics['latency_s']['p99']}s")
+        return {"requests": sorted(requests, key=lambda r: r.rid),
+                "events": sched.events, "owners_log": owners_log,
+                "scheduler": sched, "metrics": metrics}

@@ -1,8 +1,20 @@
 """Serving launcher — a thin argparse shim over ``repro.engine.ServeEngine``.
 
+Static batch (the original path — one fixed batch from prefill to last
+token):
+
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
         --reduced --batch 4 --prompt-len 64 --gen 32 --host-devices 4 \
         [--kernels decode_attn=pallas]
+
+Continuous batching (``--max-slots`` switches to the iteration-level
+scheduler: ragged prompts prefill with per-row cache lengths and a queued
+request is admitted the moment a decode slot frees up; ``--arrival
+poisson`` replays a deterministic Poisson arrival trace):
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
+        --reduced --max-slots 4 --arrival poisson --rate 0.5 \
+        --num-requests 8
 
 Prefill runs as ONE fused ``prefill_with_cache`` pass (prefill tok/s is
 reported alongside decode tok/s); enc-dec archs go through the public
@@ -31,6 +43,25 @@ def main(argv=None):
     ap.add_argument("--host-devices", type=int, default=0)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    # continuous batching
+    ap.add_argument("--max-slots", type=int, default=0,
+                    help="serve with continuous batching over N decode "
+                         "slots (0 = static batch via --batch)")
+    ap.add_argument("--arrival", default="none",
+                    choices=["none", "poisson"],
+                    help="request arrival trace: all at step 0, or a "
+                         "deterministic Poisson replay (--rate)")
+    ap.add_argument("--rate", type=float, default=0.5,
+                    help="poisson arrival rate in requests per decode step")
+    ap.add_argument("--num-requests", type=int, default=8,
+                    help="synthetic staggered workload size (continuous)")
+    ap.add_argument("--policy", default="continuous",
+                    choices=["continuous", "static"],
+                    help="scheduler policy for --max-slots serving (static "
+                         "= fixed-batch baseline on the same jitted fns)")
+    ap.add_argument("--eos-id", type=int, default=None,
+                    help="optional early-stop token id (costs one host "
+                         "sync per decode step)")
     args = ap.parse_args(argv)
 
     from repro.engine import RunSpec
@@ -44,6 +75,21 @@ def main(argv=None):
     from repro.engine import ServeEngine
     engine = ServeEngine(spec, batch=args.batch, prompt_len=args.prompt_len,
                          gen=args.gen, temperature=args.temperature)
+
+    if args.max_slots:
+        res = engine.serve(max_slots=args.max_slots,
+                           num_requests=args.num_requests,
+                           arrival=args.arrival, rate=args.rate,
+                           policy=args.policy, eos_id=args.eos_id)
+        for r in res["requests"][:2]:
+            print(f"  request {r.rid} (arrival step {r.arrival_step}, "
+                  f"{len(r.prompt)}-token prompt): "
+                  f"{r.tokens[:16].tolist()}")
+        m = res["metrics"]
+        print(f"  admitted mid-decode: {m['admitted_mid_decode']} / "
+              f"{m['n_requests']}")
+        return 0
+
     result = engine.generate()
     for b in range(min(args.batch, 2)):
         print(f"  sample {b}: {result['tokens'][b][:16].tolist()}")

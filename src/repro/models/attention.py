@@ -277,19 +277,25 @@ def gqa_apply(p, cfg, x, positions, *, causal=True, window=None):
     return ctx @ p["wo"]
 
 
-def gqa_prefill(p, cfg, x, positions, cache, *, window=None):
+def gqa_prefill(p, cfg, x, positions, cache, *, window=None, lengths=None):
     """Fused full-sequence prefill: ONE blockwise/flash attention pass over
     the prompt that also fills the decode cache (rope'd k/v at every prompt
     position) — replaces teacher-forcing the prompt through ``gqa_decode``
-    token by token. Returns (out [B,S,d], new_cache)."""
+    token by token. Returns (out [B,S,d], new_cache).
+
+    ``lengths`` ([B] int32, optional): ragged prompts packed left-aligned
+    into the fixed [B,S] buffer. Every position is projected and written,
+    but the cache ``len`` becomes per-row, so decode masking (and the next
+    write slot) never sees a row's pad tail."""
     S = x.shape[1]
     win = cfg.attn_window if window is None else window
     ctx, k, v = _gqa_attend(p, cfg, x, positions, causal=True, window=win)
     T = cache["k"].shape[1]
     ring = bool(win) and win == T
+    add = jnp.int32(S) if lengths is None else lengths.astype(jnp.int32)
     new_cache = {"k": _prefill_fill(cache["k"], k, ring),
                  "v": _prefill_fill(cache["v"], v, ring),
-                 "len": cache["len"] + S}
+                 "len": cache["len"] + add}
     return ctx @ p["wo"], new_cache
 
 
@@ -307,8 +313,13 @@ def _prefill_fill(buf, new, ring: bool):
     return jnp.roll(new[:, S - T:], S % T, axis=1)
 
 
-def gqa_decode(p, cfg, x, cache, *, window=None):
-    """One-token decode. x: [B,1,d]; cache: {"k","v": [B,T,KV,hd], "len": [B]}."""
+def gqa_decode(p, cfg, x, cache, *, window=None, ragged=False):
+    """One-token decode. x: [B,1,d]; cache: {"k","v": [B,T,KV,hd], "len": [B]}.
+
+    ``ragged=True`` is the continuous-batching path: every row sits at its
+    own cache position (``len`` is genuinely per-row), so the write is a
+    per-row scatter instead of one dynamic_update_slice.
+    """
     B = x.shape[0]
     q, k, v = _project_qkv(p, cfg, x)
     pos = cache["len"][:, None]                                   # [B,1]
@@ -319,16 +330,28 @@ def gqa_decode(p, cfg, x, cache, *, window=None):
     T = cache["k"].shape[1]
     win = cfg.attn_window if window is None else window
     ring = bool(win) and win == T      # cache sized exactly to the window
-    # Synchronized batched decode: all rows advance together, so the write
-    # is a dynamic_update_slice on the (unsharded) time axis. A per-row
-    # scatter (`.at[arange(B), slot]`) forces GSPMD to all-gather the whole
-    # batch-sharded cache — a 48 GiB burst at decode_32k scale.
-    if ring:
-        slot0 = cache["len"][0] % T                               # ring buffer
+    if ragged:
+        # Per-row slot: serving-only — the scatter would force GSPMD to
+        # all-gather a batch-sharded cache, which is why the training-shaped
+        # synchronized branch below stays the default.
+        slot = cache["len"] % T if ring else jnp.minimum(cache["len"], T - 1)
+        bidx = jnp.arange(B)
+        k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
+        v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
     else:
-        slot0 = jnp.minimum(cache["len"][0], T - 1)
-    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot0, axis=1)
-    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot0, axis=1)
+        # Synchronized batched decode: all rows advance together, so the
+        # write is a dynamic_update_slice on the (unsharded) time axis. A
+        # per-row scatter (`.at[arange(B), slot]`) forces GSPMD to
+        # all-gather the whole batch-sharded cache — a 48 GiB burst at
+        # decode_32k scale.
+        if ring:
+            slot0 = cache["len"][0] % T                           # ring buffer
+        else:
+            slot0 = jnp.minimum(cache["len"][0], T - 1)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot0,
+                                                      axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot0,
+                                                      axis=1)
     new_len = cache["len"] + 1
     out = decode_attention(q, k_cache, v_cache, new_len,
                            window=0 if ring else win,
@@ -440,24 +463,27 @@ def mla_apply(p, cfg, x, positions):
     return ctx @ p["wo"]
 
 
-def mla_prefill(p, cfg, x, positions, cache):
+def mla_prefill(p, cfg, x, positions, cache, *, lengths=None):
     """Fused MLA prefill: the materialised full-sequence pass of
     ``mla_apply`` plus a fill of the compressed (c_kv, k_rope) decode cache.
-    Returns (out [B,S,d], new_cache)."""
+    ``lengths`` ([B] int32) makes the cache ``len`` per-row for ragged
+    prompts (see ``gqa_prefill``). Returns (out [B,S,d], new_cache)."""
     S = x.shape[1]
     ctx, c_kv, k_rope = _mla_attend(p, cfg, x, positions)
     T = cache["c_kv"].shape[1]
     ring = bool(cfg.attn_window) and cfg.attn_window == T
+    add = jnp.int32(S) if lengths is None else lengths.astype(jnp.int32)
     new_cache = {"c_kv": _prefill_fill(cache["c_kv"], c_kv, ring),
                  "k_rope": _prefill_fill(cache["k_rope"], k_rope, ring),
-                 "len": cache["len"] + S}
+                 "len": cache["len"] + add}
     return ctx @ p["wo"], new_cache
 
 
-def mla_decode(p, cfg, x, cache):
+def mla_decode(p, cfg, x, cache, *, ragged=False):
     """Absorbed-matmul MLA decode: attention runs in the latent space, so the
     KV cache stores only (c_kv, k_rope) — the compressed cache that makes
-    DeepSeek-V3 decode cheap."""
+    DeepSeek-V3 decode cheap. ``ragged=True`` scatters each row at its own
+    slot (continuous batching; see ``gqa_decode``)."""
     m = cfg.mla
     B = x.shape[0]
     H = cfg.num_heads
@@ -465,14 +491,22 @@ def mla_decode(p, cfg, x, cache):
     q_nope, q_rope = _mla_q(p, cfg, x, pos)          # [B,1,H,*]
     c_kv, k_rope = _mla_latent(p, cfg, x, pos)       # [B,1,kvr], [B,1,rd]
     T = cache["c_kv"].shape[1]
-    # synchronized batched decode (see gqa_decode): time-axis DUS, no scatter
-    if cfg.attn_window and cfg.attn_window == T:
-        slot0 = cache["len"][0] % T                  # ring buffer (windowed)
+    ring = bool(cfg.attn_window) and cfg.attn_window == T
+    if ragged:
+        slot = cache["len"] % T if ring else jnp.minimum(cache["len"], T - 1)
+        bidx = jnp.arange(B)
+        c_cache = cache["c_kv"].at[bidx, slot].set(c_kv[:, 0])
+        r_cache = cache["k_rope"].at[bidx, slot].set(k_rope[:, 0])
     else:
-        slot0 = jnp.minimum(cache["len"][0], T - 1)
-    c_cache = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv, slot0, 1)
-    r_cache = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope,
-                                                  slot0, 1)
+        # synchronized batched decode (see gqa_decode): time-axis DUS
+        if ring:
+            slot0 = cache["len"][0] % T              # ring buffer (windowed)
+        else:
+            slot0 = jnp.minimum(cache["len"][0], T - 1)
+        c_cache = jax.lax.dynamic_update_slice_in_dim(cache["c_kv"], c_kv,
+                                                      slot0, 1)
+        r_cache = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope,
+                                                      slot0, 1)
     new_len = cache["len"] + 1
 
     wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)

@@ -89,12 +89,13 @@ def decoder_layer_apply(p, cfg, x, positions, *, use_moe: bool, causal=True,
     return x + apply_mlp(p["ffn"], h, cfg.act), jnp.float32(0.0)
 
 
-def decoder_layer_decode(p, cfg, x, cache, *, use_moe: bool):
+def decoder_layer_decode(p, cfg, x, cache, *, use_moe: bool,
+                         ragged: bool = False):
     h = apply_norm(cfg.norm, p["ln1"], x)
     if cfg.attn_kind == "mla":
-        a, cache = attn.mla_decode(p["attn"], cfg, h, cache)
+        a, cache = attn.mla_decode(p["attn"], cfg, h, cache, ragged=ragged)
     else:
-        a, cache = attn.gqa_decode(p["attn"], cfg, h, cache)
+        a, cache = attn.gqa_decode(p["attn"], cfg, h, cache, ragged=ragged)
     x = x + a
     h = apply_norm(cfg.norm, p["ln2"], x)
     if use_moe:
@@ -107,15 +108,19 @@ def decoder_layer_decode(p, cfg, x, cache, *, use_moe: bool):
     return x + y, cache
 
 
-def decoder_layer_prefill(p, cfg, x, positions, cache, *, use_moe: bool):
+def decoder_layer_prefill(p, cfg, x, positions, cache, *, use_moe: bool,
+                          lengths=None):
     """Fused full-sequence prefill of one decoder layer: the training-shaped
     forward (blockwise/flash attention, dropless MoE) that also fills the
-    decode cache. Returns (x, new_cache)."""
+    decode cache. ``lengths`` ([B] int32) threads ragged per-row prompt
+    lengths into the cache fill. Returns (x, new_cache)."""
     h = apply_norm(cfg.norm, p["ln1"], x)
     if cfg.attn_kind == "mla":
-        a, cache = attn.mla_prefill(p["attn"], cfg, h, positions, cache)
+        a, cache = attn.mla_prefill(p["attn"], cfg, h, positions, cache,
+                                    lengths=lengths)
     else:
-        a, cache = attn.gqa_prefill(p["attn"], cfg, h, positions, cache)
+        a, cache = attn.gqa_prefill(p["attn"], cfg, h, positions, cache,
+                                    lengths=lengths)
     x = x + a
     h = apply_norm(cfg.norm, p["ln2"], x)
     if use_moe:
@@ -205,9 +210,9 @@ def xdec_layer_apply(p, cfg, x, positions, memory):
     return x + apply_mlp(p["ffn"], h, cfg.act), jnp.float32(0.0)
 
 
-def xdec_layer_decode(p, cfg, x, cache, memory):
+def xdec_layer_decode(p, cfg, x, cache, memory, *, ragged: bool = False):
     h = apply_norm(cfg.norm, p["ln1"], x)
-    a, self_cache = attn.gqa_decode(p["self"], cfg, h, cache)
+    a, self_cache = attn.gqa_decode(p["self"], cfg, h, cache, ragged=ragged)
     x = x + a
     h = apply_norm(cfg.norm, p["ln_x"], x)
     x = x + attn.cross_attn_apply(p["cross"], cfg, h, memory)
@@ -245,9 +250,9 @@ def shared_attn_block_apply(p, cfg, x, positions):
     return x + apply_mlp(p["ffn"], h, cfg.act)
 
 
-def shared_attn_block_decode(p, cfg, x, cache):
+def shared_attn_block_decode(p, cfg, x, cache, *, ragged: bool = False):
     h = apply_norm(cfg.norm, p["ln1"], x)
-    a, cache = attn.gqa_decode(p["attn"], cfg, h, cache)
+    a, cache = attn.gqa_decode(p["attn"], cfg, h, cache, ragged=ragged)
     x = x + a
     h = apply_norm(cfg.norm, p["ln2"], x)
     return x + apply_mlp(p["ffn"], h, cfg.act), cache

@@ -430,8 +430,14 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> PyTree:
 
 
 def decode_step(cfg: ModelConfig, params: PyTree, batch: Dict[str, Any],
-                cache: PyTree):
-    """batch: {"token": [B] int32}. Returns (logits [B,V], new_cache)."""
+                cache: PyTree, *, ragged: bool = False):
+    """batch: {"token": [B] int32}. Returns (logits [B,V], new_cache).
+
+    ``ragged=True`` (static, serving-only) decodes with genuinely per-row
+    cache lengths: attention caches scatter each row's k/v at its own slot
+    instead of one synchronized dynamic_update_slice, so a continuous-
+    batching engine can run rows at different positions in ONE jitted step.
+    SSM/recurrent state layers are per-row already and ignore the flag."""
     fam = cfg.family
     x = _embed(cfg, params, batch["token"][:, None])     # [B,1,d]
     blk = params["blocks"]
@@ -440,19 +446,22 @@ def decode_step(cfg: ModelConfig, params: PyTree, batch: Dict[str, Any],
     if fam in (FAMILY_DENSE, FAMILY_MOE, FAMILY_VLM):
         if "dense" in blk:
             fn = lambda lp, h, c: B.decoder_layer_decode(lp, cfg, h, c,
-                                                         use_moe=False)
+                                                         use_moe=False,
+                                                         ragged=ragged)
             x, nc = _decode_scan(fn, blk["dense"], cache["dense"], x)
             new_cache["dense"] = nc
         if "moe" in blk:
             fn = lambda lp, h, c: B.decoder_layer_decode(lp, cfg, h, c,
-                                                         use_moe=True)
+                                                         use_moe=True,
+                                                         ragged=ragged)
             x, nc = _decode_scan(fn, blk["moe"], cache["moe"], x)
             new_cache["moe"] = nc
         if cfg.mtp:
             new_cache["mtp"] = cache["mtp"]
     elif fam == FAMILY_ENCDEC:
         memory = cache["memory"]
-        fn = lambda lp, h, c: B.xdec_layer_decode(lp, cfg, h, c, memory)
+        fn = lambda lp, h, c: B.xdec_layer_decode(lp, cfg, h, c, memory,
+                                                  ragged=ragged)
         x, nc = _decode_scan(fn, blk["xdec"], cache["self"], x)
         new_cache = {"self": nc, "memory": memory}
     elif fam == FAMILY_SSM:
@@ -477,7 +486,8 @@ def decode_step(cfg: ModelConfig, params: PyTree, batch: Dict[str, Any],
             pp, pc_m, pc_a = inp
             fn = lambda lp, hh, c: B.mamba_layer_decode(lp, cfg, hh, c)
             h, mc = _decode_scan(fn, pp, pc_m, h)
-            h, ac = B.shared_attn_block_decode(shared, cfg, h, pc_a)
+            h, ac = B.shared_attn_block_decode(shared, cfg, h, pc_a,
+                                               ragged=ragged)
             return h, (mc, ac)
 
         x, (mc, ac) = jax.lax.scan(
@@ -517,14 +527,30 @@ def prefill_with_cache(cfg: ModelConfig, params: PyTree,
     The attention contraction resolves the ``prefill_attn`` registry op; the
     enc-dec memory is the EXACT encoder output (no zeros-padded splice — the
     returned cache's memory shape follows the encoder, and decode re-traces
-    on it)."""
+    on it).
+
+    Ragged prompts (continuous batching): ``batch["lengths"]`` ([B] int32)
+    declares per-row prompt lengths for prompts packed LEFT-ALIGNED into the
+    fixed [B,S] buffer. The cache ``len`` becomes per-row, the returned
+    logits are taken at each row's last VALID position, and pad-tail cache
+    slots are dead (decode masks by per-row len and overwrites them).
+    Causality keeps every valid position pad-free; only attention-cache
+    families support it (SSM/recurrent state would absorb the pad tail)."""
     fam = cfg.family
+    lengths = batch.get("lengths")
+    if lengths is not None and fam not in (FAMILY_DENSE, FAMILY_MOE,
+                                           FAMILY_VLM):
+        raise NotImplementedError(
+            f"ragged prefill (batch['lengths']) is only supported for "
+            f"attention-cache families (dense/moe/vlm), not {fam!r}: a "
+            f"recurrent prefill state would absorb the pad tail")
     with registry.prefill_scope():
         tokens = batch["tokens"]
         x = _embed(cfg, params, tokens)
         positions = jnp.arange(tokens.shape[1])
         blk = params["blocks"]
         new_cache: Dict[str, Any] = {}
+        eff_lengths = lengths
 
         if fam == FAMILY_VLM:
             pr = params["projector"]
@@ -532,16 +558,20 @@ def prefill_with_cache(cfg: ModelConfig, params: PyTree,
             pe = jax.nn.gelu(pe @ pr["w1"]) @ pr["w2"]
             x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
             positions = jnp.arange(x.shape[1])
+            if lengths is not None:          # patch prefix is always valid
+                eff_lengths = lengths + pe.shape[1]
 
         if fam in (FAMILY_DENSE, FAMILY_MOE, FAMILY_VLM):
             if "dense" in blk:
                 fn = lambda lp, h, c: B.decoder_layer_prefill(
-                    lp, cfg, h, positions, c, use_moe=False)
+                    lp, cfg, h, positions, c, use_moe=False,
+                    lengths=eff_lengths)
                 x, nc = _decode_scan(fn, blk["dense"], cache["dense"], x)
                 new_cache["dense"] = nc
             if "moe" in blk:
                 fn = lambda lp, h, c: B.decoder_layer_prefill(
-                    lp, cfg, h, positions, c, use_moe=True)
+                    lp, cfg, h, positions, c, use_moe=True,
+                    lengths=eff_lengths)
                 x, nc = _decode_scan(fn, blk["moe"], cache["moe"], x)
                 new_cache["moe"] = nc
             if cfg.mtp:
@@ -591,6 +621,11 @@ def prefill_with_cache(cfg: ModelConfig, params: PyTree,
         else:
             raise ValueError(fam)
 
+        if eff_lengths is not None:
+            # per-row last VALID position (ragged prompts, left-aligned)
+            idx = jnp.clip(eff_lengths - 1, 0, x.shape[1] - 1)
+            x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
+            return _head(cfg, params, x_last)[:, 0], new_cache
         return _head(cfg, params, x[:, -1:])[:, 0], new_cache
 
 

@@ -1,0 +1,218 @@
+"""Continuous batching: ragged prefill/decode parity, staggered-admission
+parity, scheduler invariants, and the continuous-vs-static step count.
+
+The load-bearing property throughout: per-row isolation. A request's token
+stream may depend ONLY on its own prompt (greedy decode), never on its
+co-residents, its slot, or the decode step at which it was admitted."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.engine import Request, RunSpec, poisson_trace
+from repro.engine.serve import ServeEngine
+from repro.models import decode_step, init_cache, init_params, \
+    prefill_with_cache
+
+SPEC = RunSpec(arch="stablelm-1.6b", reduced=True, mesh_data=1, mesh_model=1)
+
+
+def _prompt(rng, vocab, n):
+    return rng.integers(0, vocab, size=n).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Model level: ragged prefill + ragged decode == each row served alone
+# ---------------------------------------------------------------------------
+
+def test_ragged_prefill_and_decode_match_solo_rows():
+    cfg = get_reduced("stablelm-1.6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    S, GEN = 12, 5
+    lengths = np.array([12, 7, 4], np.int32)
+    rows = [_prompt(rng, cfg.vocab_size, l) for l in lengths]
+    prompts = np.zeros((len(rows), S), np.int32)
+    for b, r in enumerate(rows):
+        prompts[b, :len(r)] = r
+
+    cache = init_cache(cfg, len(rows), S + GEN)
+    logits, cache = prefill_with_cache(
+        cfg, params, {"tokens": jnp.asarray(prompts),
+                      "lengths": jnp.asarray(lengths)}, cache)
+    # per-row cache lens are the ragged prompt lengths, on every layer
+    for layer_len in np.asarray(cache["dense"]["len"]):
+        np.testing.assert_array_equal(layer_len, lengths)
+    toks = [jnp.argmax(logits, -1)]
+    for _ in range(GEN - 1):
+        lg, cache = decode_step(cfg, params, {"token": toks[-1]}, cache,
+                                ragged=True)
+        toks.append(jnp.argmax(lg, -1))
+    ragged = np.stack([np.asarray(t) for t in toks], 1)
+
+    for b, r in enumerate(rows):
+        c = init_cache(cfg, 1, len(r) + GEN)
+        lg, c = prefill_with_cache(cfg, params,
+                                   {"tokens": jnp.asarray(r)[None]}, c)
+        solo = [jnp.argmax(lg, -1)]
+        for _ in range(GEN - 1):
+            lg, c = decode_step(cfg, params, {"token": solo[-1]}, c)
+            solo.append(jnp.argmax(lg, -1))
+        np.testing.assert_array_equal(
+            ragged[b], np.concatenate([np.asarray(t) for t in solo]),
+            err_msg=f"row {b} (length {lengths[b]}) diverged from solo serve")
+
+
+def test_ragged_prefill_rejects_recurrent_families():
+    cfg = get_reduced("xlstm-350m")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    cache = init_cache(cfg, 2, 16)
+    with pytest.raises(NotImplementedError):
+        prefill_with_cache(cfg, params,
+                           {"tokens": jnp.zeros((2, 8), jnp.int32),
+                            "lengths": jnp.array([8, 4], jnp.int32)}, cache)
+
+
+# ---------------------------------------------------------------------------
+# Engine level: staggered admission parity
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def engine():
+    eng = ServeEngine(SPEC, batch=2, prompt_len=12, gen=8, verbose=False)
+    eng.build()
+    return eng
+
+
+def _workload(engine, n=5, seed=3):
+    rng = np.random.default_rng(seed)
+    vocab = engine.cfg.vocab_size
+    reqs = []
+    arrivals = [0, 1, 2, 4, 6, 8, 10, 12][:n]
+    for i in range(n):
+        plen = int(rng.integers(4, 13))
+        gen = [8, 3, 6, 2, 8, 4, 7, 5][i % 8]
+        reqs.append(Request(rid=i, prompt=_prompt(rng, vocab, plen),
+                            max_gen=gen, arrival_step=arrivals[i]))
+    return reqs
+
+
+def test_staggered_admission_parity(engine):
+    """A request admitted into a live batch at decode step k produces
+    EXACTLY the tokens of the same prompt served alone: prefilling into a
+    freed slot (cache splice) must not perturb anyone, and co-residents
+    must not perturb the admitted row."""
+    reqs = _workload(engine)
+    res = engine.serve(reqs, max_slots=2)
+    assert res["metrics"]["admitted_mid_decode"] > 0, \
+        "workload too tame: nothing was admitted mid-decode"
+    for r in res["requests"]:
+        assert r.tokens is not None and len(r.tokens) == r.max_gen
+        solo = engine.serve(
+            [Request(rid=r.rid, prompt=r.prompt, max_gen=r.max_gen)],
+            max_slots=2)["requests"][0]
+        np.testing.assert_array_equal(
+            r.tokens, solo.tokens,
+            err_msg=f"request {r.rid} (admitted step "
+                    f"{res['scheduler'].admit_step[r.rid]}) diverged from "
+                    f"its solo serve")
+
+
+def test_scheduler_invariants(engine):
+    """No slot serves two live requests; a request's slot interval is
+    exclusive; done rows emit nothing (every history row is attributed to
+    at most one live owner per slot, and completed requests stop
+    appearing)."""
+    reqs = _workload(engine, n=5, seed=7)
+    res = engine.serve(reqs, max_slots=2)
+    sched = res["scheduler"]
+
+    # every request admitted exactly once and completed
+    admits = [e for e in res["events"] if e[0] == "admit"]
+    completes = [e for e in res["events"] if e[0] == "complete"]
+    assert sorted(e[3] for e in admits) == sorted(r.rid for r in reqs)
+    assert sorted(e[3] for e in completes) == sorted(r.rid for r in reqs)
+
+    # per-slot live intervals never overlap: replay the event log
+    live_on_slot = {}
+    for kind, step, slot, rid in res["events"]:
+        if kind == "admit":
+            assert slot not in live_on_slot, \
+                f"slot {slot} admitted {rid} while serving {live_on_slot[slot]}"
+            live_on_slot[slot] = rid
+        else:
+            assert live_on_slot.get(slot) == rid
+            del live_on_slot[slot]
+    assert not live_on_slot
+
+    # done rows stop emitting: each request owns exactly max_gen history
+    # rows, and they are CONTIGUOUS on its slot (nothing attributed after
+    # completion, nothing interleaved with the slot's next tenant)
+    owners = np.stack(res["owners_log"])               # [n_hist, n_slots]
+    for r in reqs:
+        slot = sched.slot_of[r.rid]
+        hits = np.flatnonzero(owners[:, slot] == r.rid)
+        assert len(hits) == r.max_gen, \
+            f"request {r.rid} emitted {len(hits)} != {r.max_gen}"
+        assert np.array_equal(hits, np.arange(hits[0], hits[0] + len(hits))), \
+            f"request {r.rid}'s emissions are not contiguous: {hits}"
+        assert hits[0] == sched.first_hist[r.rid]
+
+
+def test_continuous_needs_fewer_steps_than_static(engine):
+    """On a staggered-length workload the iteration-level scheduler refills
+    freed slots instead of draining the batch, so it needs strictly fewer
+    decode steps (the deterministic, wall-clock-free half of the
+    throughput claim)."""
+    def reqs():
+        rng = np.random.default_rng(11)
+        return [Request(rid=i, prompt=_prompt(rng, engine.cfg.vocab_size, 8),
+                        max_gen=8 if i % 2 == 0 else 2, arrival_step=0)
+                for i in range(6)]
+    cont = engine.serve(reqs(), max_slots=2)["metrics"]
+    stat = engine.serve(reqs(), max_slots=2, policy="static")["metrics"]
+    assert cont["total_generated"] == stat["total_generated"]
+    assert cont["decode_steps"] < stat["decode_steps"]
+
+
+def test_eos_early_stop(engine):
+    """An explicit eos_id truncates a request the step its row emits it."""
+    rng = np.random.default_rng(5)
+    prompt = _prompt(rng, engine.cfg.vocab_size, 10)
+    base = engine.serve([Request(rid=0, prompt=prompt, max_gen=8)],
+                        max_slots=2)["requests"][0]
+    assert len(base.tokens) == 8
+    eos = int(base.tokens[3])
+    trunc = engine.serve([Request(rid=0, prompt=prompt, max_gen=8)],
+                         max_slots=2, eos_id=eos)["requests"][0]
+    assert len(trunc.tokens) <= 4
+    assert int(trunc.tokens[-1]) == eos
+    np.testing.assert_array_equal(trunc.tokens,
+                                  base.tokens[:len(trunc.tokens)])
+
+
+def test_poisson_trace_deterministic():
+    a = poisson_trace(16, 0.5, seed=4)
+    b = poisson_trace(16, 0.5, seed=4)
+    assert a == b and len(a) == 16
+    assert all(x <= y for x, y in zip(a, a[1:])), "arrivals must be sorted"
+    assert poisson_trace(16, 0.5, seed=5) != a
+
+
+def test_serve_rejects_recurrent_families():
+    eng = ServeEngine(SPEC.with_(arch="xlstm-350m"), batch=2, prompt_len=8,
+                      gen=4, verbose=False)
+    with pytest.raises(NotImplementedError):
+        eng.serve(max_slots=2, num_requests=2)
+
+
+def test_serve_validates_request_shapes(engine):
+    rng = np.random.default_rng(0)
+    too_long = Request(rid=0, prompt=_prompt(rng, 512, 99), max_gen=4)
+    with pytest.raises(ValueError):
+        engine.serve([too_long], max_slots=2)
+    too_greedy = Request(rid=0, prompt=_prompt(rng, 512, 4), max_gen=99)
+    with pytest.raises(ValueError):
+        engine.serve([too_greedy], max_slots=2)
