@@ -10,6 +10,8 @@
 #     bash scripts/verify.sh train      # TrainEngine smokes (dp + zero_cdp)
 #     bash scripts/verify.sh kernels    # pallas-kernel train smokes
 #     bash scripts/verify.sh serve      # ServeEngine smokes (static + CB)
+#     bash scripts/verify.sh chaos      # resilience: fault-injection suite
+#                                       # + a seeded chaos train smoke
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -61,15 +63,29 @@ run_serve() {
         --host-devices 1
 }
 
+run_chaos() {
+    echo "=== chaos: deterministic fault-injection suite ==="
+    python -m pytest -x -q tests/test_resilience.py
+
+    echo "=== chaos smoke: guarded train surviving an injected NaN step ==="
+    # reduced shapes, fixed seed: the nan_loss fault at step 2 is skipped
+    # by the health guard and the run finishes finite
+    python -m repro.launch.train --arch stablelm-1.6b --reduced \
+        --steps 4 --batch 2 --seq 16 --mesh-data 1 --mesh-model 1 \
+        --host-devices 1 --log-every 1 --resilience nan_loss@2 \
+        --keep-last 2 --seed 0
+}
+
 target="${1:-all}"
 case "$target" in
     tests)   run_tests ;;
     train)   run_train ;;
     kernels) run_kernels ;;
     serve)   run_serve ;;
-    all)     run_tests; run_train; run_kernels; run_serve ;;
+    chaos)   run_chaos ;;
+    all)     run_tests; run_train; run_kernels; run_serve; run_chaos ;;
     *)
-        echo "unknown target '$target' (expected tests|train|kernels|serve|all)" >&2
+        echo "unknown target '$target' (expected tests|train|kernels|serve|chaos|all)" >&2
         exit 2
         ;;
 esac

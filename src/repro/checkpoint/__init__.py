@@ -1,3 +1,7 @@
-from repro.checkpoint.io import latest_step, restore, save
+from repro.checkpoint.io import (gc_old_steps, intact_steps,
+                                 latest_intact_step, latest_step, list_steps,
+                                 restore, save, sweep_tmp, verify_step)
 
-__all__ = ["latest_step", "restore", "save"]
+__all__ = ["gc_old_steps", "intact_steps", "latest_intact_step",
+           "latest_step", "list_steps", "restore", "save", "sweep_tmp",
+           "verify_step"]

@@ -1,20 +1,36 @@
-"""Pytree checkpointing: flat-keyed .npz + structure manifest.
+"""Pytree checkpointing: flat-keyed .npz + a checksummed commit manifest.
 
 Process-local (single-host CPU container); on a real multi-host deployment
 each host writes its addressable shards — the flat-key format is unchanged.
+
+Crash consistency: ``save`` writes the ``.npz`` via atomic
+write-tmp-then-rename, then commits it with a ``step_XXXXXXXX.manifest.json``
+carrying the file's CRC32 + byte size (also written atomically). A step is
+INTACT iff its manifest checksum matches the file on disk — a ``kill -9``
+at any point leaves either a fully committed step or a detectably broken
+one, never a silently truncated restore. ``restore(step=None)`` walks steps
+newest-first and falls back to the newest intact one (manifest-less legacy
+steps count as intact when they still load). ``keep_last=`` garbage-collects
+old steps after each successful save; transient IO errors retry with
+exponential backoff; stale ``*.tmp.*`` junk from a killed prior run is
+swept on the next save.
 """
 from __future__ import annotations
 
 import json
 import os
 import re
-from typing import Any, Optional, Tuple
+import time
+import warnings
+import zlib
+from typing import Any, Callable, List, Optional, Tuple
 
 import jax
 import numpy as np
 
 PyTree = Any
 _SEP = "/"
+MANIFEST_FORMAT = 1
 
 
 def _flatten(tree: PyTree):
@@ -29,31 +45,154 @@ def _flatten(tree: PyTree):
     return flat
 
 
-def save(ckpt_dir: str, step: int, tree: PyTree) -> str:
+def _step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+
+
+def _manifest_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}.manifest.json")
+
+
+def _crc32(path: str, chunk: int = 1 << 20) -> int:
+    crc = 0
+    with open(path, "rb") as f:
+        while True:
+            buf = f.read(chunk)
+            if not buf:
+                return crc
+            crc = zlib.crc32(buf, crc)
+
+
+def sweep_tmp(ckpt_dir: str) -> List[str]:
+    """Remove stale ``*.tmp.*`` files left by a crashed prior run — a
+    killed save must not leave junk for the directory listing to trip
+    over. Returns the swept paths."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    swept = []
+    for f in os.listdir(ckpt_dir):
+        if ".tmp." in f or f.endswith(".tmp"):
+            path = os.path.join(ckpt_dir, f)
+            try:
+                os.remove(path)
+                swept.append(path)
+            except OSError:
+                pass                      # a racing writer owns it; skip
+    return swept
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree, *,
+         keep_last: Optional[int] = None,
+         retries: int = 3, backoff_s: float = 0.05,
+         injector=None) -> str:
+    """Write + commit one step. Atomicity: the npz lands via tmp+rename,
+    then the manifest (the commit record) lands via tmp+rename — readers
+    only trust manifested steps, so any crash point is recoverable.
+    Transient ``OSError``s retry ``retries`` times with exponential
+    backoff. ``injector`` is a resilience ``FaultInjector`` probed at the
+    ``ckpt_io`` site once per attempt (chaos tests)."""
     os.makedirs(ckpt_dir, exist_ok=True)
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    sweep_tmp(ckpt_dir)
+    path = _step_path(ckpt_dir, step)
     tmp = path + ".tmp.npz"
     flat = _flatten(tree)
-    np.savez(tmp, **flat)
-    os.replace(tmp, path)
+    last_err: Optional[BaseException] = None
+    for attempt in range(retries + 1):
+        try:
+            if injector is not None and injector.fires("ckpt_io", step):
+                raise OSError(f"injected transient IO error (step {step}, "
+                              f"attempt {attempt})")
+            np.savez(tmp, **flat)
+            os.replace(tmp, path)
+            manifest = {"format": MANIFEST_FORMAT, "step": step,
+                        "file": os.path.basename(path),
+                        "crc32": _crc32(path),
+                        "bytes": os.path.getsize(path)}
+            mtmp = _manifest_path(ckpt_dir, step) + ".tmp.json"
+            with open(mtmp, "w") as f:
+                json.dump(manifest, f)
+            os.replace(mtmp, _manifest_path(ckpt_dir, step))
+            last_err = None
+            break
+        except OSError as e:
+            last_err = e
+            if attempt < retries:
+                time.sleep(backoff_s * (2 ** attempt))
+    if last_err is not None:
+        raise last_err
+    if keep_last is not None:
+        gc_old_steps(ckpt_dir, keep_last)
     return path
 
 
-def latest_step(ckpt_dir: str) -> Optional[int]:
+def gc_old_steps(ckpt_dir: str, keep_last: int) -> List[int]:
+    """Retention: drop everything but the newest ``keep_last`` steps
+    (npz + manifest). Returns the removed step ids."""
+    if keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+    steps = sorted(list_steps(ckpt_dir))
+    drop = steps[:-keep_last] if len(steps) > keep_last else []
+    for s in drop:
+        for p in (_step_path(ckpt_dir, s), _manifest_path(ckpt_dir, s)):
+            try:
+                os.remove(p)
+            except OSError:
+                pass
+    return drop
+
+
+def list_steps(ckpt_dir: str) -> List[int]:
+    """All step ids with an ``.npz`` on disk (committed or not); tmp junk
+    from a killed save never matches the strict pattern."""
     if not os.path.isdir(ckpt_dir):
-        return None
-    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
-             if (m := re.match(r"step_(\d+)\.npz$", f))]
-    return max(steps) if steps else None
+        return []
+    return sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
+                  if (m := re.fullmatch(r"step_(\d+)\.npz", f)))
 
 
-def restore(ckpt_dir: str, template: PyTree, step: Optional[int] = None,
-            shardings: Optional[PyTree] = None) -> Tuple[PyTree, int]:
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def verify_step(ckpt_dir: str, step: int) -> Tuple[bool, str]:
+    """(intact, reason). Intact = manifest present and its CRC32/size
+    match the file — or a legacy manifest-less npz that still loads
+    (pre-manifest checkpoints stay restorable)."""
+    path = _step_path(ckpt_dir, step)
+    if not os.path.exists(path):
+        return False, "missing npz"
+    mpath = _manifest_path(ckpt_dir, step)
+    if not os.path.exists(mpath):
+        try:
+            with np.load(path) as data:
+                data.files
+            return True, "legacy (no manifest)"
+        except Exception as e:
+            return False, f"legacy npz unreadable: {e!r}"
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return False, f"manifest unreadable: {e!r}"
+    if manifest.get("bytes") != os.path.getsize(path):
+        return False, (f"size mismatch: manifest {manifest.get('bytes')} "
+                       f"vs disk {os.path.getsize(path)}")
+    if manifest.get("crc32") != _crc32(path):
+        return False, "crc32 mismatch"
+    return True, "ok"
+
+
+def intact_steps(ckpt_dir: str) -> List[int]:
+    return [s for s in list_steps(ckpt_dir) if verify_step(ckpt_dir, s)[0]]
+
+
+def latest_intact_step(ckpt_dir: str) -> Optional[int]:
+    steps = intact_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def _load_tree(path: str, template: PyTree) -> PyTree:
     data = np.load(path)
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
@@ -64,7 +203,53 @@ def restore(ckpt_dir: str, template: PyTree, step: Optional[int] = None,
         if hasattr(leaf, "dtype"):
             arr = arr.astype(leaf.dtype)
         leaves.append(arr)
-    tree = jax.tree_util.tree_unflatten(treedef, leaves)
-    if shardings is not None:
-        tree = jax.tree.map(jax.device_put, tree, shardings)
-    return tree, step
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def restore(ckpt_dir: str, template: PyTree, step: Optional[int] = None,
+            shardings: Optional[PyTree] = None, *,
+            on_fallback: Optional[Callable[[int, str], None]] = None
+            ) -> Tuple[PyTree, int]:
+    """Restore a step. An EXPLICIT ``step`` is strict: a broken file
+    raises (the caller asked for that exact state). ``step=None`` walks
+    newest-first and automatically falls back to the newest INTACT step —
+    every skipped step is reported via ``on_fallback(step, reason)`` (and
+    a warning), so a truncated latest checkpoint costs one save interval,
+    not the run."""
+    if step is not None:
+        intact, reason = verify_step(ckpt_dir, step)
+        if not intact:
+            raise ValueError(
+                f"checkpoint step {step} in {ckpt_dir} is not intact: "
+                f"{reason}")
+        tree = _load_tree(_step_path(ckpt_dir, step), template)
+        if shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        return tree, step
+
+    steps = list_steps(ckpt_dir)
+    if not steps:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    for s in reversed(steps):
+        intact, reason = verify_step(ckpt_dir, s)
+        if not intact:
+            warnings.warn(f"skipping broken checkpoint step {s} in "
+                          f"{ckpt_dir}: {reason}", RuntimeWarning,
+                          stacklevel=2)
+            if on_fallback is not None:
+                on_fallback(s, reason)
+            continue
+        try:
+            tree = _load_tree(_step_path(ckpt_dir, s), template)
+        except Exception as e:           # checksum raced a writer, etc.
+            warnings.warn(f"skipping unreadable checkpoint step {s} in "
+                          f"{ckpt_dir}: {e!r}", RuntimeWarning, stacklevel=2)
+            if on_fallback is not None:
+                on_fallback(s, repr(e))
+            continue
+        if shardings is not None:
+            tree = jax.tree.map(jax.device_put, tree, shardings)
+        return tree, s
+    raise FileNotFoundError(
+        f"no intact checkpoints in {ckpt_dir} (all of {steps} failed "
+        f"verification)")

@@ -9,15 +9,37 @@ import jax
 import numpy as np
 
 
+class _Sentinel:
+    def __init__(self, name):
+        self.name = name
+
+    def __repr__(self):
+        return f"<loader {self.name}>"
+
+
+_ERROR = _Sentinel("error")      # worker died; loader._exc has the cause
+_END = _Sentinel("end")          # host iterator exhausted cleanly
+
+
 class ShardedLoader:
     """Wraps a host batch iterator; places each batch with the given
-    shardings and prefetches ``depth`` batches ahead on a worker thread."""
+    shardings and prefetches ``depth`` batches ahead on a worker thread.
+
+    Failure contract (tested in tests/test_resilience.py): a worker-thread
+    exception is re-raised in ``__next__`` — after the already-prefetched
+    good batches drain — instead of hanging the training loop forever, and
+    every subsequent ``__next__`` re-raises the same exception (a consumer
+    retry loop never blocks on a dead worker). A cleanly exhausted iterator
+    raises ``StopIteration`` the same way. ``close()`` joins the worker in
+    both cases."""
 
     def __init__(self, host_iter: Iterator, shardings=None, depth: int = 2):
         self._it = host_iter
         self._sh = shardings
         self._q: queue.Queue = queue.Queue(maxsize=depth)
         self._stop = threading.Event()
+        self._exc: Optional[BaseException] = None
+        self._ended = False
         self._thread = threading.Thread(target=self._work, daemon=True)
         self._thread.start()
 
@@ -27,30 +49,48 @@ class ShardedLoader:
         return jax.tree.map(
             lambda x, s: jax.device_put(np.asarray(x), s), batch, self._sh)
 
+    def _put(self, item) -> bool:
+        """Stop-aware put: close() must not deadlock on a full queue (and a
+        crash sentinel must not block behind one either)."""
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
     def _work(self):
         try:
             for batch in self._it:
                 if self._stop.is_set():
                     return
                 placed = self._place(batch)
-                while not self._stop.is_set():   # stop-aware put: close()
-                    try:                          # must not deadlock on a
-                        self._q.put(placed, timeout=0.1)  # full queue
-                        break
-                    except queue.Full:
-                        continue
-                if self._stop.is_set():
+                if not self._put(placed):
                     return
+            self._ended = True
+            self._put(_END)
         except Exception as e:  # surface loader errors to the consumer
-            self._q.put(e)
+            self._exc = e       # set BEFORE the sentinel lands: a consumer
+            self._put(_ERROR)   # that sees _ERROR always finds the cause
 
     def __iter__(self):
         return self
 
     def __next__(self):
+        # a dead worker with a drained queue must fail immediately, not
+        # block in q.get() forever (the sentinel was consumed by an
+        # earlier __next__, or never enqueued because close() raced it)
+        if self._q.empty():
+            if self._exc is not None:
+                raise self._exc
+            if self._ended:
+                raise StopIteration
         item = self._q.get()
-        if isinstance(item, Exception):
-            raise item
+        if item is _ERROR:
+            raise self._exc
+        if item is _END:
+            raise StopIteration
         return item
 
     def close(self):
@@ -62,5 +102,7 @@ class ShardedLoader:
             pass
         # wait for the worker to notice the stop flag: letting the daemon
         # thread die mid device_put at interpreter teardown aborts the
-        # process ("terminate called without an active exception")
+        # process ("terminate called without an active exception"). After
+        # a worker crash the thread is already dead and this returns
+        # immediately.
         self._thread.join(timeout=10.0)

@@ -9,7 +9,8 @@ forcing, and mesh construction; the engines own the train and serve loops.
 from repro.engine.spec import RunSpec
 
 __all__ = ["RunSpec", "TrainEngine", "ServeEngine", "Request",
-           "poisson_trace"]
+           "poisson_trace", "Fault", "FaultInjector", "EventLog",
+           "HealthGuard", "parse_faults"]
 
 
 def __getattr__(name):
@@ -23,4 +24,9 @@ def __getattr__(name):
         # continuous-batching workload types (jax-free import, like RunSpec)
         from repro.engine import batching
         return getattr(batching, name)
+    if name in ("Fault", "FaultInjector", "EventLog", "HealthGuard",
+                "parse_faults"):
+        # resilience layer (jax-free import, like RunSpec)
+        from repro.engine import resilience
+        return getattr(resilience, name)
     raise AttributeError(f"module 'repro.engine' has no attribute {name!r}")

@@ -36,16 +36,28 @@ PyTree = Any
 # Requests and arrival traces
 # ---------------------------------------------------------------------------
 
+#: terminal request states: every request leaves ``serve()`` in exactly one
+REQUEST_STATUSES = ("ok", "timeout", "rejected", "failed")
+
+
 @dataclasses.dataclass
 class Request:
     """One serving request. ``arrival_step`` is in decode steps (the
     scheduler's logical clock); ``tokens`` is filled in by the engine after
-    the request completes."""
+    the request completes. ``status`` is the degradation contract: serve()
+    always returns every request with a terminal status ("ok" | "timeout"
+    | "rejected" | "failed") and whatever partial ``tokens`` it earned —
+    it never raises a per-request failure at the whole batch.
+    ``deadline_steps`` is this request's step budget (queue wait + decode)
+    overriding serve()'s engine-wide default."""
     rid: int
     prompt: np.ndarray                  # [S] int32, unpadded
     max_gen: int
     arrival_step: int = 0
     tokens: Optional[np.ndarray] = None
+    status: str = "queued"
+    error: Optional[str] = None
+    deadline_steps: Optional[int] = None
 
 
 def poisson_trace(n: int, rate: float, seed: int = 0) -> List[int]:
@@ -87,9 +99,12 @@ class SlotScheduler:
         admit(slot, req, step, hist_idx)  — slot takes a queued request
         log_emissions(step, now)          — one token logged per live slot;
                                             returns slots that just finished
+        evict(slot, step, now, reason)    — early termination (deadline /
+                                            quarantine): frees the slot,
+                                            keeps the partial emission count
 
-    ``events`` is an append-only log of ("admit"|"complete", step, slot,
-    rid) tuples for tests and reporting."""
+    ``events`` is an append-only log of ("admit"|"complete"|reason, step,
+    slot, rid) tuples for tests and reporting."""
 
     def __init__(self, n_slots: int):
         self.n_slots = n_slots
@@ -148,6 +163,21 @@ class SlotScheduler:
                 self.owner[slot] = None
                 freed.append(slot)
         return freed
+
+    def evict(self, slot: int, step: int, now: float, reason: str) -> int:
+        """Terminate the slot's live request early (deadline expiry or
+        poison quarantine). The partial emission count is kept so the
+        engine can return the tokens generated so far. Returns the evicted
+        rid."""
+        rid = self.owner[slot]
+        if rid is None:
+            raise RuntimeError(f"evict on free slot {slot}")
+        self.gen_done[rid] = self.logged[slot]
+        self.complete_step[rid] = step
+        self.complete_time[rid] = now
+        self.events.append((reason, step, slot, rid))
+        self.owner[slot] = None
+        return rid
 
 
 # ---------------------------------------------------------------------------

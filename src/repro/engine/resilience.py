@@ -1,0 +1,264 @@
+"""Resilience primitives: deterministic fault injection + the guards that
+survive the faults.
+
+Three framework-light pieces shared by :class:`TrainEngine`,
+:class:`ServeEngine`, ``checkpoint.io`` and ``data.ShardedLoader``:
+
+  * :class:`FaultInjector` — a seedable, deterministic chaos source. Each
+    :class:`Fault` names an injection SITE (where the failure happens) and
+    fires either at an exact step (``site@step``) or with a seeded
+    per-query probability (``site%prob``); every decision is recorded in
+    ``injector.log`` so two runs with the same spec + seed inject the
+    exact same faults at the exact same steps (the chaos tests' replay
+    contract).
+  * :class:`HealthGuard` — per-step ``isfinite(loss)`` + EMA loss-spike
+    detection. The guard never mutates engine state; it returns a verdict
+    and the engine decides (skip the update / roll back). Skipping an
+    update is legal under CDP's uniform-staleness rules: the paper's own
+    update machinery already tolerates one-step-stale parameters, so a
+    skipped micro-batch step is just another bounded delay (PipeDream's
+    weight stashing makes the same observation for rollback).
+  * :class:`EventLog` — the structured ``engine.events`` record of every
+    inject / skip / rollback / retry / quarantine, append-only, queryable
+    by kind. This is the audit trail SLO-aware admission (ROADMAP
+    direction 2) will consume.
+
+This module imports no jax at module scope (like ``engine.spec`` and
+``engine.batching``) so launchers can parse ``--resilience`` specs before
+device state exists.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+# Injection sites. Sites are queried with a STEP-LIKE key: the training
+# step for train-side sites, the request id for poison_request, the save
+# step for checkpoint sites.
+SITES = (
+    "loader",          # host-iterator raises (dead loader worker)
+    "nan_loss",        # non-finite loss + poisoned update at a step
+    "loss_spike",      # loss multiplied by `arg` (default 1e3) at a step
+    "slow_step",       # time.sleep(arg) before a step (preemption stall)
+    "ckpt_truncate",   # newest checkpoint file truncated after save
+    "ckpt_io",         # save's write raises OSError for `arg` attempts
+    "poison_request",  # serve request `rid` poisons its cache rows to NaN
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One injection rule. Either ``step`` (exact fire point) or ``prob``
+    (seeded per-query coin) must be set. ``count`` bounds total fires —
+    exactly-once by default, so a retried site (a rebuilt loader, a save
+    retry loop) observes the fault cleared on the second attempt.
+    ``arg`` is site-specific: spike factor, sleep seconds, number of
+    failing IO attempts."""
+    site: str
+    step: Optional[int] = None
+    prob: float = 0.0
+    count: int = 1
+    arg: float = 0.0
+
+    def __post_init__(self):
+        if self.site not in SITES:
+            raise ValueError(
+                f"unknown fault site {self.site!r} (expected one of {SITES})")
+        if self.step is None and self.prob <= 0.0:
+            raise ValueError(
+                f"fault {self.site!r} needs step= (exact) or prob= (seeded)")
+
+
+def parse_faults(spec: str) -> List[Fault]:
+    """Parse a CLI fault spec: comma-separated ``site@step[:arg]`` /
+    ``site%prob[:arg]`` clauses; ``"on"``/``""`` means guards-only (no
+    injected faults).
+
+        "nan_loss@3,loader@5,ckpt_io@4:2"   # nan at step 3, loader crash
+                                            # at batch 5, 2 failed write
+                                            # attempts at save step 4
+    """
+    faults: List[Fault] = []
+    for clause in spec.split(","):
+        clause = clause.strip()
+        if not clause or clause == "on":
+            continue
+        arg = 0.0
+        if ":" in clause:
+            clause, arg_s = clause.rsplit(":", 1)
+            arg = float(arg_s)
+        if "@" in clause:
+            site, step_s = clause.split("@", 1)
+            faults.append(Fault(site=site, step=int(step_s), arg=arg,
+                                count=max(1, int(arg) if site == "ckpt_io"
+                                          else 1)))
+        elif "%" in clause:
+            site, prob_s = clause.split("%", 1)
+            faults.append(Fault(site=site, prob=float(prob_s), arg=arg))
+        else:
+            raise ValueError(
+                f"bad fault clause {clause!r}: expected site@step[:arg] or "
+                f"site%prob[:arg]")
+    return faults
+
+
+class FaultInjector:
+    """Deterministic fault source. ``fires(site, step)`` returns the
+    matching :class:`Fault` (and burns one of its ``count`` charges) or
+    None. Probabilistic faults draw from a per-fault ``default_rng(seed +
+    index)`` stream, so with a fixed seed AND the same query sequence the
+    fire pattern is exactly reproducible — which is what makes chaos runs
+    replayable (same seed -> same skip steps -> same final params)."""
+
+    def __init__(self, faults=(), seed: int = 0):
+        if isinstance(faults, str):
+            faults = parse_faults(faults)
+        self.faults: List[Fault] = list(faults)
+        self.seed = seed
+        self._rngs = [np.random.default_rng(seed + 7919 * i)
+                      for i in range(len(self.faults))]
+        self._fired = [0] * len(self.faults)
+        self.log: List[Tuple[str, int]] = []   # (site, step) of every fire
+
+    @classmethod
+    def from_spec(cls, spec, seed: int = 0) -> Optional["FaultInjector"]:
+        """None | "off" -> None; FaultInjector passes through; a spec
+        string ("on" or a fault list) builds a fresh injector."""
+        if spec is None or spec == "off":
+            return None
+        if isinstance(spec, FaultInjector):
+            return spec
+        return cls(spec, seed=seed)
+
+    def fires(self, site: str, step: int) -> Optional[Fault]:
+        for i, f in enumerate(self.faults):
+            if f.site != site or self._fired[i] >= f.count:
+                continue
+            hit = (step == f.step) if f.step is not None \
+                else bool(self._rngs[i].random() < f.prob)
+            if hit:
+                self._fired[i] += 1
+                self.log.append((site, step))
+                return f
+        return None
+
+
+class EventLog:
+    """Append-only structured log: every skip / rollback / retry /
+    quarantine the resilience layer performs is one dict with at least
+    ``kind`` and ``step``. Engines expose it as ``engine.events``."""
+
+    def __init__(self):
+        self.records: List[Dict[str, Any]] = []
+
+    def append(self, kind: str, step: int, **detail) -> Dict[str, Any]:
+        rec = {"kind": kind, "step": int(step), **detail}
+        self.records.append(rec)
+        return rec
+
+    def of(self, kind: str) -> List[Dict[str, Any]]:
+        return [r for r in self.records if r["kind"] == kind]
+
+    def __len__(self):
+        return len(self.records)
+
+    def __iter__(self):
+        return iter(self.records)
+
+    def __repr__(self):
+        kinds: Dict[str, int] = {}
+        for r in self.records:
+            kinds[r["kind"]] = kinds.get(r["kind"], 0) + 1
+        return f"EventLog({kinds})"
+
+
+class HealthGuard:
+    """Per-step loss health: non-finite detection + EMA spike detection.
+
+    ``check(loss)`` returns "ok" | "nonfinite" | "spike" and only folds
+    HEALTHY losses into the EMA (a spike must not drag the baseline up and
+    mask the next spike). The first ``warmup`` healthy steps never flag a
+    spike — early-training loss is legitimately jumpy. The guard is pure
+    bookkeeping; the engine owns the skip/rollback policy."""
+
+    def __init__(self, spike_factor: float = 10.0, ema_decay: float = 0.9,
+                 warmup: int = 5):
+        self.spike_factor = spike_factor
+        self.ema_decay = ema_decay
+        self.warmup = warmup
+        self.ema: Optional[float] = None
+        self.healthy_steps = 0
+
+    def check(self, loss: float) -> str:
+        if not np.isfinite(loss):
+            return "nonfinite"
+        if (self.ema is not None and self.healthy_steps >= self.warmup
+                and loss > self.spike_factor * max(self.ema, 1e-12)):
+            return "spike"
+        self.ema = loss if self.ema is None else \
+            self.ema_decay * self.ema + (1 - self.ema_decay) * loss
+        self.healthy_steps += 1
+        return "ok"
+
+    def reset(self) -> None:
+        """Forget the baseline (after a rollback: the restored params'
+        loss is the new normal)."""
+        self.ema = None
+        self.healthy_steps = 0
+
+
+# ---------------------------------------------------------------------------
+# Serve-side cache health (lazy jax import: host-side modules above stay
+# jax-free)
+# ---------------------------------------------------------------------------
+
+def row_health_fn(axes):
+    """A jit-ready ``cache -> [B] bool`` (True = every float leaf of the
+    row is finite). ``axes`` is the per-leaf batch-axis pytree from
+    ``batching.cache_batch_axes`` — the health reduction collapses every
+    OTHER axis, so one call covers all layers/leaves of a slot row. Used
+    by ServeEngine's quarantine pass."""
+    import jax
+    import jax.numpy as jnp
+
+    def health(cache):
+        flags = []
+
+        def leaf(x, ax):
+            if not jnp.issubdtype(x.dtype, jnp.inexact):
+                return
+            red = tuple(i for i in range(x.ndim) if i != ax)
+            flags.append(jnp.all(jnp.isfinite(x), axis=red))
+
+        jax.tree.map(leaf, cache, axes)
+        if not flags:
+            raise ValueError("cache has no float leaves to health-check")
+        out = flags[0]
+        for f in flags[1:]:
+            out = out & f
+        return out
+
+    return health
+
+
+def poison_rows_fn(axes):
+    """A jit-ready ``(cache, mask) -> cache`` that fills the masked rows'
+    FLOAT leaves with NaN (int leaves — per-row cache lengths — are kept:
+    a poisoned row is numerically dead, not structurally dead). This is
+    the injection half of quarantine: it simulates a request whose prompt
+    blows up the numerics of its own cache rows."""
+    import jax
+    import jax.numpy as jnp
+
+    def poison(cache, mask):
+        def leaf(x, ax):
+            if not jnp.issubdtype(x.dtype, jnp.inexact):
+                return x
+            m = mask.reshape((1,) * ax + (-1,) + (1,) * (x.ndim - ax - 1))
+            return jnp.where(m, jnp.nan, x)
+
+        return jax.tree.map(leaf, cache, axes)
+
+    return poison

@@ -25,6 +25,17 @@ by splicing a freshly prefilled cache row into the live cache
 For enc-dec archs the encoder runs through the public ``models.encode``
 and the memory cache is the EXACT encoder output (shape follows the
 encoder; no zeros-padded splice for cross-attention to leak onto).
+
+Graceful degradation (:meth:`serve`): every request leaves with a terminal
+``status`` ("ok" | "timeout" | "rejected" | "failed") and its partial
+tokens — malformed requests are REJECTED at enqueue time, per-request
+step-budget deadlines expire waiting or live requests as ``timeout``,
+``queue_limit`` bounds the admission queue with explicit rejection, a
+request whose cache rows go non-finite is QUARANTINED (evicted, status
+"failed") without perturbing its co-residents, and an exhausted
+``max_steps`` budget times the stragglers out instead of raising. The
+``resilience=`` fault injector (``engine.resilience``) can poison a
+request's cache rows to drive the quarantine path deterministically.
 """
 from __future__ import annotations
 
@@ -32,6 +43,7 @@ import time
 from typing import Any, Dict, List, Optional
 
 from repro.engine import batching
+from repro.engine import resilience as rsl
 from repro.engine.spec import RunSpec
 
 PyTree = Any
@@ -44,6 +56,7 @@ class ServeEngine:
                  gen: int = 32,
                  cache_len: Optional[int] = None,
                  temperature: float = 0.0,
+                 resilience=None,         # FaultInjector | spec str | None
                  verbose: bool = True):
         spec.ensure_host_devices()
         self.spec = spec
@@ -51,6 +64,9 @@ class ServeEngine:
         self.prompt_len = prompt_len
         self.gen = gen
         self.temperature = temperature
+        self.injector = rsl.FaultInjector.from_spec(resilience,
+                                                    seed=spec.seed)
+        self.events = rsl.EventLog()
         self.verbose = verbose
 
         self.cfg = spec.resolve_config()
@@ -287,9 +303,47 @@ class ServeEngine:
             return tok, cache, keys
 
         fns = {"admit": jax.jit(admit), "step": jax.jit(step),
-               "init": init_fn, "base_key": base_key}
+               "init": init_fn, "base_key": base_key, "axes": axes,
+               # resilience pair: [B] row health + NaN row poisoning (the
+               # quarantine detector and its chaos-test driver)
+               "health": jax.jit(rsl.row_health_fn(axes)),
+               "poison": jax.jit(rsl.poison_rows_fn(axes))}
         self._serving[key] = fns
         return fns
+
+    def _reject(self, req: batching.Request, why: str) -> None:
+        import numpy as np
+        req.status = "rejected"
+        req.error = why
+        req.tokens = np.zeros((0,), np.int32)
+        self.events.append("reject", req.arrival_step, rid=req.rid,
+                           reason=why)
+        self._log(f"request {req.rid} rejected: {why}")
+
+    def _validate_requests(self, requests, S_pad):
+        """Enqueue-time validation: a malformed request is REJECTED with a
+        per-request error instead of failing the whole batch mid-loop.
+        Returns the accepted requests."""
+        accepted, seen = [], set()
+        for r in requests:
+            if r.rid in seen:
+                self._reject(r, f"duplicate rid {r.rid}")
+                continue
+            seen.add(r.rid)
+            if len(r.prompt) > S_pad or len(r.prompt) < 1:
+                self._reject(r, f"prompt length {len(r.prompt)} not in "
+                                f"[1, prompt_len={S_pad}]")
+                continue
+            if r.max_gen > self.gen or r.max_gen < 1:
+                self._reject(r, f"max_gen {r.max_gen} not in "
+                                f"[1, gen={self.gen}]")
+                continue
+            if r.deadline_steps is not None and r.deadline_steps < 1:
+                self._reject(r, f"deadline_steps {r.deadline_steps} < 1")
+                continue
+            r.status = "queued"
+            accepted.append(r)
+        return accepted
 
     def serve(self, requests: Optional[List[batching.Request]] = None, *,
               max_slots: Optional[int] = None,
@@ -298,11 +352,12 @@ class ServeEngine:
               rate: float = 0.5,
               eos_id: Optional[int] = None,
               policy: str = "continuous",
+              deadline_steps: Optional[int] = None,
+              queue_limit: Optional[int] = None,
               max_steps: int = 1_000_000) -> Dict[str, Any]:
         """Serve a request queue with iteration-level (continuous) batching.
 
-        ``requests``: list of ``batching.Request`` (prompt lengths must fit
-        ``prompt_len``, ``max_gen`` must fit ``gen``); None synthesises a
+        ``requests``: list of ``batching.Request``; None synthesises a
         staggered workload of ``num_requests`` with the given ``arrival``
         trace ("none" | "poisson" at ``rate`` requests per decode step).
 
@@ -311,12 +366,26 @@ class ServeEngine:
         batch is admitted only when EVERY slot is free) — same jitted
         functions, so the two are directly comparable.
 
-        ``eos_id``: optional early-stop token. Checking it needs the token
-        values on the host, so it costs one [B]-int transfer per step;
-        leave None for fully async stepping.
+        ``eos_id``: optional early-stop token (validated against the vocab
+        — a bad id is an operator error and raises). Checking it needs the
+        token values on the host, so it costs one [B]-int transfer per
+        step; leave None for fully async stepping.
 
-        Returns the completed requests (``tokens`` filled), the scheduler
-        event log, and throughput/latency metrics (p50/p99)."""
+        Degradation contract: serve() NEVER raises for a per-request
+        failure. A malformed request is rejected at enqueue time
+        (``status="rejected"``); ``deadline_steps`` (engine-wide, or
+        per-request via ``Request.deadline_steps``) expires a request —
+        waiting or live — as ``status="timeout"`` with its partial tokens;
+        ``queue_limit`` bounds the admission queue with explicit rejection
+        at arrival; a request whose cache rows go non-finite is
+        quarantined (``status="failed"``) with its co-residents bitwise
+        unaffected; an exhausted ``max_steps`` budget times out every
+        unfinished request instead of discarding them. Everything that
+        completes normally returns ``status="ok"``.
+
+        Returns the requests (``tokens`` + ``status`` filled), the
+        scheduler event log, and throughput/latency metrics (p50/p99 over
+        requests that produced tokens)."""
         import jax
         import jax.numpy as jnp
         import numpy as np
@@ -329,6 +398,10 @@ class ServeEngine:
                 f"recurrent prefill state would absorb ragged pad tails)")
         if policy not in ("continuous", "static"):
             raise ValueError(f"unknown policy {policy!r}")
+        if eos_id is not None and not (0 <= eos_id < self.cfg.vocab_size):
+            raise ValueError(
+                f"eos_id={eos_id} outside the vocab [0, "
+                f"{self.cfg.vocab_size}) — no request could ever emit it")
         B = max_slots or self.batch
         S_pad = self.prompt_len
         if requests is None:
@@ -337,19 +410,16 @@ class ServeEngine:
                 arrival=arrival, rate=rate, seed=self.spec.seed)
         if not requests:
             raise ValueError("serve() needs at least one request")
-        for r in requests:
-            if len(r.prompt) > S_pad or len(r.prompt) < 1:
-                raise ValueError(
-                    f"request {r.rid}: prompt length {len(r.prompt)} not in "
-                    f"[1, prompt_len={S_pad}]")
-            if r.max_gen > self.gen or r.max_gen < 1:
-                raise ValueError(
-                    f"request {r.rid}: max_gen {r.max_gen} not in "
-                    f"[1, gen={self.gen}]")
+        accepted = self._validate_requests(requests, S_pad)
+        # the health/quarantine pass costs one [B]-bool transfer per step,
+        # so it only runs when chaos is possible (an injector is armed);
+        # the machinery itself is always compiled in
+        guard = self.injector is not None
 
         fns = self._serving_fns(B)
         sched = batching.SlotScheduler(B)
-        pending = sorted(requests, key=lambda r: (r.arrival_step, r.rid))
+        pending = sorted(accepted, key=lambda r: (r.arrival_step, r.rid))
+        waiting: List[batching.Request] = []
         tok = jnp.zeros((B,), jnp.int32)
         cache = fns["init"](B)
         keys = jax.vmap(lambda i: jax.random.fold_in(fns["base_key"], i))(
@@ -365,24 +435,77 @@ class ServeEngine:
         self._warmup(("serve_step", B), fns["step"], self.params, tok, cache,
                      keys)
 
+        def deadline_of(r):
+            return r.deadline_steps if r.deadline_steps is not None \
+                else deadline_steps
+
+        def quarantine(now):
+            """Evict live rows whose cache went non-finite. Rows are
+            independent across the batch axis, so a NaN row cannot perturb
+            its co-residents — the quarantine just frees the slot and
+            reports the failure instead of serving garbage."""
+            health = np.asarray(fns["health"](cache))
+            for slot in sched.live_slots():
+                if not health[slot]:
+                    rid = sched.evict(slot, t, now, "failed")
+                    sched.requests[rid].status = "failed"
+                    sched.requests[rid].error = ("non-finite cache rows "
+                                                 "(quarantined)")
+                    self.events.append("quarantine", t, rid=rid, slot=slot)
+                    self._log(f"step {t}: request {rid} quarantined "
+                              f"(non-finite cache rows)")
+
         history: List[Any] = []          # device [B] token vectors
         owners_log: List[np.ndarray] = []
         arrival_wall: Dict[int, float] = {}
         t = 0
         decode_steps = prefill_calls = admitted_mid_decode = 0
+        truncated = False
         t_start = time.perf_counter()
-        while pending or sched.live_slots():
+        while pending or waiting or sched.live_slots():
             if t >= max_steps:
-                raise RuntimeError(f"serve() exceeded max_steps={max_steps}")
+                truncated = True         # graceful: time the stragglers
+                break                    # out below instead of raising
             now = time.perf_counter()
+            # -- arrivals (bounded admission queue) --------------------------
+            n_arrived = 0
             for r in pending:
                 if r.arrival_step > t:
                     break                # pending is sorted by arrival
+                n_arrived += 1
                 arrival_wall.setdefault(r.rid, now)
+                if queue_limit is not None and len(waiting) >= queue_limit:
+                    self._reject(r, f"admission queue full "
+                                    f"(queue_limit={queue_limit})")
+                else:
+                    waiting.append(r)
+            pending = pending[n_arrived:]
+            # -- deadline expiry (waiting, then live) ------------------------
+            still = []
+            for r in waiting:
+                d = deadline_of(r)
+                if d is not None and t - r.arrival_step >= d:
+                    r.status = "timeout"
+                    r.error = f"deadline of {d} steps expired in queue"
+                    r.tokens = np.zeros((0,), np.int32)
+                    self.events.append("timeout", t, rid=r.rid,
+                                       where="queue")
+                else:
+                    still.append(r)
+            waiting = still
+            for slot in sched.live_slots():
+                r = sched.requests[sched.owner[slot]]
+                d = deadline_of(r)
+                if d is not None and t - r.arrival_step >= d:
+                    rid = sched.evict(slot, t, now, "timeout")
+                    sched.requests[rid].status = "timeout"
+                    sched.requests[rid].error = (f"deadline of {d} steps "
+                                                 f"expired mid-decode")
+                    self.events.append("timeout", t, rid=rid, where="slot")
             # -- admissions --------------------------------------------------
             free = sched.free_slots()
             elig = [] if (policy == "static" and sched.live_slots()) else \
-                [r for r in pending if r.arrival_step <= t]
+                waiting
             take = min(len(free), len(elig))
             if take:
                 was_live = bool(sched.live_slots())
@@ -390,6 +513,7 @@ class ServeEngine:
                 lengths = np.ones((B,), np.int32)
                 mask = np.zeros((B,), bool)
                 rids = np.zeros((B,), np.int32)
+                poison = np.zeros((B,), bool)
                 for slot, req in zip(free[:take], elig[:take]):
                     prompts[slot, :len(req.prompt)] = req.prompt
                     lengths[slot] = len(req.prompt)
@@ -398,13 +522,25 @@ class ServeEngine:
                     sched.admit(slot, req, t, len(history))
                     if was_live and t > 0:
                         admitted_mid_decode += 1
-                pending = pending[take:]
+                    if self.injector is not None and \
+                            self.injector.fires("poison_request", req.rid):
+                        poison[slot] = True
+                        self.events.append("inject", t,
+                                           site="poison_request",
+                                           rid=req.rid, slot=slot)
+                waiting = waiting[take:]
                 tok, cache, keys = fns["admit"](
                     self.params, jnp.asarray(prompts), jnp.asarray(lengths),
                     jnp.asarray(mask), jnp.asarray(rids), tok, cache, keys)
                 prefill_calls += 1
+                if poison.any():
+                    cache = fns["poison"](cache, jnp.asarray(poison))
+                if guard:
+                    quarantine(time.perf_counter())
             live = sched.live_slots()
             if not live:
+                if not pending and not waiting:
+                    break                # everything terminal: done
                 t += 1                   # idle tick: clock runs to the next
                 continue                 # arrival without touching devices
             # -- log this iteration's emission for every live slot ----------
@@ -424,20 +560,47 @@ class ServeEngine:
             if sched.live_slots():
                 tok, cache, keys = fns["step"](self.params, tok, cache, keys)
                 decode_steps += 1
+                if guard:
+                    quarantine(time.perf_counter())
             t += 1
         jax.block_until_ready(tok)
         wall = time.perf_counter() - t_start
+
+        if truncated:
+            now = time.perf_counter()
+            for slot in sched.live_slots():
+                rid = sched.evict(slot, t, now, "timeout")
+                sched.requests[rid].status = "timeout"
+                sched.requests[rid].error = f"max_steps={max_steps} exhausted"
+                self.events.append("timeout", t, rid=rid, where="max_steps")
+            for r in waiting + pending:
+                r.status = "timeout"
+                r.error = f"max_steps={max_steps} exhausted"
+                r.tokens = np.zeros((0,), np.int32)
+                self.events.append("timeout", t, rid=r.rid,
+                                   where="max_steps")
+            self._log(f"serve[{policy}]: max_steps={max_steps} exhausted — "
+                      f"returning partial results")
 
         hist = (np.asarray(jnp.stack(history))
                 if history else np.zeros((0, B), np.int32))   # ONE transfer
         for rid, req in sched.requests.items():
             h0, n = sched.first_hist[rid], sched.gen_done[rid]
             req.tokens = hist[h0:h0 + n, sched.slot_of[rid]].astype(np.int32)
+            if req.status == "queued":   # untouched by evict/timeout paths
+                req.status = "ok"
 
+        done = [r for r in requests
+                if r.rid in sched.complete_time and r.rid in arrival_wall]
         lat_s = np.array([sched.complete_time[r.rid] - arrival_wall[r.rid]
-                          for r in requests])
+                          for r in done]) if done else np.zeros((0,))
         lat_steps = np.array([sched.complete_step[r.rid] - r.arrival_step
-                              for r in requests])
+                              for r in done]) if done else np.zeros((0,))
+        pct = lambda a, q: round(float(np.percentile(a, q)), 4) \
+            if len(a) else 0.0
+        status_counts: Dict[str, int] = {}
+        for r in requests:
+            status_counts[r.status] = status_counts.get(r.status, 0) + 1
         total = int(sum(sched.gen_done.values()))
         metrics = {
             "policy": policy, "n_requests": len(requests),
@@ -446,19 +609,23 @@ class ServeEngine:
             "decode_tok_s": round(total / max(wall, 1e-9), 2),
             "decode_steps": decode_steps, "prefill_calls": prefill_calls,
             "admitted_mid_decode": admitted_mid_decode,
-            "latency_s": {"p50": round(float(np.percentile(lat_s, 50)), 4),
-                          "p99": round(float(np.percentile(lat_s, 99)), 4),
-                          "mean": round(float(lat_s.mean()), 4)},
-            "latency_steps": {"p50": float(np.percentile(lat_steps, 50)),
-                              "p99": float(np.percentile(lat_steps, 99))},
+            "status_counts": status_counts,
+            "truncated": truncated,
+            "latency_s": {"p50": pct(lat_s, 50), "p99": pct(lat_s, 99),
+                          "mean": round(float(lat_s.mean()), 4)
+                          if len(lat_s) else 0.0},
+            "latency_steps": {"p50": pct(lat_steps, 50),
+                              "p99": pct(lat_steps, 99)},
         }
         self._log(
             f"serve[{policy}]: {len(requests)} requests over {B} slots in "
             f"{wall:.2f}s — {metrics['decode_tok_s']} tok/s, "
             f"{decode_steps} decode steps, {prefill_calls} admission "
             f"prefills ({admitted_mid_decode} requests admitted mid-decode), "
+            f"status {status_counts}, "
             f"latency p50/p99 {metrics['latency_s']['p50']}/"
             f"{metrics['latency_s']['p99']}s")
         return {"requests": sorted(requests, key=lambda r: r.rid),
                 "events": sched.events, "owners_log": owners_log,
-                "scheduler": sched, "metrics": metrics}
+                "scheduler": sched, "metrics": metrics,
+                "engine_events": self.events}

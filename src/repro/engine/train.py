@@ -18,12 +18,27 @@ function of the step index — on restore the engine fast-forwards the host
 iterator to the restored step, so an interrupted+resumed run produces
 exactly the same state as an uninterrupted one (tested in
 tests/test_engine.py).
+
+Resilience (``resilience=`` / ``guard=`` / ``keep_last=``; see
+``engine.resilience``): with the health guard on, every step's loss is
+checked for finiteness and EMA spikes — a bad step's update is SKIPPED
+(the pre-step params are reused, which is legal under CDP's
+uniform-staleness rules: a dropped micro-batch update is just another
+bounded delay) and ``guard_max_bad`` consecutive bad steps roll the engine
+back to the newest intact checkpoint, replaying the data stream from
+there. Loader-worker crashes are retried by rebuilding the stream at the
+current step (the stream is a pure function of the step index, so the
+retried batch is bit-identical). Every skip / rollback / retry / injected
+fault lands in the structured ``engine.events`` log. The guard needs the
+pre-step state alive, so it forces ``donate=False``.
 """
 from __future__ import annotations
 
+import os
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.engine import resilience as rsl
 from repro.engine.spec import RunSpec
 
 PyTree = Any
@@ -45,9 +60,15 @@ class TrainEngine:
                  loss_fn: Optional[Callable] = None,
                  ckpt_dir: Optional[str] = None,
                  ckpt_every: int = 50,
+                 keep_last: Optional[int] = None,
                  log_every: int = 10,
                  data_tokens: int = 200_000,
                  donate: bool = True,
+                 resilience=None,              # FaultInjector | spec str | None
+                 guard: Optional[bool] = None,  # None = on iff resilience
+                 guard_spike_factor: float = 10.0,
+                 guard_max_bad: int = 3,
+                 loader_retries: int = 2,
                  verbose: bool = True):
         spec.ensure_host_devices()
         self.spec = spec
@@ -80,10 +101,31 @@ class TrainEngine:
         self.custom_loss_fn = loss_fn
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
+        self.keep_last = keep_last
         self.log_every = log_every
         self.data_tokens = data_tokens
-        self.donate = donate
         self.verbose = verbose
+
+        # -- resilience layer ------------------------------------------------
+        self.injector = rsl.FaultInjector.from_spec(resilience,
+                                                    seed=spec.seed)
+        if guard is None:
+            guard = self.injector is not None
+        self.guard = rsl.HealthGuard(spike_factor=guard_spike_factor) \
+            if guard else None
+        self.guard_max_bad = guard_max_bad
+        self.loader_retries = loader_retries
+        self.events = rsl.EventLog()
+        self._bad_streak = 0
+        if self.guard is not None:
+            # skipping a bad update reuses the PRE-step state, so its
+            # buffers must survive the step: donation is incompatible
+            if trainer is not None and trainer.donate:
+                raise ValueError(
+                    "the health guard needs the pre-step state alive; pass "
+                    "a TrainerConfig with donate=False (or guard=False)")
+            donate = False
+        self.donate = donate
 
         self.cfg = spec.resolve_config()
         self.mesh = None
@@ -95,6 +137,7 @@ class TrainEngine:
         self._extras = None
         self._hlo_text = None
         self._step_exec = None        # AOT executable (set by hlo_text)
+        self._stream_step = 0         # step index of the next host batch
 
     # -- plumbing ----------------------------------------------------------
 
@@ -136,7 +179,8 @@ class TrainEngine:
 
     def build(self) -> "TrainEngine":
         """Materialise params/optimizer/mesh, jit the step, restore the
-        latest checkpoint when ckpt_dir has one. Idempotent."""
+        newest INTACT checkpoint when ckpt_dir has one (broken files are
+        skipped with a ``ckpt_fallback`` event). Idempotent."""
         if self._built:
             return self
         import jax
@@ -175,16 +219,62 @@ class TrainEngine:
 
         self.start_step = 0
         if self.ckpt_dir and ckpt.latest_step(self.ckpt_dir) is not None:
-            self.state, self.start_step = ckpt.restore(self.ckpt_dir,
-                                                       self.state)
-            # the synthetic stream is a pure function of the step index:
-            # skip what the interrupted run already consumed so resumed ==
-            # uninterrupted
-            for _ in range(self.start_step):
-                next(self._host_it)
-            self._log(f"restored step {self.start_step}")
+            try:
+                self.state, self.start_step = ckpt.restore(
+                    self.ckpt_dir, self.state,
+                    on_fallback=lambda s, r: self.events.append(
+                        "ckpt_fallback", s, reason=r))
+            except FileNotFoundError:
+                # every on-disk step is broken: start fresh rather than die
+                self.events.append("ckpt_unusable", 0,
+                                   dir=self.ckpt_dir)
+                self._log(f"no intact checkpoint in {self.ckpt_dir}; "
+                          f"starting from step 0")
+            else:
+                # the synthetic stream is a pure function of the step
+                # index: skip what the interrupted run already consumed so
+                # resumed == uninterrupted
+                for _ in range(self.start_step):
+                    next(self._host_it)
+                self._log(f"restored step {self.start_step}")
+        self._stream_step = self.start_step
         self._built = True
         return self
+
+    # -- data stream (resilient) -------------------------------------------
+
+    def _rebuild_stream(self, step: int) -> None:
+        """Fresh host iterator fast-forwarded so the next batch is step
+        ``step``'s — bit-identical to the original stream (pure function
+        of the step index): the recovery path for loader crashes and
+        checkpoint rollback."""
+        from repro.data import lm_batch_iterator, make_lm_data
+        tokens = make_lm_data(self.cfg.vocab_size, self.data_tokens,
+                              seed=self.spec.seed)
+        it = lm_batch_iterator(tokens, self.batch, self.seq,
+                               seed=self.spec.seed)
+        next(it)                          # the build()-time trace batch
+        for _ in range(step):
+            next(it)
+        self._host_it = it
+        self._stream_step = step
+
+    def _feed(self):
+        """Host-batch generator for the loader worker; the loader-site
+        fault hook lives here so an injected crash exercises the REAL
+        worker-thread error path (exception raised on the prefetch thread,
+        surfaced in ``__next__``)."""
+        while True:
+            try:
+                b = next(self._host_it)
+            except StopIteration:
+                return
+            s = self._stream_step
+            self._stream_step = s + 1
+            if self.injector is not None and self.injector.fires("loader", s):
+                raise RuntimeError(
+                    f"injected loader-worker fault at step {s}")
+            yield self._to_batch(b)
 
     def _get_loader(self):
         """ONE persistent loader per engine: partial ``run()`` calls share
@@ -193,9 +283,94 @@ class TrainEngine:
         for in-process continuation, not just checkpoint resume)."""
         from repro.data import ShardedLoader
         if self._loader is None:
-            self._loader = ShardedLoader(
-                (self._to_batch(b) for b in self._host_it), self.batch_sh)
+            self._loader = ShardedLoader(self._feed(), self.batch_sh)
         return self._loader
+
+    def _next_batch(self, step: int):
+        """One batch for ``step``, surviving loader-worker crashes: a
+        crashed worker's exception (re-raised by ``ShardedLoader.__next__``
+        instead of hanging) is logged, the stream is rebuilt exactly at
+        ``step``, and the batch is retried — up to ``loader_retries``
+        rebuilds before giving up."""
+        for attempt in range(self.loader_retries + 1):
+            loader = self._get_loader()
+            try:
+                return next(loader)
+            except StopIteration:
+                raise
+            except Exception as e:
+                self.events.append("loader_error", step, error=repr(e),
+                                   attempt=attempt)
+                self._log(f"step {step}: loader worker died ({e!r}); "
+                          f"rebuilding the stream (attempt {attempt + 1})")
+                self.close()
+                self._rebuild_stream(step)
+        raise RuntimeError(
+            f"loader failed {self.loader_retries + 1} times at step {step}")
+
+    # -- checkpoint + rollback ---------------------------------------------
+
+    def _save_checkpoint(self, step: int) -> None:
+        from repro import checkpoint as ckpt
+        path = ckpt.save(self.ckpt_dir, step, self.state,
+                         keep_last=self.keep_last, injector=self.injector)
+        self.events.append("ckpt_save", step)
+        if self.injector is not None and \
+                self.injector.fires("ckpt_truncate", step):
+            # disk corruption / kill -9 straight after the commit: the
+            # manifest checksum no longer matches, so restore() must skip
+            # this step
+            size = os.path.getsize(path)
+            with open(path, "r+b") as fh:
+                fh.truncate(max(1, size // 2))
+            self.events.append("inject", step, site="ckpt_truncate")
+
+    def _rollback(self, step: int) -> int:
+        """Too many consecutive bad steps: restore the newest intact
+        checkpoint, rewind the data stream to it, reset the guard.
+        Returns the restored step (the new loop position)."""
+        import jax
+        from repro import checkpoint as ckpt
+        restored = None
+        if self.ckpt_dir:
+            try:
+                restored = ckpt.restore(
+                    self.ckpt_dir, self.state,
+                    on_fallback=lambda s, r: self.events.append(
+                        "ckpt_fallback", s, reason=r))
+            except FileNotFoundError:
+                restored = None
+        if restored is None:
+            self.events.append("rollback_failed", step,
+                               streak=self._bad_streak)
+            raise RuntimeError(
+                f"{self._bad_streak} consecutive bad steps at step {step} "
+                f"and no intact checkpoint to roll back to "
+                f"(ckpt_dir={self.ckpt_dir!r})")
+        state, rstep = restored
+        self.state = jax.device_put(state, self.state_sh)
+        self.events.append("rollback", step, to_step=rstep,
+                           streak=self._bad_streak)
+        self._log(f"step {step}: {self._bad_streak} consecutive bad steps "
+                  f"— rolling back to checkpoint step {rstep}")
+        self.close()
+        self._rebuild_stream(rstep)
+        self.guard.reset()
+        self._bad_streak = 0
+        return rstep
+
+    def _bump_step(self, state):
+        """Advance ONLY the step counter (a skipped update keeps params and
+        optimizer state): the loop position, LR schedule and CDP freshness
+        stay in lockstep with the uninterrupted trajectory."""
+        import jax
+        import numpy as np
+        new = dict(state)
+        new["step"] = jax.device_put(np.int32(int(state["step"]) + 1),
+                                     self.state_sh["step"])
+        return new
+
+    # -- compiled-step access ----------------------------------------------
 
     def hlo_text(self) -> str:
         """Optimized HLO of the compiled train step (builds if needed) —
@@ -222,22 +397,47 @@ class TrainEngine:
             self._loader.close()
             self._loader = None
 
+    # -- the loop ----------------------------------------------------------
+
     def run(self, steps: Optional[int] = None) -> PyTree:
         """Train to ``steps`` (default: the configured total), checkpointing
         and logging on the way. Returns the final state. Stopping early
         (``steps < self.steps``) keeps the loader alive for continuation;
         reaching the configured total closes it."""
-        from repro import checkpoint as ckpt
         self.build()
         total = self.steps if steps is None else steps
-        loader = self._get_loader()
         t0 = time.time()
         try:
             step_fn = self._step_exec if self._step_exec is not None \
                 else self.step_fn
-            for step in range(self.start_step, total):
-                batch = next(loader)
-                self.state, metrics = step_fn(self.state, batch)
+            step = self.start_step
+            while step < total:
+                batch = self._next_batch(step)
+                if self.injector is not None:
+                    f = self.injector.fires("slow_step", step)
+                    if f is not None:
+                        # simulated preemption stall: the run survives it,
+                        # the event log shows where the time went
+                        dur = f.arg or 0.05
+                        self.events.append("slow_step", step, sleep_s=dur)
+                        time.sleep(dur)
+                new_state, metrics = step_fn(self.state, batch)
+                metrics = dict(metrics)
+                if self.injector is not None:
+                    new_state, metrics = self._inject_step_faults(
+                        step, new_state, metrics)
+                if self.guard is not None and \
+                        not self._healthy(step, metrics):
+                    if self._bad_streak >= self.guard_max_bad:
+                        step = self._rollback(step)
+                    else:
+                        # skip the bad update: keep params/opt, advance the
+                        # step counter — under CDP's uniform-staleness rules
+                        # this is one more bounded delay, not a divergence
+                        self.state = self._bump_step(self.state)
+                        step += 1
+                    continue
+                self.state = new_state
                 if step % self.log_every == 0 or step == total - 1:
                     rec = {"step": step,
                            "loss": float(metrics["loss"]),
@@ -246,7 +446,8 @@ class TrainEngine:
                     self._log(f"step {step:5d}  loss {rec['loss']:.4f}  "
                               f"lr {rec['lr']:.4f}  {time.time()-t0:.1f}s")
                 if self.ckpt_dir and (step + 1) % self.ckpt_every == 0:
-                    ckpt.save(self.ckpt_dir, step + 1, self.state)
+                    self._save_checkpoint(step + 1)
+                step += 1
         finally:
             if total >= self.steps:
                 self.close()
@@ -254,3 +455,38 @@ class TrainEngine:
         # smaller target must not re-train completed steps
         self.start_step = max(self.start_step, total)
         return self.state
+
+    def _inject_step_faults(self, step, new_state, metrics):
+        import jax
+        import jax.numpy as jnp
+        f = self.injector.fires("nan_loss", step)
+        if f is not None:
+            # a real NaN gradient poisons the whole update, not just the
+            # reported loss — corrupt both so an unguarded run genuinely
+            # diverges
+            poison = lambda x: x * jnp.nan \
+                if jnp.issubdtype(x.dtype, jnp.inexact) else x
+            new_state = dict(new_state)
+            new_state["params"] = jax.tree.map(poison, new_state["params"])
+            metrics["loss"] = float("nan")
+            self.events.append("inject", step, site="nan_loss")
+        f = self.injector.fires("loss_spike", step)
+        if f is not None:
+            factor = f.arg or 1e3
+            metrics["loss"] = float(metrics["loss"]) * factor
+            self.events.append("inject", step, site="loss_spike",
+                               factor=factor)
+        return new_state, metrics
+
+    def _healthy(self, step, metrics) -> bool:
+        loss = float(metrics["loss"])
+        verdict = self.guard.check(loss)
+        if verdict == "ok":
+            self._bad_streak = 0
+            return True
+        self._bad_streak += 1
+        self.events.append("skip", step, reason=verdict, loss=loss,
+                           streak=self._bad_streak)
+        self._log(f"step {step}: {verdict} loss ({loss}) — skipping the "
+                  f"update (streak {self._bad_streak}/{self.guard_max_bad})")
+        return False

@@ -62,6 +62,19 @@ def main(argv=None):
     ap.add_argument("--eos-id", type=int, default=None,
                     help="optional early-stop token id (costs one host "
                          "sync per decode step)")
+    ap.add_argument("--deadline-steps", type=int, default=None,
+                    help="engine-wide per-request step budget (queue wait "
+                         "+ decode); expired requests return "
+                         "status='timeout' with partial tokens")
+    ap.add_argument("--queue-limit", type=int, default=None,
+                    help="bound the admission queue: arrivals beyond the "
+                         "limit are rejected with a per-request error "
+                         "instead of waiting forever")
+    ap.add_argument("--resilience", default=None,
+                    help="arm the resilience layer: 'on' enables the "
+                         "health/quarantine pass only, or a fault spec "
+                         "('poison_request@3') to poison request rid 3's "
+                         "cache rows deterministically")
     args = ap.parse_args(argv)
 
     from repro.engine import RunSpec
@@ -74,20 +87,24 @@ def main(argv=None):
 
     from repro.engine import ServeEngine
     engine = ServeEngine(spec, batch=args.batch, prompt_len=args.prompt_len,
-                         gen=args.gen, temperature=args.temperature)
+                         gen=args.gen, temperature=args.temperature,
+                         resilience=args.resilience)
 
     if args.max_slots:
         res = engine.serve(max_slots=args.max_slots,
                            num_requests=args.num_requests,
                            arrival=args.arrival, rate=args.rate,
-                           policy=args.policy, eos_id=args.eos_id)
+                           policy=args.policy, eos_id=args.eos_id,
+                           deadline_steps=args.deadline_steps,
+                           queue_limit=args.queue_limit)
         for r in res["requests"][:2]:
             print(f"  request {r.rid} (arrival step {r.arrival_step}, "
-                  f"{len(r.prompt)}-token prompt): "
+                  f"{len(r.prompt)}-token prompt, status {r.status}): "
                   f"{r.tokens[:16].tolist()}")
         m = res["metrics"]
         print(f"  admitted mid-decode: {m['admitted_mid_decode']} / "
               f"{m['n_requests']}")
+        print(f"  status counts: {m['status_counts']}")
         return 0
 
     result = engine.generate()

@@ -58,6 +58,16 @@ def main(argv=None):
                          "jax backend)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--keep-last", type=int, default=None,
+                    help="retain only the newest N checkpoints (GC runs "
+                         "after each successful save)")
+    ap.add_argument("--resilience", default=None,
+                    help="arm the resilience layer: 'on' enables the "
+                         "health guard only, or a comma fault spec "
+                         "('nan_loss@7,loader%%0.01,slow_step@3:0.2') for "
+                         "deterministic chaos injection (sites: "
+                         "loader nan_loss loss_spike slow_step "
+                         "ckpt_truncate ckpt_io)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -85,6 +95,8 @@ def main(argv=None):
                          momentum=args.momentum,
                          weight_decay=args.weight_decay,
                          ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                         keep_last=args.keep_last,
+                         resilience=args.resilience,
                          log_every=args.log_every)
     engine.run()
     print("done.")

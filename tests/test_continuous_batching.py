@@ -209,10 +209,28 @@ def test_serve_rejects_recurrent_families():
 
 
 def test_serve_validates_request_shapes(engine):
+    # degradation contract: malformed requests come back rejected with a
+    # per-request error instead of failing the whole batch (the shapes
+    # that used to raise ValueError mid-enqueue)
     rng = np.random.default_rng(0)
     too_long = Request(rid=0, prompt=_prompt(rng, 512, 99), max_gen=4)
-    with pytest.raises(ValueError):
-        engine.serve([too_long], max_slots=2)
+    ok = Request(rid=1, prompt=_prompt(rng, 512, 4), max_gen=4)
+    res = engine.serve([too_long, ok], max_slots=2)
+    by_rid = {r.rid: r for r in res["requests"]}
+    assert by_rid[0].status == "rejected"
+    assert "prompt length" in by_rid[0].error
+    assert by_rid[0].tokens.shape == (0,)
+    assert by_rid[1].status == "ok"
+    assert len(by_rid[1].tokens) == 4
+
     too_greedy = Request(rid=0, prompt=_prompt(rng, 512, 4), max_gen=99)
+    res = engine.serve([too_greedy, Request(rid=1, prompt=_prompt(
+        rng, 512, 4), max_gen=4)], max_slots=2)
+    by_rid = {r.rid: r for r in res["requests"]}
+    assert by_rid[0].status == "rejected"
+    assert "max_gen" in by_rid[0].error
+
+    # a bad eos_id is an operator config error, not a request error
     with pytest.raises(ValueError):
-        engine.serve([too_greedy], max_slots=2)
+        engine.serve([Request(rid=0, prompt=_prompt(rng, 512, 4),
+                              max_gen=4)], max_slots=2, eos_id=512)

@@ -1,0 +1,444 @@
+"""Chaos suite: deterministic fault injection and the survival machinery.
+
+Every test here injects a fault through ``repro.engine.resilience`` and
+asserts the engine's RECOVERY, not just the failure: crash-consistent
+checkpoints fall back to the newest intact step with bitwise trajectory
+parity, the health guard skips poisoned updates deterministically, loader
+crashes retry on a bit-identical rebuilt stream, and serve() degrades
+per-request (timeout / rejected / failed) without ever raising."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.engine import (EventLog, Fault, FaultInjector, HealthGuard,
+                          Request, RunSpec, parse_faults)
+from repro.engine import resilience as rsl
+
+SPEC = RunSpec(arch="stablelm-1.6b", reduced=True, mesh_data=1, mesh_model=1)
+TRAIN_KW = dict(rule="cdp_v2", batch=2, seq=16, log_every=100, verbose=False)
+
+
+def _params_equal(a, b, msg=""):
+    import jax
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=msg)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector: parsing + deterministic replay
+# ---------------------------------------------------------------------------
+
+def test_parse_faults_clauses():
+    faults = parse_faults("nan_loss@3,loader%0.25:1.5,ckpt_io@4:2")
+    assert faults[0] == Fault(site="nan_loss", step=3)
+    assert faults[1].site == "loader" and faults[1].prob == 0.25 \
+        and faults[1].arg == 1.5
+    assert faults[2].site == "ckpt_io" and faults[2].step == 4 \
+        and faults[2].count == 2
+    assert parse_faults("on") == [] and parse_faults("") == []
+    with pytest.raises(ValueError):
+        parse_faults("nan_loss")            # no @step / %prob
+    with pytest.raises(ValueError):
+        parse_faults("not_a_site@3")
+
+
+def test_injector_exact_step_fires_once():
+    inj = FaultInjector("nan_loss@3")
+    assert inj.fires("nan_loss", 2) is None
+    assert inj.fires("loader", 3) is None    # wrong site
+    assert inj.fires("nan_loss", 3) is not None
+    assert inj.fires("nan_loss", 3) is None  # count charge burnt
+    assert inj.log == [("nan_loss", 3)]
+
+
+def test_injector_probabilistic_replay_is_seeded():
+    def trace(seed):
+        inj = FaultInjector("loader%0.3", seed=seed)
+        return [inj.fires("loader", s) is not None for s in range(200)]
+
+    a, b = trace(1), trace(1)
+    assert a == b, "same seed must replay the same fire pattern"
+    assert sum(a) == 1, "count=1: even a probabilistic fault fires once"
+
+
+def test_injector_from_spec_passthrough():
+    assert FaultInjector.from_spec(None) is None
+    assert FaultInjector.from_spec("off") is None
+    inj = FaultInjector("nan_loss@1")
+    assert FaultInjector.from_spec(inj) is inj
+    assert FaultInjector.from_spec("on").faults == []
+
+
+def test_health_guard_nonfinite_spike_and_warmup():
+    g = HealthGuard(spike_factor=10.0, warmup=2)
+    assert g.check(float("nan")) == "nonfinite"
+    assert g.check(100.0) == "ok"            # warmup: spikes are legal
+    assert g.check(1.0) == "ok"
+    assert g.check(1.0) == "ok"
+    assert g.check(1e6) == "spike"
+    ema = g.ema
+    assert g.check(1e6) == "spike" and g.ema == ema, \
+        "a spike must not fold into the EMA baseline"
+    g.reset()
+    assert g.ema is None and g.check(1e6) == "ok"
+
+
+def test_event_log_query():
+    log = EventLog()
+    log.append("skip", 3, reason="nonfinite")
+    log.append("rollback", 5, to_step=4)
+    log.append("skip", 7, reason="spike")
+    assert len(log) == 3
+    assert [r["step"] for r in log.of("skip")] == [3, 7]
+    assert log.of("rollback")[0]["to_step"] == 4
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint: commit manifests, fallback, GC, tmp sweep, IO retry
+# ---------------------------------------------------------------------------
+
+def _tree(v):
+    return {"w": np.full((4, 3), v, np.float32),
+            "b": np.arange(3).astype(np.int32) + v}
+
+
+def test_checkpoint_manifest_detects_truncation(tmp_path):
+    from repro import checkpoint as ckpt
+    d = str(tmp_path)
+    ckpt.save(d, 1, _tree(1))
+    assert ckpt.verify_step(d, 1) == (True, "ok")
+    path = os.path.join(d, "step_00000001.npz")
+    with open(path, "r+b") as fh:
+        fh.truncate(os.path.getsize(path) // 2)
+    intact, reason = ckpt.verify_step(d, 1)
+    assert not intact and "mismatch" in reason
+
+
+def test_checkpoint_restore_falls_back_to_newest_intact(tmp_path):
+    from repro import checkpoint as ckpt
+    d = str(tmp_path)
+    for s in (1, 2, 3):
+        ckpt.save(d, s, _tree(s))
+    path = os.path.join(d, "step_00000003.npz")
+    with open(path, "r+b") as fh:
+        fh.truncate(os.path.getsize(path) // 2)
+
+    fallbacks = []
+    with pytest.warns(RuntimeWarning):
+        tree, step = ckpt.restore(d, _tree(0),
+                                  on_fallback=lambda s, r: fallbacks.append(s))
+    assert step == 2 and fallbacks == [3]
+    np.testing.assert_array_equal(tree["w"], _tree(2)["w"])
+
+    # an EXPLICIT step is strict: the caller asked for that exact state
+    with pytest.raises(ValueError):
+        ckpt.restore(d, _tree(0), step=3)
+    # every step broken -> FileNotFoundError, not a silent bad restore
+    for s in (1, 2):
+        p = os.path.join(d, f"step_{s:08d}.npz")
+        with open(p, "r+b") as fh:
+            fh.truncate(1)
+    with pytest.warns(RuntimeWarning):
+        with pytest.raises(FileNotFoundError):
+            ckpt.restore(d, _tree(0))
+
+
+def test_checkpoint_keep_last_gc_and_tmp_sweep(tmp_path):
+    from repro import checkpoint as ckpt
+    d = str(tmp_path)
+    junk = os.path.join(d, "step_00000009.npz.tmp.npz")
+    open(junk, "wb").write(b"killed mid-save")
+    for s in (1, 2, 3, 4):
+        ckpt.save(d, s, _tree(s), keep_last=2)
+    assert not os.path.exists(junk), "stale tmp junk must be swept on save"
+    assert ckpt.list_steps(d) == [3, 4]
+    assert ckpt.latest_step(d) == 4
+    manifests = [f for f in os.listdir(d) if f.endswith(".manifest.json")]
+    assert len(manifests) == 2, "GC must drop the manifest with the npz"
+    with pytest.raises(ValueError):
+        ckpt.gc_old_steps(d, 0)
+
+
+def test_checkpoint_save_retries_transient_io(tmp_path):
+    from repro import checkpoint as ckpt
+    d = str(tmp_path)
+    # two failing attempts, then success (retries=3 covers it)
+    inj = FaultInjector([Fault(site="ckpt_io", step=5, count=2)])
+    ckpt.save(d, 5, _tree(5), injector=inj, backoff_s=0.001)
+    assert ckpt.verify_step(d, 5) == (True, "ok")
+    assert inj.log == [("ckpt_io", 5), ("ckpt_io", 5)]
+    # a persistent failure exhausts the retries and surfaces
+    inj = FaultInjector([Fault(site="ckpt_io", step=6, count=99)])
+    with pytest.raises(OSError):
+        ckpt.save(d, 6, _tree(6), injector=inj, retries=1, backoff_s=0.001)
+
+
+# ---------------------------------------------------------------------------
+# ShardedLoader: a crashed worker surfaces, never hangs
+# ---------------------------------------------------------------------------
+
+def _crashing_iter(good):
+    for i in range(good):
+        yield {"x": np.full((2,), i, np.float32)}
+    raise ValueError("worker blew up")
+
+
+def test_loader_reraises_worker_exception(tmp_path):
+    from repro.data import ShardedLoader
+    loader = ShardedLoader(_crashing_iter(2), shardings=None, depth=2)
+    got = [np.asarray(next(loader)["x"])[0] for _ in range(2)]
+    assert got == [0.0, 1.0], "prefetched good batches drain first"
+    with pytest.raises(ValueError, match="worker blew up"):
+        next(loader)
+    # a consumer retry loop must keep failing fast, not block forever
+    with pytest.raises(ValueError, match="worker blew up"):
+        next(loader)
+    loader.close()                          # clean join after the crash
+    assert not loader._thread.is_alive()
+
+
+def test_loader_clean_exhaustion_raises_stopiteration():
+    from repro.data import ShardedLoader
+    loader = ShardedLoader(iter([{"x": np.zeros(2, np.float32)}]),
+                           shardings=None)
+    assert next(loader) is not None
+    with pytest.raises(StopIteration):
+        next(loader)
+    with pytest.raises(StopIteration):
+        next(loader)
+    loader.close()
+
+
+def test_train_engine_survives_loader_crash():
+    """An injected loader-worker crash at step 2 is retried on a rebuilt
+    stream; the retried batch is bit-identical, so the run matches a
+    fault-free baseline bitwise."""
+    from repro.engine import TrainEngine
+    base = TrainEngine(SPEC, steps=4, donate=False, **TRAIN_KW).run()
+    eng = TrainEngine(SPEC, steps=4, resilience="loader@2", **TRAIN_KW)
+    state = eng.run()
+    errs = eng.events.of("loader_error")
+    assert len(errs) == 1 and errs[0]["step"] == 2
+    assert not eng.events.of("skip")
+    _params_equal(base["params"], state["params"],
+                  "loader-crash retry must not perturb the trajectory")
+
+
+# ---------------------------------------------------------------------------
+# TrainEngine: NaN guard, rollback, crash-resume parity
+# ---------------------------------------------------------------------------
+
+def test_nan_injection_skips_once_and_is_deterministic():
+    """Acceptance: NaN at step k -> finite final loss with exactly one
+    skip event; same seed -> same skip steps -> same final params."""
+    from repro.engine import TrainEngine
+
+    def run():
+        eng = TrainEngine(SPEC, steps=6, resilience="nan_loss@3",
+                          **TRAIN_KW)
+        state = eng.run()
+        return eng, state
+
+    eng_a, state_a = run()
+    skips = eng_a.events.of("skip")
+    assert len(skips) == 1 and skips[0]["step"] == 3 \
+        and skips[0]["reason"] == "nonfinite"
+    assert eng_a.events.of("inject")[0]["site"] == "nan_loss"
+    final_loss = eng_a.history[-1]["loss"]
+    assert np.isfinite(final_loss), "guarded run must end finite"
+    import jax
+    assert all(np.all(np.isfinite(np.asarray(p)))
+               for p in jax.tree.leaves(state_a["params"])
+               if np.issubdtype(np.asarray(p).dtype, np.floating)), \
+        "the skipped NaN update must not leak into the params"
+    assert int(state_a["step"]) == 6, \
+        "a skipped update still advances the step counter"
+
+    eng_b, state_b = run()
+    assert [r["step"] for r in eng_b.events.of("skip")] == [3]
+    _params_equal(state_a["params"], state_b["params"],
+                  "same seed + same faults must replay bitwise")
+
+
+def test_spike_injection_skips_update():
+    from repro.engine import TrainEngine
+    eng = TrainEngine(SPEC, steps=8, resilience="loss_spike@6:1e4",
+                      **TRAIN_KW)
+    eng.run()
+    skips = eng.events.of("skip")
+    assert len(skips) == 1 and skips[0]["step"] == 6 \
+        and skips[0]["reason"] == "spike"
+    assert np.isfinite(eng.history[-1]["loss"])
+
+
+def test_rollback_after_consecutive_bad_steps(tmp_path):
+    """guard_max_bad consecutive bad steps roll back to the newest intact
+    checkpoint and the run still finishes finite."""
+    from repro.engine import TrainEngine
+    eng = TrainEngine(SPEC, steps=8, ckpt_dir=str(tmp_path / "ck"),
+                      ckpt_every=2, guard_max_bad=2,
+                      resilience="nan_loss@4,nan_loss@5", **TRAIN_KW)
+    state = eng.run()
+    rb = eng.events.of("rollback")
+    assert len(rb) == 1 and rb[0]["step"] == 5 and rb[0]["to_step"] == 4
+    assert [r["step"] for r in eng.events.of("skip")] == [4, 5]
+    assert np.isfinite(eng.history[-1]["loss"])
+    assert int(state["step"]) == 8
+
+
+def test_rollback_without_checkpoint_raises():
+    from repro.engine import TrainEngine
+    eng = TrainEngine(SPEC, steps=6, guard_max_bad=1,
+                      resilience="nan_loss@2", **TRAIN_KW)
+    with pytest.raises(RuntimeError, match="no intact checkpoint"):
+        eng.run()
+    assert eng.events.of("rollback_failed")
+
+
+def test_crash_resume_parity_after_truncated_checkpoint(tmp_path):
+    """Acceptance: truncate the NEWEST checkpoint mid-run; the next engine
+    resumes from the previous intact step and the resumed trajectory is
+    bitwise identical to an uninterrupted run."""
+    from repro import checkpoint as ckpt
+    from repro.engine import TrainEngine
+    full = TrainEngine(SPEC, steps=6, donate=False, **TRAIN_KW).run()
+
+    d = str(tmp_path / "ck")
+    TrainEngine(SPEC, steps=6, ckpt_dir=d, ckpt_every=2, **TRAIN_KW).run()
+    assert ckpt.list_steps(d) == [2, 4, 6]
+    path = os.path.join(d, "step_00000006.npz")
+    with open(path, "r+b") as fh:          # kill -9 / disk corruption
+        fh.truncate(os.path.getsize(path) // 2)
+
+    resumed = TrainEngine(SPEC, steps=6, ckpt_dir=d, ckpt_every=2,
+                          **TRAIN_KW)
+    with pytest.warns(RuntimeWarning):
+        resumed.build()
+    assert resumed.start_step == 4, "must fall back to the intact step"
+    fb = resumed.events.of("ckpt_fallback")
+    assert len(fb) == 1 and fb[0]["step"] == 6
+    state = resumed.run()
+    _params_equal(full["params"], state["params"],
+                  "resume-from-fallback must replay the lost steps bitwise")
+    assert int(state["step"]) == 6
+
+
+def test_ckpt_truncate_injection_forces_fallback(tmp_path):
+    """The ckpt_truncate fault corrupts the file AFTER the commit — the
+    next restore must detect it via the manifest and fall back."""
+    from repro import checkpoint as ckpt
+    from repro.engine import TrainEngine
+    d = str(tmp_path / "ck")
+    eng = TrainEngine(SPEC, steps=4, ckpt_dir=d, ckpt_every=2,
+                      resilience="ckpt_truncate@4", **TRAIN_KW)
+    eng.run()
+    assert ckpt.list_steps(d) == [2, 4]
+    assert ckpt.latest_intact_step(d) == 2
+    resumed = TrainEngine(SPEC, steps=4, ckpt_dir=d, ckpt_every=2,
+                          **TRAIN_KW)
+    with pytest.warns(RuntimeWarning):
+        resumed.build()
+    assert resumed.start_step == 2
+
+
+# ---------------------------------------------------------------------------
+# ServeEngine: graceful degradation
+# ---------------------------------------------------------------------------
+
+def _prompt(rng, vocab, n):
+    return rng.integers(0, vocab, size=n).astype(np.int32)
+
+
+@pytest.fixture(scope="module")
+def serve_engine():
+    from repro.engine import ServeEngine
+    eng = ServeEngine(SPEC, batch=2, prompt_len=12, gen=8, verbose=False)
+    eng.build()
+    return eng
+
+
+def _reqs(vocab, n=3, seed=9, max_gen=6):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i, prompt=_prompt(rng, vocab, 6), max_gen=max_gen)
+            for i in range(n)]
+
+
+def test_serve_poison_quarantine_isolates_coresidents(serve_engine):
+    """Acceptance: one poison request -> status='failed' for it, co-resident
+    requests complete status='ok' with BITWISE-identical tokens, serve()
+    never raises."""
+    vocab = serve_engine.cfg.vocab_size
+    clean = serve_engine.serve(_reqs(vocab), max_slots=2)
+    assert all(r.status == "ok" for r in clean["requests"])
+
+    serve_engine.injector = FaultInjector("poison_request@1",
+                                          seed=SPEC.seed)
+    try:
+        res = serve_engine.serve(_reqs(vocab), max_slots=2)
+    finally:
+        serve_engine.injector = None
+    by_rid = {r.rid: r for r in res["requests"]}
+    assert by_rid[1].status == "failed"
+    assert "non-finite" in by_rid[1].error
+    assert len(by_rid[1].tokens) == 0, \
+        "a quarantined request must not serve garbage tokens"
+    assert res["metrics"]["status_counts"]["failed"] == 1
+    assert res["engine_events"].of("quarantine")[0]["rid"] == 1
+    for rid in (0, 2):
+        assert by_rid[rid].status == "ok"
+        np.testing.assert_array_equal(
+            by_rid[rid].tokens, {r.rid: r for r in clean["requests"]}[rid].tokens,
+            err_msg=f"co-resident {rid} perturbed by the quarantined row")
+
+
+def test_serve_deadline_times_out_in_queue(serve_engine):
+    """max_slots=1: the request stuck behind a long generation expires in
+    the queue with status='timeout' and no tokens; the long one is 'ok'."""
+    vocab = serve_engine.cfg.vocab_size
+    rng = np.random.default_rng(2)
+    long_r = Request(rid=0, prompt=_prompt(rng, vocab, 6), max_gen=8)
+    stuck = Request(rid=1, prompt=_prompt(rng, vocab, 6), max_gen=2,
+                    deadline_steps=3)
+    res = serve_engine.serve([long_r, stuck], max_slots=1)
+    by_rid = {r.rid: r for r in res["requests"]}
+    assert by_rid[0].status == "ok" and len(by_rid[0].tokens) == 8
+    assert by_rid[1].status == "timeout"
+    assert "queue" in by_rid[1].error and len(by_rid[1].tokens) == 0
+
+
+def test_serve_deadline_evicts_live_with_partial_tokens(serve_engine):
+    vocab = serve_engine.cfg.vocab_size
+    rng = np.random.default_rng(4)
+    prompt = _prompt(rng, vocab, 6)
+    base = serve_engine.serve([Request(rid=0, prompt=prompt, max_gen=8)],
+                              max_slots=2)["requests"][0]
+    cut = serve_engine.serve([Request(rid=0, prompt=prompt, max_gen=8)],
+                             max_slots=2, deadline_steps=4)["requests"][0]
+    assert cut.status == "timeout"
+    assert 0 < len(cut.tokens) < 8
+    np.testing.assert_array_equal(
+        cut.tokens, base.tokens[:len(cut.tokens)],
+        err_msg="partial tokens must be a prefix of the full generation")
+
+
+def test_serve_bounded_admission_queue(serve_engine):
+    vocab = serve_engine.cfg.vocab_size
+    reqs = _reqs(vocab, n=3, max_gen=4)
+    res = serve_engine.serve(reqs, max_slots=1, queue_limit=1)
+    by_rid = {r.rid: r for r in res["requests"]}
+    assert by_rid[0].status == "ok"
+    rejected = [r for r in res["requests"] if r.status == "rejected"]
+    assert len(rejected) == 2
+    assert all("queue full" in r.error for r in rejected)
+
+
+def test_serve_max_steps_truncates_gracefully(serve_engine):
+    vocab = serve_engine.cfg.vocab_size
+    res = serve_engine.serve(_reqs(vocab, n=2, max_gen=8), max_slots=1,
+                             max_steps=3)
+    assert res["metrics"]["truncated"] is True
+    by_rid = {r.rid: r for r in res["requests"]}
+    assert by_rid[0].status == "timeout" and 0 < len(by_rid[0].tokens) <= 3
+    assert by_rid[1].status == "timeout" and len(by_rid[1].tokens) == 0
