@@ -8,7 +8,10 @@ still carries the fields the tooling reads:
     interpret / pallas_speedup_vs_jnp);
   * ``benchmarks/artifacts/decode_bench.json`` — per-level required keys,
     including the serving-level continuous-vs-static throughput + p50/p99
-    latency records.
+    latency records and the paged shared-prefix records (cold + warm
+    phases; pool blocks, peak occupancy, prefix hit rate, marginal
+    prefill tokens — with range sanity checks, since a hit rate > 1 or
+    occupancy > pool size means the allocator's accounting broke).
 
     PYTHONPATH=src python -m benchmarks.validate_artifacts
 
@@ -37,6 +40,16 @@ DECODE_LEVEL_KEYS = {
                 "p50_latency_s": numbers.Real, "p99_latency_s": numbers.Real,
                 "p50_latency_steps": numbers.Real,
                 "p99_latency_steps": numbers.Real},
+    # paged KV-cache shared-prefix records (cold registry-fill serve +
+    # warm reuse serve) — what a future PR plots as the prefix-reuse
+    # trajectory, so the memory-accounting keys are all required
+    "serving_paged": {"phase": str, "n_requests": int, "n_slots": int,
+                      "pool_blocks": int, "block_size": int,
+                      "blocks_in_use_peak": int,
+                      "prefix_hit_rate": numbers.Real,
+                      "prefill_tokens_requested": int,
+                      "marginal_prefill_tokens": int, "preemptions": int,
+                      "decode_tok_s": numbers.Real},
 }
 
 
@@ -93,6 +106,31 @@ def validate(errors=None):
         elif "serving" in levels:
             errors.append("decode_bench.json: serving records must cover "
                           "both 'continuous' and 'static' policies")
+        paged = [r for r in records if r.get("level") == "serving_paged"]
+        if paged:
+            phases = {r.get("phase") for r in paged}
+            if not phases >= {"cold", "warm"}:
+                errors.append("decode_bench.json: serving_paged records "
+                              "must cover both 'cold' and 'warm' phases")
+            for i, rec in enumerate(paged):
+                hr = rec.get("prefix_hit_rate")
+                if isinstance(hr, numbers.Real) and not 0.0 <= hr <= 1.0:
+                    errors.append(f"decode_bench.json serving_paged[{i}]: "
+                                  f"prefix_hit_rate {hr!r} outside [0, 1]")
+                marg, req = (rec.get("marginal_prefill_tokens"),
+                             rec.get("prefill_tokens_requested"))
+                if isinstance(marg, int) and isinstance(req, int) \
+                        and marg > req:
+                    errors.append(f"decode_bench.json serving_paged[{i}]: "
+                                  f"marginal prefill {marg} exceeds "
+                                  f"requested {req}")
+                peak, total = (rec.get("blocks_in_use_peak"),
+                               rec.get("pool_blocks"))
+                if isinstance(peak, int) and isinstance(total, int) \
+                        and peak > total:
+                    errors.append(f"decode_bench.json serving_paged[{i}]: "
+                                  f"peak occupancy {peak} exceeds pool "
+                                  f"size {total}")
     return errors
 
 

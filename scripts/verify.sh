@@ -9,7 +9,8 @@
 #     bash scripts/verify.sh tests      # tier-1 pytest only
 #     bash scripts/verify.sh train      # TrainEngine smokes (dp + zero_cdp)
 #     bash scripts/verify.sh kernels    # pallas-kernel train smokes
-#     bash scripts/verify.sh serve      # ServeEngine smokes (static + CB)
+#     bash scripts/verify.sh serve      # ServeEngine smokes (static + CB
+#                                       # + paged KV block pool)
 #     bash scripts/verify.sh chaos      # resilience: fault-injection suite
 #                                       # + a seeded chaos train smoke
 set -euo pipefail
@@ -61,6 +62,19 @@ run_serve() {
         --max-slots 4 --arrival poisson --rate 0.5 --num-requests 6 \
         --prompt-len 16 --gen 12 --mesh-data 1 --mesh-model 1 \
         --host-devices 1
+
+    echo "=== engine smoke: paged KV cache (block pool + prefix sharing) ==="
+    # paged block-pool serving through the launcher (prints the paging
+    # metrics line: peak occupancy, prefix hit rate, preemptions)
+    python -m repro.launch.serve --arch stablelm-1.6b --reduced \
+        --max-slots 4 --paged --kv-block-size 4 --num-requests 6 \
+        --prompt-len 16 --gen 12 --mesh-data 1 --mesh-model 1 \
+        --host-devices 1
+
+    # the paged acceptance gates: warm shared-prefix hit rate > 0.9 and
+    # peak pool occupancy independent of the engine's max_len headroom
+    python -m pytest -x -q tests/test_paged_cache.py \
+        -k "warm_hit_rate or peak_occupancy"
 }
 
 run_chaos() {

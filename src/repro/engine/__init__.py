@@ -10,7 +10,8 @@ from repro.engine.spec import RunSpec
 
 __all__ = ["RunSpec", "TrainEngine", "ServeEngine", "Request",
            "poisson_trace", "Fault", "FaultInjector", "EventLog",
-           "HealthGuard", "parse_faults"]
+           "HealthGuard", "parse_faults", "BlockPool", "PoolExhausted",
+           "Parked"]
 
 
 def __getattr__(name):
@@ -24,6 +25,10 @@ def __getattr__(name):
         # continuous-batching workload types (jax-free import, like RunSpec)
         from repro.engine import batching
         return getattr(batching, name)
+    if name in ("BlockPool", "PoolExhausted", "Parked"):
+        # paged KV-cache allocator (jax-free import, like RunSpec)
+        from repro.engine import paging
+        return getattr(paging, name)
     if name in ("Fault", "FaultInjector", "EventLog", "HealthGuard",
                 "parse_faults"):
         # resilience layer (jax-free import, like RunSpec)

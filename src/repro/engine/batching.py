@@ -102,9 +102,25 @@ class SlotScheduler:
         evict(slot, step, now, reason)    — early termination (deadline /
                                             quarantine): frees the slot,
                                             keeps the partial emission count
+        preempt(slot, step)               — paged-pool preemption: frees the
+                                            slot WITHOUT terminating the
+                                            request; a later ``admit(...,
+                                            resume=True)`` continues it (in
+                                            any slot)
+        close(rid, step, now, reason)     — terminate a request that is not
+                                            currently live (e.g. a parked /
+                                            offloaded request whose deadline
+                                            expired)
 
-    ``events`` is an append-only log of ("admit"|"complete"|reason, step,
-    slot, rid) tuples for tests and reporting."""
+    A request's emissions therefore live in one or more SEGMENTS — contiguous
+    (history-row, slot) intervals recorded in ``segments[rid]`` as
+    ``[hist_idx, slot, count]`` triples; the engine reconstructs tokens by
+    concatenating them. ``first_hist``/``slot_of`` keep their historical
+    meaning (first segment's start, most recent slot) so single-segment
+    consumers are unaffected.
+
+    ``events`` is an append-only log of ("admit"|"resume"|"preempt"|
+    "complete"|reason, step, slot, rid) tuples for tests and reporting."""
 
     def __init__(self, n_slots: int):
         self.n_slots = n_slots
@@ -113,6 +129,7 @@ class SlotScheduler:
         self.requests: Dict[int, Request] = {}
         self.slot_of: Dict[int, int] = {}
         self.first_hist: Dict[int, int] = {}
+        self.segments: Dict[int, List[List[int]]] = {}
         self.admit_step: Dict[int, int] = {}
         self.complete_step: Dict[int, int] = {}
         self.complete_time: Dict[int, float] = {}
@@ -129,19 +146,31 @@ class SlotScheduler:
 
     # -- transitions ---------------------------------------------------------
 
-    def admit(self, slot: int, req: Request, step: int, hist_idx: int) -> None:
+    def admit(self, slot: int, req: Request, step: int, hist_idx: int,
+              resume: bool = False) -> None:
         if self.owner[slot] is not None:
             raise RuntimeError(
                 f"slot {slot} already serves request {self.owner[slot]}")
-        if req.rid in self.requests:
+        if req.rid in self.requests and not resume:
             raise RuntimeError(f"request {req.rid} admitted twice")
         self.owner[slot] = req.rid
         self.logged[slot] = 0
         self.requests[req.rid] = req
         self.slot_of[req.rid] = slot
-        self.first_hist[req.rid] = hist_idx
+        self.segments.setdefault(req.rid, []).append([hist_idx, slot, 0])
+        self.first_hist.setdefault(req.rid, hist_idx)
         self.admit_step[req.rid] = step
-        self.events.append(("admit", step, slot, req.rid))
+        self.events.append(("resume" if resume else "admit", step, slot,
+                            req.rid))
+
+    def total_gen(self, rid: int) -> int:
+        """Emissions logged for the request across ALL of its segments."""
+        return sum(c for _, _, c in self.segments.get(rid, []))
+
+    def token_segments(self, rid: int) -> List[List[int]]:
+        """[hist_idx, slot, count] triples; concatenating
+        ``history[h:h+c, slot]`` over them reconstructs the token stream."""
+        return self.segments.get(rid, [])
 
     def log_emissions(self, step: int, now: float,
                       eos_hit: Optional[List[bool]] = None) -> List[int]:
@@ -152,11 +181,12 @@ class SlotScheduler:
         for slot in self.live_slots():
             rid = self.owner[slot]
             self.logged[slot] += 1
-            done = self.logged[slot] >= self.requests[rid].max_gen
+            self.segments[rid][-1][2] += 1
+            done = self.total_gen(rid) >= self.requests[rid].max_gen
             if eos_hit is not None and eos_hit[slot]:
                 done = True
             if done:
-                self.gen_done[rid] = self.logged[slot]
+                self.gen_done[rid] = self.total_gen(rid)
                 self.complete_step[rid] = step
                 self.complete_time[rid] = now
                 self.events.append(("complete", step, slot, rid))
@@ -172,12 +202,33 @@ class SlotScheduler:
         rid = self.owner[slot]
         if rid is None:
             raise RuntimeError(f"evict on free slot {slot}")
-        self.gen_done[rid] = self.logged[slot]
+        self.gen_done[rid] = self.total_gen(rid)
         self.complete_step[rid] = step
         self.complete_time[rid] = now
         self.events.append((reason, step, slot, rid))
         self.owner[slot] = None
         return rid
+
+    def preempt(self, slot: int, step: int) -> int:
+        """Free the slot WITHOUT terminating its request (paged block-pool
+        preemption). The request's segment log stays; a later
+        ``admit(..., resume=True)`` opens its next segment. Returns the
+        preempted rid."""
+        rid = self.owner[slot]
+        if rid is None:
+            raise RuntimeError(f"preempt on free slot {slot}")
+        self.owner[slot] = None
+        self.events.append(("preempt", step, slot, rid))
+        return rid
+
+    def close(self, rid: int, step: int, now: float, reason: str) -> None:
+        """Terminate a request that is NOT live in any slot (e.g. parked in
+        host RAM when its deadline expired). Keeps the emissions already
+        segmented so the engine returns partial tokens."""
+        self.gen_done[rid] = self.total_gen(rid)
+        self.complete_step[rid] = step
+        self.complete_time[rid] = now
+        self.events.append((reason, step, self.slot_of.get(rid, -1), rid))
 
 
 # ---------------------------------------------------------------------------

@@ -36,6 +36,19 @@ request whose cache rows go non-finite is QUARANTINED (evicted, status
 ``max_steps`` budget times the stragglers out instead of raising. The
 ``resilience=`` fault injector (``engine.resilience``) can poison a
 request's cache rows to drive the quarantine path deterministically.
+
+Paged serving (``paged=True``): the dense per-slot cache reservation is
+replaced by ``engine.paging`` — a fixed pool of ``kv_pool_blocks`` KV
+blocks of ``kv_block_size`` tokens with a per-slot block table. Admission
+prefills into a TRANSIENT dense cache and block-scatters it through the
+table (bitwise-identical numerics to the dense engine), prompts sharing a
+cached prefix skip re-prefilling it (``prefix_cache``, copy-on-write on
+divergence), and pool exhaustion preempts the newest request to host RAM
+(``sleep_level`` 1: offload + bitwise wake; 2: discard + re-prefill).
+Pool/prefix state PERSISTS across serve() calls, so a warmed engine serves
+repeat prompts at a high prefix hit rate. Every terminal status — ok,
+timeout, rejected, failed — releases the slot's blocks through one choke
+point, so the pool can never leak from an eviction path.
 """
 from __future__ import annotations
 
@@ -49,6 +62,27 @@ from repro.engine.spec import RunSpec
 PyTree = Any
 
 
+def _sampler(temp: float):
+    """Per-row sampling closure shared by the dense and paged serving fns:
+    greedy at temp == 0, else categorical with one key per row (a request's
+    stream never depends on its co-residents)."""
+    import jax
+    import jax.numpy as jnp
+
+    def sample(logits, keys):
+        if temp <= 0:
+            return jnp.argmax(logits, -1).astype(jnp.int32), keys
+
+        def one(k, lg):
+            nk, sub = jax.random.split(k)
+            t = jax.random.categorical(
+                sub, lg.astype(jnp.float32) / temp, -1)
+            return nk, t
+        keys, toks = jax.vmap(one)(keys, logits)
+        return toks.astype(jnp.int32), keys
+    return sample
+
+
 class ServeEngine:
     def __init__(self, spec: RunSpec, *,
                  batch: int = 4,
@@ -57,6 +91,11 @@ class ServeEngine:
                  cache_len: Optional[int] = None,
                  temperature: float = 0.0,
                  resilience=None,         # FaultInjector | spec str | None
+                 paged: bool = False,
+                 kv_block_size: int = 16,
+                 kv_pool_blocks: Optional[int] = None,
+                 prefix_cache: bool = True,
+                 sleep_level: int = 1,
                  verbose: bool = True):
         spec.ensure_host_devices()
         self.spec = spec
@@ -68,6 +107,17 @@ class ServeEngine:
                                                     seed=spec.seed)
         self.events = rsl.EventLog()
         self.verbose = verbose
+        self.paged = paged
+        self.kv_block_size = kv_block_size
+        self.kv_pool_blocks = kv_pool_blocks
+        self.prefix_cache = prefix_cache
+        if sleep_level not in (1, 2):
+            raise ValueError(f"sleep_level={sleep_level}; expected 1 "
+                             "(offload to host RAM) or 2 (discard + "
+                             "re-prefill on wake)")
+        self.sleep_level = sleep_level
+        if paged and kv_block_size < 1:
+            raise ValueError(f"kv_block_size={kv_block_size} must be >= 1")
 
         self.cfg = spec.resolve_config()
         self.cache_len = cache_len or (prompt_len + gen)
@@ -77,6 +127,8 @@ class ServeEngine:
         self._built = False
         self._warm = set()                # traced (fn, shapes) signatures
         self._serving = {}                # slot-count -> jitted serving fns
+        self._cache_axes = None           # dense merge axes, once per build
+        self._paged_state = None          # pool + device cache, persistent
 
     def _log(self, msg: str) -> None:
         if self.verbose:
@@ -102,8 +154,36 @@ class ServeEngine:
         if cfg.family == "encdec":
             self._encode_fn = jax.jit(
                 lambda p, f: model_mod.encode(cfg, p, f))
+        if self.paged:
+            reason = model_mod.paged_unsupported_reason(cfg)
+            if reason is not None:
+                raise NotImplementedError(
+                    f"paged KV cache unsupported: {reason}. Serve this "
+                    "family with the dense merge_caches engine "
+                    "(ServeEngine(..., paged=False)) instead.")
         self._built = True
         return self
+
+    def _batch_axes(self, init_fn):
+        """Per-leaf cache batch axes for ``batching.merge_caches``,
+        discovered ONCE per engine build (eval_shape traces the whole cache
+        pytree twice; re-running it for every slot count repaid that on
+        every ``_serving_fns`` build). Fails fast naming both admission
+        paths so an axis-ambiguous cache layout points at its options."""
+        if self._cache_axes is None:
+            try:
+                self._cache_axes = batching.cache_batch_axes(init_fn)
+            except ValueError as e:
+                raise ValueError(
+                    "cache batch-axis discovery failed for family "
+                    f"{self.cfg.family!r}: {e}. The DENSE engine admits by "
+                    "row-splicing with batching.merge_caches and needs "
+                    "these axes; the PAGED engine (ServeEngine(..., "
+                    "paged=True)) admits through the block table instead "
+                    "and never calls merge_caches — but it only supports "
+                    "families where models.paged_unsupported_reason(cfg) "
+                    "is None.") from e
+        return self._cache_axes
 
     def _warmup(self, tag, fn, *args):
         """Compile outside the timed region, once per argument-shape
@@ -263,21 +343,9 @@ class ServeEngine:
                 f"gen={self.gen} (a row would overflow its slot)")
         vlm_prefix = cfg.vlm.num_patches if cfg.vlm else 0
         init_fn = lambda b: init_cache(cfg, b, cache_len + vlm_prefix)
-        axes = batching.cache_batch_axes(init_fn)
+        axes = self._batch_axes(init_fn)
         base_key = jax.random.PRNGKey(self.spec.seed + 1)
-        temp = self.temperature
-
-        def sample(logits, keys):
-            if temp <= 0:
-                return jnp.argmax(logits, -1).astype(jnp.int32), keys
-
-            def one(k, lg):
-                nk, sub = jax.random.split(k)
-                t = jax.random.categorical(
-                    sub, lg.astype(jnp.float32) / temp, -1)
-                return nk, t
-            keys, toks = jax.vmap(one)(keys, logits)
-            return toks.astype(jnp.int32), keys
+        sample = _sampler(self.temperature)
 
         def admit(params, prompts, lengths, mask, rids, tok, cache, keys):
             b = {"tokens": prompts, "lengths": lengths}
@@ -308,6 +376,134 @@ class ServeEngine:
                # quarantine detector and its chaos-test driver)
                "health": jax.jit(rsl.row_health_fn(axes)),
                "poison": jax.jit(rsl.poison_rows_fn(axes))}
+        self._serving[key] = fns
+        return fns
+
+    def _paged_setup(self, n_slots: int) -> Dict[str, Any]:
+        """The persistent paged-serving state: the BlockPool allocator, the
+        device block-pool cache, and the host mirrors of the table and
+        per-row lengths. Persisting it across serve() calls is what keeps
+        the prefix cache warm; a changed slot count / pool geometry rebuilds
+        it (and drops the cached prefixes)."""
+        import numpy as np
+        from repro.engine import paging
+        from repro.models import model as model_mod
+
+        bs = self.kv_block_size
+        cache_len_p = paging.round_up(self.cache_len, bs)
+        nb_max = cache_len_p // bs
+        pool_blocks = self.kv_pool_blocks or n_slots * nb_max
+        st = self._paged_state
+        if st is not None and (st["B"], st["bs"], st["pool_blocks"]) == \
+                (n_slots, bs, pool_blocks):
+            return st
+        if st is not None:
+            self._log("paged: pool geometry changed — rebuilding the block "
+                      "pool (cached prefixes dropped)")
+        pool = paging.BlockPool(pool_blocks, bs,
+                                prefix_cache=self.prefix_cache)
+        cache = model_mod.init_paged_cache(self.cfg, n_slots, pool_blocks,
+                                           bs, cache_len_p)
+        st = {"B": n_slots, "bs": bs, "nb_max": nb_max,
+              "pool_blocks": pool_blocks, "pool": pool, "cache": cache,
+              "table": np.full((n_slots, nb_max), pool_blocks, np.int32),
+              "row_len": np.zeros((n_slots,), np.int64)}
+        self._paged_state = st
+        return st
+
+    def _serving_fns_paged(self, n_slots: int, nb_max: int):
+        """Paged twins of ``_serving_fns`` (built once per slot count):
+
+        ``admit_fresh``  — ragged prefill of admissions with NO cached
+                           prefix into a TRANSIENT dense cache of
+                           round_up(S, block) positions, block-scattered
+                           into the pool through the table
+                           (``paging.scatter_prefill``). The prefill
+                           numerics are the dense engine's — this path is
+                           bitwise-identical to dense serving. Retraces
+                           once per prompt width (normal admissions at
+                           prompt_len; sleep-level-2 wakes at
+                           prompt_len + gen).
+        ``admit_shared`` — prefix-cache hits: prefill only the ragged TAIL
+                           (positions hist..len) through the model's paged
+                           prefill; the shared prefix is read from already
+                           written (refcounted) blocks.
+        ``step``         — one decode step; the block table rides inside
+                           the cache pytree.
+        ``gather/wake/copy`` — offload payload readout, sleep-level-1
+                           restore, and the CoW block copy.
+        ``health/poison``  — paged twins of the resilience pair (pool
+                           leaves have no batch axis, so the dense
+                           axes-based fns cannot see rows)."""
+        key = ("paged", n_slots, self.prompt_len, self.gen,
+               self.temperature, self.kv_block_size, nb_max)
+        if key in self._serving:
+            return self._serving[key]
+        import jax
+        import jax.numpy as jnp
+        from repro.engine import paging
+        from repro.models import init_cache
+        from repro.models import model as model_mod
+
+        cfg = self.cfg
+        B, bs = n_slots, self.kv_block_size
+        base_key = jax.random.PRNGKey(self.spec.seed + 1)
+        sample = _sampler(self.temperature)
+
+        def resample(logits, mask, rids, tok, keys):
+            fresh_keys = jax.vmap(
+                lambda r: jax.random.fold_in(base_key, r))(rids)
+            keys = jnp.where(mask[:, None], fresh_keys, keys)
+            tok0, keys2 = sample(logits, keys)
+            keys = jnp.where(mask[:, None], keys2, keys)
+            tok = jnp.where(mask, tok0, tok)
+            return tok, keys
+
+        def admit_fresh(params, prompts, lengths, mask, rids, tok, cache,
+                        keys):
+            S = prompts.shape[1]
+            dense = init_cache(cfg, B, paging.round_up(S, bs))
+            b = {"tokens": prompts, "lengths": lengths}
+            logits, filled = model_mod.prefill_with_cache(cfg, params, b,
+                                                          dense)
+            cache = paging.scatter_prefill(cache, filled, mask)
+            tok, keys = resample(logits, mask, rids, tok, keys)
+            return tok, cache, keys
+
+        def admit_shared(params, tails, lengths, hist, mask, rids, tok,
+                         cache, keys):
+            # non-admitted rows carry (lengths, hist) = (cur_len, cur_len)
+            # — empty tail, every write trash-redirected, length preserved
+            b = {"tokens": tails, "lengths": lengths, "hist": hist}
+            logits, cache = model_mod.prefill_with_cache(cfg, params, b,
+                                                         cache)
+            tok, keys = resample(logits, mask, rids, tok, keys)
+            return tok, cache, keys
+
+        def step(params, tok, cache, keys):
+            logits, cache = model_mod.decode_step(cfg, params,
+                                                  {"token": tok}, cache,
+                                                  ragged=True)
+            tok, keys = sample(logits, keys)
+            return tok, cache, keys
+
+        def wake(cache, payload, idx, slot_mask, new_len, tok, last_tok,
+                 keys, key_row):
+            cache = paging.upload_slot(cache, payload, idx, slot_mask,
+                                       new_len)
+            tok = jnp.where(slot_mask, last_tok, tok)
+            keys = jnp.where(slot_mask[:, None], key_row[None, :], keys)
+            return cache, tok, keys
+
+        fns = {"admit_fresh": jax.jit(admit_fresh),
+               "admit_shared": jax.jit(admit_shared),
+               "step": jax.jit(step),
+               "gather": jax.jit(paging.gather_slot),
+               "wake": jax.jit(wake),
+               "copy": jax.jit(paging.copy_blocks),
+               "health": jax.jit(paging.paged_row_health),
+               "poison": jax.jit(paging.paged_poison_rows),
+               "base_key": base_key}
         self._serving[key] = fns
         return fns
 
@@ -416,24 +612,173 @@ class ServeEngine:
         # the machinery itself is always compiled in
         guard = self.injector is not None
 
-        fns = self._serving_fns(B)
+        from repro.engine import paging
+
+        paged = self.paged
         sched = batching.SlotScheduler(B)
+        if paged:
+            if self.cache_len < S_pad + self.gen:
+                raise ValueError(
+                    f"cache_len={self.cache_len} cannot hold "
+                    f"prompt_len={S_pad} + gen={self.gen} (a row would "
+                    f"overflow its block table)")
+            st = self._paged_setup(B)
+            pool, bs = st["pool"], st["bs"]
+            nb_max, trash = st["nb_max"], st["pool_blocks"]
+            pool.events = sched.events    # allocator log -> event replay
+            pool.reset_stats()
+            fns = self._serving_fns_paged(B, nb_max)
+            cache = st["cache"]
+            # NB: every host->device transfer of st["table"] goes through a
+            # .copy() — jnp.asarray's transfer is ASYNC, and the scheduler
+            # mutates st["table"] in place; handing jax the live buffer
+            # races the copy against the next mutation (reads of a FUTURE
+            # table: wrong/unallocated blocks, nondeterministic tokens)
+            cache["table"] = jnp.asarray(st["table"].copy())
+            row_len = st["row_len"]
+            # a request that could never fit the pool even ALONE must be
+            # rejected up front — admission would otherwise retry forever
+            fits = []
+            for r in accepted:
+                need = -(-(len(r.prompt) + r.max_gen) // bs)
+                if need > pool.num_blocks:
+                    self._reject(r, f"needs {need} KV blocks > pool of "
+                                    f"{pool.num_blocks}")
+                else:
+                    fits.append(r)
+            accepted = fits
+        else:
+            fns = self._serving_fns(B)
         pending = sorted(accepted, key=lambda r: (r.arrival_step, r.rid))
         waiting: List[batching.Request] = []
+        parked: Dict[int, paging.Parked] = {}
         tok = jnp.zeros((B,), jnp.int32)
-        cache = fns["init"](B)
+        if not paged:
+            cache = fns["init"](B)
         keys = jax.vmap(lambda i: jax.random.fold_in(fns["base_key"], i))(
             jnp.arange(B))
 
-        # compile both serving fns outside the timed loop
+        # compile the serving fns outside the timed loop
         zp = jnp.zeros((B, S_pad), jnp.int32)
         zl = jnp.ones((B,), jnp.int32)
         zm = jnp.zeros((B,), bool)
         zr = jnp.zeros((B,), jnp.int32)
-        self._warmup(("serve_admit", B), fns["admit"], self.params, zp, zl,
-                     zm, zr, tok, cache, keys)
+        if paged:
+            self._warmup(("serve_admit_fresh", B), fns["admit_fresh"],
+                         self.params, zp, zl, zm, zr, tok, cache, keys)
+            if self.prefix_cache:
+                self._warmup(("serve_admit_shared", B), fns["admit_shared"],
+                             self.params, zp, jnp.zeros((B,), jnp.int32),
+                             jnp.zeros((B,), jnp.int32), zm, zr, tok, cache,
+                             keys)
+        else:
+            self._warmup(("serve_admit", B), fns["admit"], self.params, zp,
+                         zl, zm, zr, tok, cache, keys)
         self._warmup(("serve_step", B), fns["step"], self.params, tok, cache,
                      keys)
+        preemptions = offloads = wakes = 0
+
+        def release_slot_resources(slot):
+            """THE terminal choke point: every path that frees a slot —
+            completion, deadline eviction, quarantine, truncation,
+            preemption — funnels through here, so the paged pool can never
+            leak blocks from an exit path. Dense mode has no per-slot
+            resources beyond the scheduler's own bookkeeping."""
+            if paged:
+                pool.release_slot(slot)
+                st["table"][slot] = trash
+                row_len[slot] = 0
+                cache["table"] = jnp.asarray(st["table"].copy())
+
+        def refresh_row(slot):
+            blocks = pool.slot_blocks.get(slot, [])
+            st["table"][slot] = trash
+            st["table"][slot, :len(blocks)] = blocks
+
+        def do_cow(pairs):
+            nonlocal cache
+            if pairs:
+                src = np.full((B,), trash, np.int32)
+                dst = np.full((B,), trash, np.int32)
+                for i, (s, d) in enumerate(pairs):
+                    src[i], dst[i] = s, d
+                cache = fns["copy"](cache, jnp.asarray(src),
+                                    jnp.asarray(dst))
+
+        def park(slot, why):
+            """Preempt the slot's request to host RAM. Sleep level 1 keeps
+            a bitwise payload of its blocks (wake = upload + resume); level
+            2 keeps only the generated token values (wake = re-prefill).
+            The pending sampled token is NOT yet in the history, so on wake
+            it is re-injected (level 1) or re-derived (level 2)."""
+            nonlocal preemptions, offloads
+            rid = sched.preempt(slot, t)
+            p = paging.Parked(rid=rid, level=self.sleep_level,
+                              n_tokens=int(row_len[slot]), generated=[])
+            if self.sleep_level == 1:
+                payload = fns["gather"](cache,
+                                        jnp.asarray(st["table"][slot].copy()))
+                p.payload = jax.tree.map(np.asarray, payload)
+                p.last_token = int(np.asarray(tok)[slot])
+                p.key_row = np.asarray(keys)[slot]
+                offloads += 1
+                pool._log("page_offload", slot, rid)
+            else:
+                # the wake re-prefills prompt + generated, so only the
+                # token VALUES survive; this is the rare path, so the host
+                # sync of the slot's history rows is acceptable
+                for h, s, c in sched.token_segments(rid):
+                    if c:
+                        seg = np.asarray(jnp.stack(history[h:h + c]))[:, s]
+                        p.generated.extend(int(x) for x in seg)
+                pool._log("page_drop", slot, rid)
+            parked[rid] = p
+            preemptions += 1
+            release_slot_resources(slot)
+            self.events.append("preempt", t, rid=rid, slot=slot,
+                               level=self.sleep_level, reason=why)
+            self._log(f"step {t}: request {rid} preempted from slot {slot} "
+                      f"to host RAM (sleep level {self.sleep_level}: {why})")
+
+        def try_wake_level1(p) -> bool:
+            nonlocal cache, tok, keys, wakes
+            free_now = sched.free_slots()
+            if not free_now:
+                return False
+            slot = free_now[0]
+            try:
+                pool.prepare_write(slot, max(p.n_tokens - 1, 0))
+            except paging.PoolExhausted:
+                pool.release_slot(slot)   # roll back the partial grab
+                return False
+            sched.admit(slot, sched.requests[p.rid], t, len(history),
+                        resume=True)
+            refresh_row(slot)
+            row_len[slot] = p.n_tokens
+            cache["table"] = jnp.asarray(st["table"].copy())
+            nblk = -(-p.n_tokens // bs)
+            idx = np.full((nb_max,), trash + 1, np.int32)   # OOB -> drop
+            idx[:nblk] = st["table"][slot, :nblk]
+            mask1 = np.zeros((B,), bool)
+            mask1[slot] = True
+            cache, tok, keys = fns["wake"](
+                cache, jax.tree.map(jnp.asarray, p.payload),
+                jnp.asarray(idx), jnp.asarray(mask1),
+                jnp.int32(p.n_tokens), tok, jnp.int32(p.last_token), keys,
+                jnp.asarray(p.key_row))
+            wakes += 1
+            pool._log("page_wake", slot, p.rid)
+            self.events.append("wake", t, rid=p.rid, slot=slot, level=1)
+            self._log(f"step {t}: request {p.rid} woken into slot {slot} "
+                      f"(level 1: {p.n_tokens} cached tokens restored)")
+            return True
+
+        def lifo_victim():
+            live = sched.live_slots()
+            if not live:
+                return None
+            return max(live,
+                       key=lambda s: (sched.admit_step[sched.owner[s]], s))
 
         def deadline_of(r):
             return r.deadline_steps if r.deadline_steps is not None \
@@ -451,6 +796,7 @@ class ServeEngine:
                     sched.requests[rid].status = "failed"
                     sched.requests[rid].error = ("non-finite cache rows "
                                                  "(quarantined)")
+                    release_slot_resources(slot)
                     self.events.append("quarantine", t, rid=rid, slot=slot)
                     self._log(f"step {t}: request {rid} quarantined "
                               f"(non-finite cache rows)")
@@ -462,11 +808,13 @@ class ServeEngine:
         decode_steps = prefill_calls = admitted_mid_decode = 0
         truncated = False
         t_start = time.perf_counter()
-        while pending or waiting or sched.live_slots():
+        while pending or waiting or parked or sched.live_slots():
             if t >= max_steps:
                 truncated = True         # graceful: time the stragglers
                 break                    # out below instead of raising
             now = time.perf_counter()
+            if paged:
+                pool.step = t            # stamp allocator events
             # -- arrivals (bounded admission queue) --------------------------
             n_arrived = 0
             for r in pending:
@@ -501,45 +849,214 @@ class ServeEngine:
                     sched.requests[rid].status = "timeout"
                     sched.requests[rid].error = (f"deadline of {d} steps "
                                                  f"expired mid-decode")
+                    release_slot_resources(slot)
                     self.events.append("timeout", t, rid=rid, where="slot")
+            for rid in list(parked):
+                r = sched.requests[rid]
+                d = deadline_of(r)
+                if d is not None and t - r.arrival_step >= d:
+                    parked.pop(rid)      # payload dropped with it
+                    r.status = "timeout"
+                    r.error = f"deadline of {d} steps expired while parked"
+                    sched.close(rid, t, now, "timeout")
+                    self.events.append("timeout", t, rid=rid,
+                                       where="parked")
             # -- admissions --------------------------------------------------
-            free = sched.free_slots()
-            elig = [] if (policy == "static" and sched.live_slots()) else \
-                waiting
-            take = min(len(free), len(elig))
-            if take:
+            elig_ok = not (policy == "static" and sched.live_slots())
+            if paged:
                 was_live = bool(sched.live_slots())
-                prompts = np.zeros((B, S_pad), np.int32)
-                lengths = np.ones((B,), np.int32)
-                mask = np.zeros((B,), bool)
-                rids = np.zeros((B,), np.int32)
-                poison = np.zeros((B,), bool)
-                for slot, req in zip(free[:take], elig[:take]):
-                    prompts[slot, :len(req.prompt)] = req.prompt
-                    lengths[slot] = len(req.prompt)
-                    mask[slot] = True
-                    rids[slot] = req.rid
-                    sched.admit(slot, req, t, len(history))
+                # parked level-1 wakes first: bitwise restore, no prefill
+                if elig_ok:
+                    for rid in list(parked):
+                        if parked[rid].level == 1 and \
+                                try_wake_level1(parked[rid]):
+                            parked.pop(rid)
+                # then level-2 resumes (re-prefill at prompt_len + gen
+                # width) and fresh admissions, one block-pool plan each
+                cands = []
+                if elig_ok:
+                    cands = [(sched.requests[rid], parked[rid])
+                             for rid in list(parked)
+                             if parked[rid].level == 2]
+                    cands += [(r, None) for r in waiting]
+                S_res = S_pad + self.gen
+                plans = {}                  # (kind, width) -> [admission]
+                cow_pairs, cow_pins, poison_slots = [], [], []
+                taken_waiting = 0
+                for req, p in cands:
+                    free_now = sched.free_slots()
+                    if not free_now:
+                        break
+                    slot = free_now[0]
+                    prompt = np.asarray(req.prompt, np.int64)
+                    if p is not None and p.generated:
+                        prompt = np.concatenate(
+                            [prompt, np.asarray(p.generated, np.int64)])
+                    try:
+                        hist_n, cow = pool.admit(slot, prompt)
+                    except paging.PoolExhausted:
+                        break       # completions will free blocks; wait
+                    sched.admit(slot, req, t, len(history),
+                                resume=p is not None)
+                    refresh_row(slot)
+                    row_len[slot] = len(prompt)
+                    if cow:
+                        # the device copy is deferred until the source's
+                        # content is valid — pin it so a later admission in
+                        # this round cannot reclaim + overwrite it first
+                        cow_pairs.append(cow[:2])
+                        cow_pins.append(cow[0])
+                        pool.pin(cow[0])
+                    key2 = ("shared" if hist_n else "fresh",
+                            S_pad if p is None else S_res)
+                    plans.setdefault(key2, []).append(
+                        (slot, req, prompt, hist_n))
                     if was_live and t > 0:
                         admitted_mid_decode += 1
+                    if p is not None:
+                        parked.pop(req.rid)
+                        wakes += 1
+                        pool._log("page_wake", slot, req.rid)
+                        self.events.append("wake", t, rid=req.rid,
+                                           slot=slot, level=2)
+                    else:
+                        taken_waiting += 1
                     if self.injector is not None and \
                             self.injector.fires("poison_request", req.rid):
-                        poison[slot] = True
+                        poison_slots.append(slot)
                         self.events.append("inject", t,
                                            site="poison_request",
                                            rid=req.rid, slot=slot)
-                waiting = waiting[take:]
-                tok, cache, keys = fns["admit"](
-                    self.params, jnp.asarray(prompts), jnp.asarray(lengths),
-                    jnp.asarray(mask), jnp.asarray(rids), tok, cache, keys)
-                prefill_calls += 1
-                if poison.any():
-                    cache = fns["poison"](cache, jnp.asarray(poison))
-                if guard:
-                    quarantine(time.perf_counter())
+                waiting = waiting[taken_waiting:]
+                if plans:
+                    cache["table"] = jnp.asarray(st["table"].copy())
+                    # fresh admissions prefill (and REGISTER their blocks)
+                    # before shared ones read them — intra-batch sharing.
+                    # CoW copies run BETWEEN the two: after the fresh
+                    # prefills have written every source block, before any
+                    # shared prefill reads its private copy.
+                    order = sorted(plans, key=lambda k: k[0] != "fresh")
+                    cow_done = False
+                    for kind, width in order:
+                        if kind == "shared" and not cow_done:
+                            do_cow(cow_pairs)
+                            for b in cow_pins:
+                                pool.unpin(b)
+                            cow_done = True
+                        items = plans[(kind, width)]
+                        prompts = np.zeros((B, width), np.int32)
+                        lengths = np.zeros((B,), np.int32)
+                        hist_a = np.zeros((B,), np.int32)
+                        mask = np.zeros((B,), bool)
+                        rids = np.zeros((B,), np.int32)
+                        if kind == "shared":
+                            # non-admitted rows: empty tail at their own
+                            # length — no writes, lengths preserved
+                            lengths[:] = row_len
+                            hist_a[:] = row_len
+                        for slot, req, prompt, hist_n in items:
+                            mask[slot] = True
+                            rids[slot] = req.rid
+                            lengths[slot] = len(prompt)
+                            hist_a[slot] = hist_n
+                            tail = prompt[hist_n:] if kind == "shared" \
+                                else prompt
+                            prompts[slot, :len(tail)] = tail
+                        if kind == "fresh":
+                            tok, cache, keys = fns["admit_fresh"](
+                                self.params, jnp.asarray(prompts),
+                                jnp.asarray(np.maximum(lengths, 1)),
+                                jnp.asarray(mask), jnp.asarray(rids), tok,
+                                cache, keys)
+                        else:
+                            tok, cache, keys = fns["admit_shared"](
+                                self.params, jnp.asarray(prompts),
+                                jnp.asarray(lengths), jnp.asarray(hist_a),
+                                jnp.asarray(mask), jnp.asarray(rids), tok,
+                                cache, keys)
+                        prefill_calls += 1
+                    if not cow_done:        # defensive: cow without shared
+                        do_cow(cow_pairs)
+                        for b in cow_pins:
+                            pool.unpin(b)
+                    if poison_slots:
+                        pz = np.zeros((B,), bool)
+                        pz[poison_slots] = True
+                        cache = fns["poison"](cache, jnp.asarray(pz))
+                    if guard:
+                        quarantine(time.perf_counter())
+            else:
+                free = sched.free_slots()
+                elig = waiting if elig_ok else []
+                take = min(len(free), len(elig))
+                if take:
+                    was_live = bool(sched.live_slots())
+                    prompts = np.zeros((B, S_pad), np.int32)
+                    lengths = np.ones((B,), np.int32)
+                    mask = np.zeros((B,), bool)
+                    rids = np.zeros((B,), np.int32)
+                    poison = np.zeros((B,), bool)
+                    for slot, req in zip(free[:take], elig[:take]):
+                        prompts[slot, :len(req.prompt)] = req.prompt
+                        lengths[slot] = len(req.prompt)
+                        mask[slot] = True
+                        rids[slot] = req.rid
+                        sched.admit(slot, req, t, len(history))
+                        if was_live and t > 0:
+                            admitted_mid_decode += 1
+                        if self.injector is not None and \
+                                self.injector.fires("poison_request",
+                                                    req.rid):
+                            poison[slot] = True
+                            self.events.append("inject", t,
+                                               site="poison_request",
+                                               rid=req.rid, slot=slot)
+                    waiting = waiting[take:]
+                    tok, cache, keys = fns["admit"](
+                        self.params, jnp.asarray(prompts),
+                        jnp.asarray(lengths), jnp.asarray(mask),
+                        jnp.asarray(rids), tok, cache, keys)
+                    prefill_calls += 1
+                    if poison.any():
+                        cache = fns["poison"](cache, jnp.asarray(poison))
+                    if guard:
+                        quarantine(time.perf_counter())
+            # -- paged: make every live row's next write position resident --
+            # (BEFORE the emission is logged: a preempted row's pending
+            # token stays pending, so its wake re-injects it exactly once)
+            if paged and sched.live_slots():
+                cow_pairs, dirty = [], False
+                for slot in list(sched.live_slots()):
+                    rid = sched.owner[slot]
+                    if rid is None:
+                        continue    # parked as an earlier slot's LIFO victim
+                    # the block is allocated even for a request completing
+                    # this step (released again at completion): the decode
+                    # READS the position it just wrote, so the write must
+                    # land in a real exclusive block — writes redirected to
+                    # the write-off path are dropped, not read back
+                    while sched.owner[slot] is not None:
+                        try:
+                            new, cow = pool.prepare_write(
+                                slot, int(row_len[slot]))
+                        except paging.PoolExhausted:
+                            park(lifo_victim(),   # LIFO victim — maybe self
+                                 f"pool exhausted growing slot {slot}")
+                            continue
+                        for lb, phys in new:
+                            st["table"][slot, lb] = phys
+                            dirty = True
+                        if cow:
+                            cow_pairs.append(cow[:2])
+                            st["table"][slot, cow[2]] = cow[1]
+                            dirty = True
+                        break
+                do_cow(cow_pairs)
+                if dirty:
+                    cache["table"] = jnp.asarray(st["table"].copy())
             live = sched.live_slots()
             if not live:
-                if not pending and not waiting:
+                if not pending and not waiting and not parked:
                     break                # everything terminal: done
                 t += 1                   # idle tick: clock runs to the next
                 continue                 # arrival without touching devices
@@ -553,13 +1070,18 @@ class ServeEngine:
             if eos_id is not None:
                 th = np.asarray(tok)     # documented per-step host sync
                 eos_hit = [bool(th[s] == eos_id) for s in range(B)]
-            sched.log_emissions(t, time.perf_counter(), eos_hit)
+            for s in sched.log_emissions(t, time.perf_counter(), eos_hit):
+                release_slot_resources(s)    # completion frees the blocks
             # -- one ragged decode step for the whole slot batch -------------
             # (only when a live row still needs it: a freshly admitted
             # request's first token comes from admit(), not step)
             if sched.live_slots():
+                live_now = sched.live_slots()
                 tok, cache, keys = fns["step"](self.params, tok, cache, keys)
                 decode_steps += 1
+                if paged:
+                    for s in live_now:
+                        row_len[s] += 1
                 if guard:
                     quarantine(time.perf_counter())
             t += 1
@@ -572,6 +1094,14 @@ class ServeEngine:
                 rid = sched.evict(slot, t, now, "timeout")
                 sched.requests[rid].status = "timeout"
                 sched.requests[rid].error = f"max_steps={max_steps} exhausted"
+                release_slot_resources(slot)
+                self.events.append("timeout", t, rid=rid, where="max_steps")
+            for rid in list(parked):
+                parked.pop(rid)          # payload dropped with it
+                r = sched.requests[rid]
+                r.status = "timeout"
+                r.error = f"max_steps={max_steps} exhausted"
+                sched.close(rid, t, now, "timeout")
                 self.events.append("timeout", t, rid=rid, where="max_steps")
             for r in waiting + pending:
                 r.status = "timeout"
@@ -585,8 +1115,12 @@ class ServeEngine:
         hist = (np.asarray(jnp.stack(history))
                 if history else np.zeros((0, B), np.int32))   # ONE transfer
         for rid, req in sched.requests.items():
-            h0, n = sched.first_hist[rid], sched.gen_done[rid]
-            req.tokens = hist[h0:h0 + n, sched.slot_of[rid]].astype(np.int32)
+            # a request's stream may span several (history, slot) segments
+            # when the paged pool preempted and resumed it
+            parts = [hist[h:h + c, s]
+                     for h, s, c in sched.token_segments(rid)]
+            req.tokens = (np.concatenate(parts).astype(np.int32) if parts
+                          else np.zeros((0,), np.int32))
             if req.status == "queued":   # untouched by evict/timeout paths
                 req.status = "ok"
 
@@ -617,6 +1151,33 @@ class ServeEngine:
             "latency_steps": {"p50": pct(lat_steps, 50),
                               "p99": pct(lat_steps, 99)},
         }
+        if paged:
+            st["cache"] = cache          # persist: the prefix cache stays
+            lookup = pool.prefix_lookup_tokens
+            metrics["paging"] = {
+                "pool_blocks": pool.num_blocks,
+                "block_size": bs,
+                "blocks_in_use_peak": pool.in_use_peak,
+                "prefix_hit_rate": round(
+                    pool.prefix_hit_tokens / lookup, 4) if lookup else 0.0,
+                "prefill_tokens_requested": lookup,
+                "marginal_prefill_tokens": lookup - pool.prefix_hit_tokens,
+                "preemptions": preemptions,
+                "offloads": offloads,
+                "wakes": wakes,
+                "cow_copies": pool.cow_copies,
+                "sleep_level": self.sleep_level,
+                "prefix_cache": self.prefix_cache,
+            }
+            pg = metrics["paging"]
+            self._log(
+                f"serve[paged]: {pg['pool_blocks']} blocks x "
+                f"{pg['block_size']} tok, peak {pg['blocks_in_use_peak']} "
+                f"in use, prefix hit rate {pg['prefix_hit_rate']}, "
+                f"{pg['marginal_prefill_tokens']}/"
+                f"{pg['prefill_tokens_requested']} prefill tokens computed, "
+                f"{preemptions} preemptions ({offloads} offloads, "
+                f"{wakes} wakes)")
         self._log(
             f"serve[{policy}]: {len(requests)} requests over {B} slots in "
             f"{wall:.2f}s — {metrics['decode_tok_s']} tok/s, "

@@ -31,6 +31,8 @@ from repro.kernels.decode_attention import decode_attention_kernel
 from repro.kernels.flash_attention import (flash_attention_bwd_dkv,
                                            flash_attention_bwd_dq,
                                            flash_attention_kernel)
+from repro.kernels.paged_attention import (paged_decode_attention_kernel,
+                                           paged_prefill_attention_kernel)
 from repro.kernels.ssm_scan import gla_scan_bwd_kernel, gla_scan_kernel
 
 
@@ -144,6 +146,42 @@ def decode_attention(q, k, v, cache_len, *, window: int = 0, bk: int = 512,
     out = decode_attention_kernel(qh, kh, vh, ln, bk=bk, group=group,
                                   window=window, interpret=interpret)
     return out.reshape(B, 1, H, dv)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(q, k_pool, v_pool, table, cache_len, *,
+                           interpret: bool = False):
+    """q: [B,1,H,dh]; k/v_pool: [NB+1,bs,KV,dh] (block pool, last block is
+    the trash block); table: [B,nb] int32; cache_len: [B] -> [B,1,H,dv].
+    The ``paged_attn="pallas"`` decode op: KV blocks are read through the
+    scalar-prefetched block table, no gather materialises the row's cache."""
+    B, _, H, dh = q.shape
+    dv = v_pool.shape[-1]
+    qh = q[:, 0].reshape(B * H, dh)
+    out = paged_decode_attention_kernel(
+        qh, k_pool, v_pool, table.reshape(-1).astype(jnp.int32),
+        cache_len.astype(jnp.int32), heads=H, interpret=interpret)
+    return out.reshape(B, 1, H, dv)
+
+
+@partial(jax.jit, static_argnames=("bq", "interpret"))
+def paged_prefill_attention(q, k_pool, v_pool, table, q_start, kv_len, *,
+                            bq: int = 128, interpret: bool = False):
+    """q: [B,Sq,H,dh] ragged tail (row b's token i is at absolute position
+    ``q_start[b] + i``; the tail's K/V must already be scattered into the
+    pool); table: [B,nb]; kv_len: [B] total valid length -> [B,Sq,H,dv].
+    Forward-only (serving admission); padding rows are masked by kv_len."""
+    B, Sq, H, dh = q.shape
+    dv = v_pool.shape[-1]
+    bq = min(bq, Sq)
+    qh = jnp.moveaxis(q, 2, 1).reshape(B * H, Sq, dh)
+    qh, sq0 = _pad_to(qh, 1, bq)
+    out = paged_prefill_attention_kernel(
+        qh, k_pool, v_pool, table.reshape(-1).astype(jnp.int32),
+        q_start.astype(jnp.int32), kv_len.astype(jnp.int32),
+        heads=H, bq=bq, interpret=interpret)
+    out = out[:, :sq0]
+    return jnp.moveaxis(out.reshape(B, H, Sq, dv), 1, 2)
 
 
 # ---------------------------------------------------------------------------

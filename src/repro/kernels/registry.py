@@ -13,6 +13,9 @@ flag:
     ssm_scan      chunked jnp GLA scan           ops.gla_scan custom_vjp (fused
                                                  one-pass reverse chunk-scan
                                                  backward)
+    paged_attn    gather-through-table + jnp     ops.paged_decode_attention /
+                  decode / masked flash          ops.paged_prefill_attention
+                                                 (block-table scalar prefetch)
 
 Off-TPU every Pallas op runs with ``interpret=True`` automatically
 (``ops.default_interpret``), so all four backends stay CPU-testable.
@@ -33,7 +36,8 @@ import dataclasses
 from dataclasses import dataclass, replace
 from typing import Optional, Union
 
-KERNEL_OPS = ("train_attn", "prefill_attn", "decode_attn", "ssm_scan")
+KERNEL_OPS = ("train_attn", "prefill_attn", "decode_attn", "ssm_scan",
+              "paged_attn")
 KERNEL_BACKENDS = ("jnp", "pallas")
 
 
@@ -44,6 +48,10 @@ class KernelSpec:
     prefill_attn: str = "jnp"
     decode_attn: str = "jnp"
     ssm_scan: str = "jnp"
+    # both paged ops (decode + ragged-tail prefill) of the serving engine's
+    # paged KV cache; independent of decode_attn so the dense and paged
+    # backends can be compared side by side
+    paged_attn: str = "jnp"
 
     def validate(self) -> "KernelSpec":
         for op in KERNEL_OPS:

@@ -16,6 +16,11 @@ poisson`` replays a deterministic Poisson arrival trace):
         --reduced --max-slots 4 --arrival poisson --rate 0.5 \
         --num-requests 8
 
+Paged KV cache (with --max-slots): ``--paged`` serves from a block pool
+with prefix sharing and host-RAM offload (``--kv-block-size``,
+``--kv-pool-blocks``, ``--no-prefix-cache``, ``--sleep-level``); the
+paging metrics line reports peak pool occupancy and the prefix hit rate.
+
 Prefill runs as ONE fused ``prefill_with_cache`` pass (prefill tok/s is
 reported alongside decode tok/s); enc-dec archs go through the public
 ``models.encode``.
@@ -75,6 +80,27 @@ def main(argv=None):
                          "health/quarantine pass only, or a fault spec "
                          "('poison_request@3') to poison request rid 3's "
                          "cache rows deterministically")
+    # paged KV cache (continuous batching only)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve from a paged KV block pool (prefix "
+                         "sharing + host-RAM offload) instead of the "
+                         "dense per-slot cache")
+    ap.add_argument("--kv-block-size", type=int, default=16,
+                    help="tokens per KV block (--paged)")
+    ap.add_argument("--kv-pool-blocks", type=int, default=None,
+                    help="total pool blocks shared by all slots (--paged; "
+                         "default: slots x cache blocks, the dense "
+                         "equivalent)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="share full prompt-prefix blocks across requests "
+                         "(--paged; default on)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false")
+    ap.add_argument("--sleep-level", type=int, default=1, choices=[1, 2],
+                    help="preemption mode under pool pressure (--paged): "
+                         "1 = offload blocks to host RAM and restore "
+                         "bitwise on wake, 2 = discard and re-prefill")
     args = ap.parse_args(argv)
 
     from repro.engine import RunSpec
@@ -85,10 +111,19 @@ def main(argv=None):
     spec = spec.auto_host_devices()     # CPU container: default to mesh size
     spec.ensure_host_devices()          # before anything imports jax state
 
+    if args.paged and not args.max_slots:
+        print("--paged requires --max-slots (continuous batching)",
+              file=sys.stderr)
+        return 2
+
     from repro.engine import ServeEngine
     engine = ServeEngine(spec, batch=args.batch, prompt_len=args.prompt_len,
                          gen=args.gen, temperature=args.temperature,
-                         resilience=args.resilience)
+                         resilience=args.resilience, paged=args.paged,
+                         kv_block_size=args.kv_block_size,
+                         kv_pool_blocks=args.kv_pool_blocks,
+                         prefix_cache=args.prefix_cache,
+                         sleep_level=args.sleep_level)
 
     if args.max_slots:
         res = engine.serve(max_slots=args.max_slots,
@@ -105,6 +140,14 @@ def main(argv=None):
         print(f"  admitted mid-decode: {m['admitted_mid_decode']} / "
               f"{m['n_requests']}")
         print(f"  status counts: {m['status_counts']}")
+        if "paging" in m:
+            pg = m["paging"]
+            print(f"  paging: {pg['blocks_in_use_peak']}/"
+                  f"{pg['pool_blocks']} blocks peak, prefix hit rate "
+                  f"{pg['prefix_hit_rate']}, "
+                  f"{pg['marginal_prefill_tokens']}/"
+                  f"{pg['prefill_tokens_requested']} prefill tokens "
+                  f"computed, {pg['preemptions']} preemptions")
         return 0
 
     result = engine.generate()

@@ -43,12 +43,25 @@ def _mask_for(block, Sk, q_pos, kv_pos, causal, window):
 
 
 def _flash_fwd_scan(q, k, v, *, causal, window, q_offset, block, sk_valid=None):
-    """Returns (out [B,Sq,KV,G,dv], lse [B,Sq,G,KV])."""
+    """Returns (out [B,Sq,KV,G,dv], lse [B,Sq,G,KV]).
+
+    ``q_offset`` / ``sk_valid`` may be [B] int32 arrays (per-row ragged
+    offsets/lengths — the paged-prefill path, which calls this scan directly
+    since custom_vjp nondiff args must be static); scalars broadcast as
+    before and stay bit-identical to the original code path."""
     B, Sq, KV, G, dh = q.shape
-    Sk = k.shape[1] if sk_valid is None else sk_valid
     dv = v.shape[-1]
     scale = 1.0 / math.sqrt(dh)
-    q_pos = (jnp.arange(Sq) + q_offset)[None, :, None]           # [1,Sq,1]
+    if getattr(q_offset, "ndim", 0):
+        q_pos = q_offset[:, None, None] + jnp.arange(Sq)[None, :, None]
+    else:
+        q_pos = (jnp.arange(Sq) + q_offset)[None, :, None]       # [1,Sq,1]
+    if sk_valid is None:
+        Sk = k.shape[1]
+    elif getattr(sk_valid, "ndim", 0):
+        Sk = sk_valid[:, None, None]                             # [B,1,1]
+    else:
+        Sk = sk_valid
 
     nblk = k.shape[1] // block
     kb = jnp.moveaxis(k.reshape(B, nblk, block, KV, dh), 1, 0)
@@ -366,6 +379,151 @@ def gqa_cache_init(cfg, batch: int, cache_len: int, dtype):
     return {"k": jnp.zeros((batch, T, KV, hd), dtype),
             "v": jnp.zeros((batch, T, KV, hd), dtype),
             "len": jnp.zeros((batch,), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# Paged GQA: the KV cache is a pool of fixed-size blocks shared by all rows,
+# k/v [NB+1, bs, KV, hd] (block NB is the write-off "trash" block), plus a
+# per-row block table [B, nb] owned by the engine. Logical cache position p of
+# row b lives at pool slot (table[b, p // bs], p % bs). Masked/out-of-range
+# writes are redirected to the trash block, and every read path zeroes V
+# outside validity (pool blocks may hold garbage, even NaN, from freed or
+# quarantined rows — 0 * NaN would leak through the exactly-zero masked
+# probabilities). Valid lanes are untouched, which is what keeps the paged
+# path bitwise-identical to the dense cache.
+# ---------------------------------------------------------------------------
+
+def paged_gqa_cache_init(cfg, batch: int, num_blocks: int, block_size: int,
+                         dtype):
+    """One layer's slice of the paged pool (stacked per layer by the model)."""
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    # PAGED_POISON=1 initialises the pool (trash block included) with NaN
+    # instead of zeros: any read of a never-written lane that escapes the
+    # masks then surfaces as NaN logits instead of silently reading zeros —
+    # the debug switch that turns "rare flaky token mismatch" into a
+    # deterministic failure (tests/test_paged_cache.py uses it as a canary)
+    import os
+    fill = float("nan") if os.environ.get("PAGED_POISON") else 0.0
+    return {"k": jnp.full((num_blocks + 1, block_size, KV, hd), fill, dtype),
+            "v": jnp.full((num_blocks + 1, block_size, KV, hd), fill, dtype),
+            "len": jnp.zeros((batch,), jnp.int32)}
+
+
+def _paged_gather(pool, table):
+    """[NB+1, bs, KV, hd] gathered to the row-major logical layout
+    [B, nb*bs, KV, hd] through the [B, nb] block table."""
+    B, nb = table.shape
+    bs = pool.shape[1]
+    g = pool[table]                                  # [B, nb, bs, KV, hd]
+    return g.reshape(B, nb * bs, g.shape[-2], g.shape[-1])
+
+
+def paged_prefill_attention_ref(q, k_cache, v_cache, q_start, kv_len, *,
+                                block: int = 512):
+    """jnp reference for the ragged-tail paged prefill: q [B,Sq,H,dh] holds
+    new tokens at per-row absolute offsets ``q_start``; k/v_cache [B,T,KV,*]
+    is the gathered logical cache (garbage beyond ``kv_len``)."""
+    B, Sq, H, dh = q.shape
+    Sk, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    block = min(block, Sk)
+    nblk = -(-Sk // block)
+    pad = nblk * block - Sk
+    vmask = (jnp.arange(Sk)[None, :] < kv_len[:, None])[:, :, None, None]
+    v_cache = jnp.where(vmask, v_cache, 0)
+    if pad:
+        k_cache = jnp.pad(k_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v_cache = jnp.pad(v_cache, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qr = q.reshape(B, Sq, KV, G, dh)
+    out, _ = _flash_fwd_scan(qr, k_cache, v_cache, causal=True, window=0,
+                             q_offset=q_start.astype(jnp.int32), block=block,
+                             sk_valid=kv_len.astype(jnp.int32))
+    return out.reshape(B, Sq, H, v_cache.shape[-1]).astype(q.dtype)
+
+
+def gqa_prefill_paged(p, cfg, x, cache, table, lengths, hist):
+    """Paged ragged prefill: scatter the new tail (absolute positions
+    ``hist[b]..lengths[b]`` of each row) into the block pool through the
+    table, then attend the tail queries over the row's full logical range —
+    positions below ``hist`` are served by already-filled (possibly shared)
+    blocks, which is how a prefix-cache hit skips recomputing the prefix.
+    Rows with ``hist == lengths`` write nothing (their tail is empty).
+    Returns (out [B,S,d], new layer cache)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x)
+    pos = hist[:, None] + jnp.arange(S)[None, :]                 # [B,S]
+    q = apply_rope(q, pos, cfg.rope_theta, cfg.partial_rotary_factor,
+                   interleaved=cfg.rope_2d)
+    k = apply_rope(k, pos, cfg.rope_theta, cfg.partial_rotary_factor,
+                   interleaved=cfg.rope_2d)
+    nb = table.shape[1]
+    bs = cache["k"].shape[1]
+    trash = cache["k"].shape[0] - 1
+    valid = jnp.arange(S)[None, :] < (lengths - hist)[:, None]
+    lb = jnp.clip(pos // bs, 0, nb - 1)
+    phys = jnp.take_along_axis(table, lb, axis=1)                # [B,S]
+    # invalid lanes (and lanes whose table entry is unallocated) are DROPPED
+    # via an out-of-bounds index — never scattered into the trash block,
+    # which stays all-zero so nothing nondeterministic can ever be read back
+    phys = jnp.where(valid & (phys != trash), phys, trash + 1)
+    off = pos % bs
+    k_pool = cache["k"].at[phys, off].set(k.astype(cache["k"].dtype),
+                                          mode="drop")
+    v_pool = cache["v"].at[phys, off].set(v.astype(cache["v"].dtype),
+                                          mode="drop")
+    new_len = lengths.astype(jnp.int32)
+    if registry.backend_for(cfg, "paged_attn") == "pallas":
+        from repro.kernels import ops
+        ctx = ops.paged_prefill_attention(q, k_pool, v_pool, table,
+                                          hist.astype(jnp.int32), new_len,
+                                          interpret=ops.default_interpret())
+    else:
+        gk = _paged_gather(k_pool, table)
+        gv = _paged_gather(v_pool, table)
+        ctx = paged_prefill_attention_ref(q, gk, gv, hist, new_len)
+    new_cache = {"k": k_pool, "v": v_pool, "len": new_len}
+    return ctx.reshape(B, S, -1) @ p["wo"], new_cache
+
+
+def gqa_decode_paged(p, cfg, x, cache, table):
+    """One-token paged decode: scatter the new K/V at pool slot
+    (table[b, len // bs], len % bs), attend over the row's logical range.
+    Always ragged (per-row ``len``); sliding windows are unsupported — the
+    engine gates paged mode to non-windowed GQA archs."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, cfg, x)
+    pos = cache["len"][:, None]                                  # [B,1]
+    q = apply_rope(q, pos, cfg.rope_theta, cfg.partial_rotary_factor,
+                   interleaved=cfg.rope_2d)
+    k = apply_rope(k, pos, cfg.rope_theta, cfg.partial_rotary_factor,
+                   interleaved=cfg.rope_2d)
+    nb = table.shape[1]
+    bs = cache["k"].shape[1]
+    trash = cache["k"].shape[0] - 1
+    lb = jnp.clip(cache["len"] // bs, 0, nb - 1)
+    phys = jnp.take_along_axis(table, lb[:, None], axis=1)[:, 0]  # [B]
+    # rows without an allocated block here (freed slots that keep stepping)
+    # drop their write out of bounds — the trash block stays all-zero
+    phys = jnp.where(phys == trash, trash + 1, phys)
+    off = cache["len"] % bs
+    k_pool = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype),
+                                          mode="drop")
+    v_pool = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype),
+                                          mode="drop")
+    new_len = cache["len"] + 1
+    if registry.backend_for(cfg, "paged_attn") == "pallas":
+        from repro.kernels import ops
+        out = ops.paged_decode_attention(q, k_pool, v_pool, table, new_len,
+                                         interpret=ops.default_interpret())
+    else:
+        gk = _paged_gather(k_pool, table)
+        gv = _paged_gather(v_pool, table)
+        T = gv.shape[1]
+        vmask = (jnp.arange(T)[None, :] < new_len[:, None])[:, :, None, None]
+        gv = jnp.where(vmask, gv, 0)
+        out = decode_attention(q, gk, gv, new_len, window=0, backend="jnp")
+    new_cache = {"k": k_pool, "v": v_pool, "len": new_len}
+    return out.reshape(B, 1, -1) @ p["wo"], new_cache
 
 
 # ---------------------------------------------------------------------------

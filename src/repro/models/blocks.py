@@ -90,9 +90,12 @@ def decoder_layer_apply(p, cfg, x, positions, *, use_moe: bool, causal=True,
 
 
 def decoder_layer_decode(p, cfg, x, cache, *, use_moe: bool,
-                         ragged: bool = False):
+                         ragged: bool = False, paged_table=None):
     h = apply_norm(cfg.norm, p["ln1"], x)
-    if cfg.attn_kind == "mla":
+    if paged_table is not None:
+        # paged KV cache: per-row block table, GQA only (model.py gates)
+        a, cache = attn.gqa_decode_paged(p["attn"], cfg, h, cache, paged_table)
+    elif cfg.attn_kind == "mla":
         a, cache = attn.mla_decode(p["attn"], cfg, h, cache, ragged=ragged)
     else:
         a, cache = attn.gqa_decode(p["attn"], cfg, h, cache, ragged=ragged)
@@ -109,13 +112,19 @@ def decoder_layer_decode(p, cfg, x, cache, *, use_moe: bool,
 
 
 def decoder_layer_prefill(p, cfg, x, positions, cache, *, use_moe: bool,
-                          lengths=None):
+                          lengths=None, paged=None):
     """Fused full-sequence prefill of one decoder layer: the training-shaped
     forward (blockwise/flash attention, dropless MoE) that also fills the
     decode cache. ``lengths`` ([B] int32) threads ragged per-row prompt
-    lengths into the cache fill. Returns (x, new_cache)."""
+    lengths into the cache fill. ``paged`` = (table [B,nb], hist [B]) routes
+    the paged ragged-tail prefill instead (GQA only; positions are derived
+    from ``hist`` inside). Returns (x, new_cache)."""
     h = apply_norm(cfg.norm, p["ln1"], x)
-    if cfg.attn_kind == "mla":
+    if paged is not None:
+        table, hist = paged
+        a, cache = attn.gqa_prefill_paged(p["attn"], cfg, h, cache, table,
+                                          lengths, hist)
+    elif cfg.attn_kind == "mla":
         a, cache = attn.mla_prefill(p["attn"], cfg, h, positions, cache,
                                     lengths=lengths)
     else:
@@ -137,6 +146,14 @@ def decoder_layer_cache_init(cfg, batch, cache_len, dtype):
     if cfg.attn_kind == "mla":
         return attn.mla_cache_init(cfg, batch, cache_len, dtype)
     return attn.gqa_cache_init(cfg, batch, cache_len, dtype)
+
+
+def decoder_layer_paged_cache_init(cfg, batch, num_blocks, block_size, dtype):
+    if cfg.attn_kind == "mla":
+        raise NotImplementedError(
+            "paged KV cache supports GQA attention only (MLA latent caches "
+            "stay on the dense merge_caches path)")
+    return attn.paged_gqa_cache_init(cfg, batch, num_blocks, block_size, dtype)
 
 
 # ---------------------------------------------------------------------------

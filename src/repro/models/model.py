@@ -429,6 +429,53 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int) -> PyTree:
     raise ValueError(fam)
 
 
+def paged_unsupported_reason(cfg: ModelConfig) -> Optional[str]:
+    """None if the paged KV cache supports this config, else why not (the
+    engine falls back to — or fails fast toward — the dense merge_caches
+    path with this reason)."""
+    if cfg.family not in (FAMILY_DENSE, FAMILY_MOE):
+        return (f"family {cfg.family!r} (paged cache supports dense/moe "
+                f"decoder stacks)")
+    if cfg.attn_kind == "mla":
+        return "MLA latent caches (paged cache supports GQA attention only)"
+    if cfg.attn_window:
+        return (f"attn_window={cfg.attn_window} (paged cache is linear; "
+                f"ring-buffer windows stay dense)")
+    return None
+
+
+def init_paged_cache(cfg: ModelConfig, batch: int, num_blocks: int,
+                     block_size: int, cache_len: int) -> PyTree:
+    """Paged decode cache: per layer-group block pools (k/v
+    [L, num_blocks+1, bs, KV, hd] — one physical block id spans all layers;
+    the extra last block is the write-off "trash" block) plus a top-level
+    ``table`` [B, nb_max] int32 owned by the engine's allocator. Unallocated
+    table entries point at the trash block. ``cache_len`` (a multiple of
+    ``block_size``) bounds the logical range: nb_max = cache_len // bs."""
+    reason = paged_unsupported_reason(cfg)
+    if reason is not None:
+        raise NotImplementedError(f"paged KV cache: unsupported — {reason}")
+    if cache_len % block_size:
+        raise ValueError(f"cache_len {cache_len} must be a multiple of "
+                         f"kv block size {block_size}")
+    dt = dtype_of(cfg)
+    nb_max = cache_len // block_size
+    n_dense, n_moe = _moe_split(cfg)
+    one = lambda: B.decoder_layer_paged_cache_init(cfg, batch, num_blocks,
+                                                   block_size, dt)
+    cache: Dict[str, Any] = {
+        "table": jnp.full((batch, nb_max), num_blocks, jnp.int32)}
+    if n_dense:
+        cache["dense"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_dense,) + x.shape).copy(), one())
+    if n_moe:
+        cache["moe"] = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_moe,) + x.shape).copy(), one())
+    if cfg.mtp:
+        cache["mtp"] = B.decoder_layer_cache_init(cfg, batch, cache_len, dt)
+    return cache
+
+
 def decode_step(cfg: ModelConfig, params: PyTree, batch: Dict[str, Any],
                 cache: PyTree, *, ragged: bool = False):
     """batch: {"token": [B] int32}. Returns (logits [B,V], new_cache).
@@ -442,22 +489,29 @@ def decode_step(cfg: ModelConfig, params: PyTree, batch: Dict[str, Any],
     x = _embed(cfg, params, batch["token"][:, None])     # [B,1,d]
     blk = params["blocks"]
     new_cache: Dict[str, Any] = {}
+    # paged cache pytrees carry the engine-owned block table at the top level
+    # (a host-side trace-time check — no new static argument)
+    table = cache.get("table") if isinstance(cache, dict) else None
 
     if fam in (FAMILY_DENSE, FAMILY_MOE, FAMILY_VLM):
         if "dense" in blk:
             fn = lambda lp, h, c: B.decoder_layer_decode(lp, cfg, h, c,
                                                          use_moe=False,
-                                                         ragged=ragged)
+                                                         ragged=ragged,
+                                                         paged_table=table)
             x, nc = _decode_scan(fn, blk["dense"], cache["dense"], x)
             new_cache["dense"] = nc
         if "moe" in blk:
             fn = lambda lp, h, c: B.decoder_layer_decode(lp, cfg, h, c,
                                                          use_moe=True,
-                                                         ragged=ragged)
+                                                         ragged=ragged,
+                                                         paged_table=table)
             x, nc = _decode_scan(fn, blk["moe"], cache["moe"], x)
             new_cache["moe"] = nc
         if cfg.mtp:
             new_cache["mtp"] = cache["mtp"]
+        if table is not None:
+            new_cache["table"] = table
     elif fam == FAMILY_ENCDEC:
         memory = cache["memory"]
         fn = lambda lp, h, c: B.xdec_layer_decode(lp, cfg, h, c, memory,
@@ -551,6 +605,7 @@ def prefill_with_cache(cfg: ModelConfig, params: PyTree,
         blk = params["blocks"]
         new_cache: Dict[str, Any] = {}
         eff_lengths = lengths
+        tail_lengths = None     # paged: x holds only the ragged tail
 
         if fam == FAMILY_VLM:
             pr = params["projector"]
@@ -562,20 +617,42 @@ def prefill_with_cache(cfg: ModelConfig, params: PyTree,
                 eff_lengths = lengths + pe.shape[1]
 
         if fam in (FAMILY_DENSE, FAMILY_MOE, FAMILY_VLM):
+            # paged cache: ragged-tail prefill through the block table.
+            # batch["hist"] [B] (default zeros) = tokens already in the
+            # cache (a prefix-cache hit); only positions hist..lengths are
+            # computed and written.
+            table = cache.get("table") if isinstance(cache, dict) else None
+            paged = None
+            if table is not None:
+                if lengths is None:
+                    raise NotImplementedError(
+                        "paged prefill requires batch['lengths'] (the paged "
+                        "cache is always ragged)")
+                hist = batch.get("hist")
+                if hist is None:
+                    hist = jnp.zeros_like(eff_lengths)
+                paged = (table, hist.astype(jnp.int32))
+                # row b's hidden states cover absolute positions
+                # hist[b]..lengths[b]; its last valid logit sits at tail
+                # index (lengths - hist) - 1 (the allocator caps hist at
+                # lengths - 1, so admitted rows always have a tail)
+                tail_lengths = eff_lengths - hist
             if "dense" in blk:
                 fn = lambda lp, h, c: B.decoder_layer_prefill(
                     lp, cfg, h, positions, c, use_moe=False,
-                    lengths=eff_lengths)
+                    lengths=eff_lengths, paged=paged)
                 x, nc = _decode_scan(fn, blk["dense"], cache["dense"], x)
                 new_cache["dense"] = nc
             if "moe" in blk:
                 fn = lambda lp, h, c: B.decoder_layer_prefill(
                     lp, cfg, h, positions, c, use_moe=True,
-                    lengths=eff_lengths)
+                    lengths=eff_lengths, paged=paged)
                 x, nc = _decode_scan(fn, blk["moe"], cache["moe"], x)
                 new_cache["moe"] = nc
             if cfg.mtp:
                 new_cache["mtp"] = cache["mtp"]
+            if table is not None:
+                new_cache["table"] = table
         elif fam == FAMILY_ENCDEC:
             memory = _run_encoder(cfg, params, batch["frames"])
             fn = lambda lp, h, c: B.xdec_layer_prefill(lp, cfg, h, positions,
@@ -623,7 +700,8 @@ def prefill_with_cache(cfg: ModelConfig, params: PyTree,
 
         if eff_lengths is not None:
             # per-row last VALID position (ragged prompts, left-aligned)
-            idx = jnp.clip(eff_lengths - 1, 0, x.shape[1] - 1)
+            gl = eff_lengths if tail_lengths is None else tail_lengths
+            idx = jnp.clip(gl - 1, 0, x.shape[1] - 1)
             x_last = jnp.take_along_axis(x, idx[:, None, None], axis=1)
             return _head(cfg, params, x_last)[:, 0], new_cache
         return _head(cfg, params, x[:, -1:])[:, 0], new_cache
