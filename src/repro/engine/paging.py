@@ -103,6 +103,11 @@ class BlockPool:
         self.registered: Dict[int, int] = {}      # block -> chained hash
         self.by_hash: Dict[int, int] = {}         # chained hash -> block
         self.lru: Dict[int, int] = {}             # reclaimable cached blocks
+        # registered blocks whose content-producing prefill has NOT run yet
+        # (a shared-tail admission registers at allocation; the engine calls
+        # mark_written() once the round's prefills execute). They must not
+        # be prefix-matched or used as a CoW source until then.
+        self.pending: set = set()
         self._tick = 0
         # stats
         self.in_use_peak = 0
@@ -134,6 +139,7 @@ class BlockPool:
         if h is not None and self.by_hash.get(h) == b:
             del self.by_hash[h]
         self.lru.pop(b, None)
+        self.pending.discard(b)
 
     def _alloc_raw(self) -> int:
         if self.free:
@@ -184,8 +190,14 @@ class BlockPool:
         caller must device-copy src -> dst before prefilling into it). Full
         blocks this request prefills are registered for future sharing at
         ALLOCATION time, so two identical prompts in one admission batch
-        share within the batch. Raises PoolExhausted with no state
-        change."""
+        share within the batch — but a block registered by a SHARED-tail
+        admission is ``pending`` (its prefill runs after the round's fresh
+        prefills and after CoW copies) and is not matchable until the
+        engine calls :meth:`mark_written`; matching stops at the first
+        pending block so nothing reads or CoW-copies unwritten content.
+        Raises PoolExhausted with no state change (blocks this admission
+        registered are deregistered again — their content was never
+        written, so a retry must not see them as prefix hits)."""
         if slot in self.slot_blocks:
             raise RuntimeError(f"slot {slot} already holds blocks")
         plen = len(prompt)
@@ -194,7 +206,7 @@ class BlockPool:
         matched: List[int] = []
         for h in hashes:
             b = self.by_hash.get(h)
-            if b is None:
+            if b is None or b in self.pending:
                 break
             matched.append(b)
         full = bool(matched) and len(matched) * bs >= plen
@@ -204,6 +216,7 @@ class BlockPool:
 
         n_total = -(-plen // bs)
         cow = None
+        newly_registered: List[int] = []
         try:
             for b in matched:
                 self._take(slot, b)
@@ -217,13 +230,21 @@ class BlockPool:
                     h = hashes[j]
                     self.registered[b] = h
                     self.by_hash[h] = b
+                    newly_registered.append(b)
             if full:
                 # the tail re-computation will WRITE position plen - 1,
                 # which lives inside a shared block — un-share it now
                 _, cow = self.prepare_write(slot, plen - 1)
         except PoolExhausted:
+            for b in newly_registered:
+                self._deregister(b)
             self.release_slot(slot)   # roll back; the engine may preempt
             raise
+        if hist > 0:
+            # a prefix hit means the engine prefills only the TAIL (the
+            # "shared" plan, which runs after fresh prefills and CoW) —
+            # until that prefill executes these blocks hold no content
+            self.pending.update(newly_registered)
         self._bump_peak()
         return hist, cow
 
@@ -281,6 +302,12 @@ class BlockPool:
 
     def unpin(self, b: int):
         self._drop(-1, b)
+
+    def mark_written(self):
+        """The engine finished an admission round: every planned prefill
+        (fresh and shared-tail) has executed, so blocks registered this
+        round now hold real content and become prefix-matchable."""
+        self.pending.clear()
 
     def audit(self):
         """Allocator invariants; raises AssertionError on violation."""
@@ -411,20 +438,20 @@ def paged_row_health(cache: PyTree):
     return ok
 
 
-def paged_poison_rows(cache: PyTree, rows):
-    """NaN-fill every allocated block of the masked rows (the paged twin of
-    resilience.poison_rows_fn). Writes go through the table with
-    out-of-bounds drop for unallocated entries, so the trash block — which
-    freed rows still read — never receives NaN."""
+def paged_poison_rows(cache: PyTree, idx):
+    """NaN-fill the physical pool blocks named by ``idx`` [B, nb] int32
+    (the paged twin of resilience.poison_rows_fn; out-of-range entries
+    drop). The engine passes only blocks EXCLUSIVELY owned by the poisoned
+    rows — shared or registered blocks are copy-on-write swapped for
+    private copies and dropped from the prefix registry first — so a
+    poison_request fault can never corrupt a co-resident row sharing the
+    prefix, and no NaN block ever lingers in ``by_hash``/``lru`` to serve
+    a future prefix hit."""
     import jax.numpy as jnp
-    table = cache["table"]
     out = dict(cache)
     for g in _groups(cache):
         leaf = dict(cache[g])
         pool_k = leaf["k"]
-        trash = pool_k.shape[1] - 1
-        oob = pool_k.shape[1]
-        idx = jnp.where(rows[:, None] & (table != trash), table, oob)
         nan_blk = jnp.full((pool_k.shape[0],) + idx.shape + pool_k.shape[2:],
                            jnp.nan, pool_k.dtype)
         for kv in ("k", "v"):

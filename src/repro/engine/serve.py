@@ -678,17 +678,20 @@ class ServeEngine:
                      keys)
         preemptions = offloads = wakes = 0
 
-        def release_slot_resources(slot):
+        def release_slot_resources(slot, upload=True):
             """THE terminal choke point: every path that frees a slot —
             completion, deadline eviction, quarantine, truncation,
             preemption — funnels through here, so the paged pool can never
             leak blocks from an exit path. Dense mode has no per-slot
-            resources beyond the scheduler's own bookkeeping."""
+            resources beyond the scheduler's own bookkeeping.
+            ``upload=False`` defers the host->device table refresh so a
+            loop releasing several slots can upload once afterwards."""
             if paged:
                 pool.release_slot(slot)
                 st["table"][slot] = trash
                 row_len[slot] = 0
-                cache["table"] = jnp.asarray(st["table"].copy())
+                if upload:
+                    cache["table"] = jnp.asarray(st["table"].copy())
 
         def refresh_row(slot):
             blocks = pool.slot_blocks.get(slot, [])
@@ -979,10 +982,37 @@ class ServeEngine:
                         do_cow(cow_pairs)
                         for b in cow_pins:
                             pool.unpin(b)
+                    # every planned prefill has executed: blocks registered
+                    # by this round's shared-tail admissions now hold real
+                    # content and become prefix-matchable again
+                    pool.mark_written()
                     if poison_slots:
-                        pz = np.zeros((B,), bool)
-                        pz[poison_slots] = True
-                        cache = fns["poison"](cache, jnp.asarray(pz))
+                        # quarantine isolation: give each poisoned row a
+                        # PRIVATE copy of every block it shares (or has
+                        # registered for future sharing) before the NaN
+                        # fill — the whole block is NaN'd anyway, so the
+                        # CoW needs no device copy — and fill only blocks
+                        # the row exclusively owns. Co-resident rows and
+                        # the prefix registry never see the poison. If the
+                        # pool cannot supply a private copy, the shared
+                        # block is left intact (un-poisoned) rather than
+                        # corrupting its other readers.
+                        idx = np.full((B, nb_max), trash + 1, np.int32)
+                        for slot in poison_slots:
+                            nblk = len(pool.slot_blocks.get(slot, []))
+                            for lb in range(nblk):
+                                try:
+                                    pool.prepare_write(slot, lb * bs)
+                                except paging.PoolExhausted:
+                                    break
+                            for lb, b in enumerate(
+                                    pool.slot_blocks.get(slot, [])):
+                                if pool.ref[b] == 1 and \
+                                        b not in pool.registered:
+                                    idx[slot, lb] = b
+                            refresh_row(slot)
+                        cache["table"] = jnp.asarray(st["table"].copy())
+                        cache = fns["poison"](cache, jnp.asarray(idx))
                     if guard:
                         quarantine(time.perf_counter())
             else:
@@ -1070,8 +1100,11 @@ class ServeEngine:
             if eos_id is not None:
                 th = np.asarray(tok)     # documented per-step host sync
                 eos_hit = [bool(th[s] == eos_id) for s in range(B)]
-            for s in sched.log_emissions(t, time.perf_counter(), eos_hit):
-                release_slot_resources(s)    # completion frees the blocks
+            done_now = sched.log_emissions(t, time.perf_counter(), eos_hit)
+            for s in done_now:               # completion frees the blocks;
+                release_slot_resources(s, upload=False)
+            if paged and done_now:           # ONE table upload per step,
+                cache["table"] = jnp.asarray(st["table"].copy())
             # -- one ragged decode step for the whole slot batch -------------
             # (only when a live row still needs it: a freshly admitted
             # request's first token comes from admit(), not step)

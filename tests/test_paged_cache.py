@@ -92,6 +92,42 @@ def test_blockpool_exhaustion_rolls_back_and_reclaims_lru():
     pool.audit()
 
 
+def test_blockpool_exhaustion_rollback_deregisters_unwritten():
+    """A rolled-back admission must not leave its never-prefilled blocks
+    registered: a retry (the engine's normal exhaustion path) would get
+    prefix hits on blocks whose content was never written and decode over
+    zero/garbage KV."""
+    pool = BlockPool(3, 4)
+    p = np.arange(16, dtype=np.int32)              # needs 4 blocks > pool
+    with pytest.raises(PoolExhausted):
+        pool.admit(0, p)
+    assert not pool.registered and not pool.by_hash and not pool.lru
+    h, cow = pool.admit(1, p[:12])                 # same leading blocks fit
+    assert h == 0 and cow is None, \
+        "phantom prefix hit on blocks that were never prefilled"
+    pool.audit()
+
+
+def test_blockpool_pending_tail_not_matchable_until_written():
+    """A block registered by a shared-tail admission holds no content until
+    the engine's round executes its prefill: matching it — or using it as a
+    CoW source — before mark_written() would read unwritten KV."""
+    pool = BlockPool(16, 4)
+    base = np.arange(8, dtype=np.int32)
+    p = np.concatenate([base, np.array([50, 51, 52, 53], np.int32)])
+    pool.admit(0, base)                    # fresh plan: matchable at once
+    pool.mark_written()
+    h1, c1 = pool.admit(1, p)              # partial hit -> tail is PENDING
+    assert h1 == 8 and c1 is None
+    h2, c2 = pool.admit(2, p)              # same round, identical prompt
+    assert h2 == 8 and c2 is None, \
+        "matched a tail block whose prefill has not run yet"
+    pool.mark_written()
+    h3, c3 = pool.admit(3, p)              # next round: fully matchable
+    assert h3 == 11 and c3 is not None
+    pool.audit()
+
+
 def test_blockpool_audit_catches_aliased_writable_block():
     pool = BlockPool(4, 4, prefix_cache=False)
     rng = np.random.default_rng(2)
@@ -231,6 +267,67 @@ def test_identical_prompts_in_one_batch_share_and_match(paged_engine):
     assert res["metrics"]["paging"]["cow_copies"] >= 2
     toks = _tokens(res)
     assert toks[0] == toks[1] == toks[2]
+
+
+def test_same_round_shared_tail_cow_parity():
+    """Request A extends a cached prefix with a prompt ending on a block
+    boundary (its tail block is registered at allocation time); request B
+    carries the identical prompt in the SAME admission round. B must not
+    CoW-copy or read A's tail block before A's shared-tail prefill writes
+    it — both streams must match an unshared solo serve bitwise."""
+    eng = ServeEngine(SPEC, prompt_len=24, gen=6, paged=True,
+                      kv_block_size=4, kv_pool_blocks=48, verbose=False)
+    rng = np.random.default_rng(31)
+    base = _prompt(rng, 16)
+    ext = np.concatenate([base, _prompt(rng, 8)])   # 24 tokens, % 4 == 0
+    eng.serve([Request(rid=0, prompt=base, max_gen=4)], max_slots=2)
+    res = eng.serve([Request(rid=1, prompt=ext.copy(), max_gen=6),
+                     Request(rid=2, prompt=ext.copy(), max_gen=6)],
+                    max_slots=2)
+    assert res["metrics"]["paging"]["prefix_hit_rate"] > 0
+    solo_eng = ServeEngine(SPEC, prompt_len=24, gen=6, paged=True,
+                           kv_block_size=4, prefix_cache=False,
+                           verbose=False)
+    solo = solo_eng.serve([Request(rid=9, prompt=ext.copy(), max_gen=6)],
+                          max_slots=1)
+    toks = _tokens(res)
+    assert toks[1] == toks[2] == _tokens(solo)[9], \
+        "same-round shared-tail admission read/copied unwritten blocks"
+    pool = eng._paged_state["pool"]
+    assert pool.blocks_in_use() == 0 and not pool.pending
+    pool.audit()
+
+
+def test_poison_quarantine_spares_shared_prefix_and_registry():
+    """A poison_request fault on one request of a shared-prefix trio must
+    quarantine ONLY that request: co-residents sharing its prefix blocks
+    finish bitwise intact, and the prefix registry never serves a NaN block
+    to a later request."""
+    eng = ServeEngine(SPEC, prompt_len=16, gen=8, paged=True,
+                      kv_block_size=4, resilience="poison_request@1",
+                      verbose=False)
+    rng = np.random.default_rng(41)
+    p = _prompt(rng, 16)
+    res = eng.serve([Request(rid=i, prompt=p.copy(), max_gen=8)
+                     for i in range(3)], max_slots=3)
+    statuses = {r.rid: r.status for r in res["requests"]}
+    assert statuses == {0: "ok", 1: "failed", 2: "ok"}, statuses
+    clean = ServeEngine(SPEC, prompt_len=16, gen=8, paged=True,
+                        kv_block_size=4, prefix_cache=False, verbose=False)
+    ref = clean.serve([Request(rid=0, prompt=p.copy(), max_gen=8)],
+                      max_slots=3)
+    assert _tokens(res)[0] == _tokens(res)[2] == _tokens(ref)[0], \
+        "poisoned row leaked NaN into co-residents sharing its prefix"
+    # warm re-serve: the registry must hit the (un-poisoned) prefix blocks
+    res2 = eng.serve([Request(rid=10, prompt=p.copy(), max_gen=8)],
+                     max_slots=3)
+    assert {r.status for r in res2["requests"]} == {"ok"}
+    assert res2["metrics"]["paging"]["prefix_hit_rate"] > 0.9
+    assert _tokens(res2)[10] == _tokens(ref)[0], \
+        "prefix registry served a block poisoned by the quarantined row"
+    pool = eng._paged_state["pool"]
+    assert pool.blocks_in_use() == 0
+    pool.audit()
 
 
 @pytest.mark.parametrize("level", [1, 2])
