@@ -1,0 +1,91 @@
+"""RL rollout loop benchmark: phase timings, generation throughput, and
+the reward curve for ``RolloutEngine`` (generate -> score -> train -> push
+on one device).
+
+What the artifact captures per plan (``dp`` always; ``zero_cdp`` when the
+process has >= 2 devices):
+
+  * ``phase_s`` — mean seconds per phase over the WARM iterations (the
+    first iteration compiles everything and is reported separately as
+    ``compile_iter_s``); the generate/train split is the time-sharing
+    story, the push entry is the device-side weight hand-off;
+  * ``gen_tok_s`` — sampled tokens per second through the paged serve
+    engine during the generate phase (warm mean);
+  * ``reward_curve`` — mean group reward per iteration on the steerable
+    synthetic task. The curve RISING is the subsystem's correctness
+    signal and ``validate_artifacts`` gates on it, so a perf refactor
+    that silently breaks the policy-gradient step fails the benchmark
+    smoke, not just the test suite.
+
+Writes ``benchmarks/artifacts/rollout_bench.json`` and yields rows in the
+``name,us_per_call,derived`` CSV convention of ``benchmarks/run.py``.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+from benchmarks._util import ARTIFACTS, SMOKE
+
+ARCH = "stablelm-1.6b"
+ITERS = 3 if SMOKE else 5
+GROUPS, GROUP_SIZE = (2, 4) if SMOKE else (4, 4)
+PROMPT_LEN, GEN = (8, 8) if SMOKE else (8, 16)
+
+
+def _one_plan(plan: str, mesh_data: int):
+    from repro.engine import RolloutEngine, RunSpec
+
+    spec = RunSpec(arch=ARCH, reduced=True, plan=plan,
+                   mesh_data=mesh_data, mesh_model=1)
+    eng = RolloutEngine(spec, plan=plan, groups=GROUPS,
+                        group_size=GROUP_SIZE, prompt_len=PROMPT_LEN,
+                        gen=GEN, iters=ITERS, verbose=False)
+    hist = eng.run()
+    warm = hist[1:] if len(hist) > 1 else hist
+    phases = ("generate", "score", "train", "push")
+    phase_s = {p: sum(h["phase_s"][p] for h in warm) / len(warm)
+               for p in phases}
+    return {
+        "arch": ARCH,
+        "plan": plan,
+        "reduced": True,
+        "iters": len(hist),
+        "groups": GROUPS,
+        "group_size": GROUP_SIZE,
+        "prompt_len": PROMPT_LEN,
+        "gen": GEN,
+        "gen_tok_s": round(sum(h["gen_tok_s"] for h in warm) / len(warm), 2),
+        "phase_s": {k: round(v, 4) for k, v in phase_s.items()},
+        "compile_iter_s": round(sum(hist[0]["phase_s"].values()), 4),
+        "reward_curve": [round(h["mean_reward"], 4) for h in hist],
+        "final_loss": round(hist[-1]["loss"], 6),
+    }
+
+
+def run():
+    records = [_one_plan("dp", mesh_data=1)]
+    if jax.device_count() >= 2:
+        records.append(_one_plan("zero_cdp", mesh_data=2))
+
+    os.makedirs(ARTIFACTS, exist_ok=True)
+    path = os.path.join(ARTIFACTS, "rollout_bench.json")
+    with open(path, "w") as f:
+        json.dump(records, f, indent=1)
+
+    rows = []
+    for rec in records:
+        total = sum(rec["phase_s"].values())
+        rows.append((f"rollout.{rec['plan']}.iter", round(total * 1e6, 1),
+                     f"{rec['gen_tok_s']}tok_s"))
+        rows.append((f"rollout.{rec['plan']}.reward", 0.0,
+                     "->".join(str(r) for r in rec["reward_curve"])))
+    rows.append(("rollout.artifact", 0.0, path))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(",".join(str(x) for x in r))

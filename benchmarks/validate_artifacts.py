@@ -11,7 +11,11 @@ still carries the fields the tooling reads:
     latency records and the paged shared-prefix records (cold + warm
     phases; pool blocks, peak occupancy, prefix hit rate, marginal
     prefill tokens — with range sanity checks, since a hit rate > 1 or
-    occupancy > pool size means the allocator's accounting broke).
+    occupancy > pool size means the allocator's accounting broke);
+  * ``benchmarks/artifacts/rollout_bench.json`` (when present) — the RL
+    rollout loop records: per-plan phase timings (all four phases
+    present), generation tok/s, and a reward curve that must RISE —
+    a flat or falling curve means the policy-gradient step broke.
 
     PYTHONPATH=src python -m benchmarks.validate_artifacts
 
@@ -51,6 +55,18 @@ DECODE_LEVEL_KEYS = {
                       "marginal_prefill_tokens": int, "preemptions": int,
                       "decode_tok_s": numbers.Real},
 }
+
+# RL rollout loop records (``rollout_bench.json``, one per plan). Beyond
+# the keys, two SEMANTIC gates: the reward curve must be monotone-capable
+# evidence of learning (strictly higher at the end than the start, not
+# flat), and the four phase timings must all be present and positive —
+# a refactor that silently drops a phase or breaks the policy-gradient
+# step fails the benchmark smoke here.
+ROLLOUT_KEYS = {"arch": str, "plan": str, "iters": int, "groups": int,
+                "group_size": int, "gen_tok_s": numbers.Real,
+                "phase_s": dict, "compile_iter_s": numbers.Real,
+                "reward_curve": list, "final_loss": numbers.Real}
+ROLLOUT_PHASES = ("generate", "score", "train", "push")
 
 
 def _check_keys(rec, schema, where, errors):
@@ -131,6 +147,31 @@ def validate(errors=None):
                     errors.append(f"decode_bench.json serving_paged[{i}]: "
                                   f"peak occupancy {peak} exceeds pool "
                                   f"size {total}")
+
+    roll_path = os.path.join(_ART, "rollout_bench.json")
+    if os.path.exists(roll_path):        # conditional: landed with the
+        with open(roll_path) as f:       # rollout subsystem, absent before
+            rolls = json.load(f)
+        if not isinstance(rolls, list) or not rolls:
+            errors.append("rollout_bench.json: expected a non-empty list")
+            rolls = []
+        for i, rec in enumerate(rolls):
+            where = f"rollout_bench.json[{i}]"
+            _check_keys(rec, ROLLOUT_KEYS, where, errors)
+            phases = rec.get("phase_s", {})
+            for p in ROLLOUT_PHASES:
+                v = phases.get(p)
+                if not isinstance(v, numbers.Real) or v < 0:
+                    errors.append(f"{where}: phase_s[{p!r}]={v!r} missing "
+                                  f"or negative")
+            curve = rec.get("reward_curve", [])
+            if not all(isinstance(r, numbers.Real) for r in curve):
+                errors.append(f"{where}: non-numeric reward_curve {curve!r}")
+            elif len(curve) < 2 or curve[-1] <= curve[0]:
+                errors.append(f"{where}: reward curve must RISE over the "
+                              f"run (plan {rec.get('plan')!r} got {curve!r}"
+                              f" — the policy-gradient step is not "
+                              f"learning)")
     return errors
 
 
@@ -140,8 +181,10 @@ def main() -> int:
         for e in errors:
             print(f"SCHEMA ERROR: {e}", file=sys.stderr)
         return 1
+    extra = (" + rollout_bench.json" if os.path.exists(
+        os.path.join(_ART, "rollout_bench.json")) else "")
     print("benchmark artifact schemas OK "
-          "(BENCH_kernels.json + decode_bench.json)")
+          f"(BENCH_kernels.json + decode_bench.json{extra})")
     return 0
 
 

@@ -13,6 +13,8 @@
 #                                       # + paged KV block pool)
 #     bash scripts/verify.sh chaos      # resilience: fault-injection suite
 #                                       # + a seeded chaos train smoke
+#     bash scripts/verify.sh rollout    # RL rollout loop smokes (dp +
+#                                       # zero_cdp): reward must rise
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -90,6 +92,24 @@ run_chaos() {
         --keep-last 2 --seed 0
 }
 
+run_rollout() {
+    echo "=== rollout smoke: 2-iteration RL loop, dp plan ==="
+    # generate -> score -> train -> push on one device; the launcher exits
+    # non-zero unless the mean group reward RISES across iterations
+    python -m repro.launch.rollout --arch stablelm-1.6b --reduced \
+        --plan dp --iters 2 --groups 2 --group-size 4 \
+        --prompt-len 8 --gen 8 --mesh-data 1 --mesh-model 1 \
+        --host-devices 1
+
+    echo "=== rollout smoke: 2-iteration RL loop, zero_cdp plan ==="
+    # the same loop with stage-sharded f32 masters: the weight push
+    # all-gathers inside the compiled cast, under the transfer guard
+    python -m repro.launch.rollout --arch stablelm-1.6b --reduced \
+        --plan zero_cdp --iters 2 --groups 2 --group-size 4 \
+        --prompt-len 8 --gen 8 --mesh-data 2 --mesh-model 1 \
+        --host-devices 2
+}
+
 target="${1:-all}"
 case "$target" in
     tests)   run_tests ;;
@@ -97,9 +117,10 @@ case "$target" in
     kernels) run_kernels ;;
     serve)   run_serve ;;
     chaos)   run_chaos ;;
-    all)     run_tests; run_train; run_kernels; run_serve; run_chaos ;;
+    rollout) run_rollout ;;
+    all)     run_tests; run_train; run_kernels; run_serve; run_chaos; run_rollout ;;
     *)
-        echo "unknown target '$target' (expected tests|train|kernels|serve|chaos|all)" >&2
+        echo "unknown target '$target' (expected tests|train|kernels|serve|chaos|rollout|all)" >&2
         exit 2
         ;;
 esac

@@ -39,6 +39,37 @@ def make_classification_data(n: int, dim: int = 512, classes: int = 10,
     return x.astype(np.float32), y.astype(np.int32)
 
 
+def rollout_prompts(n: int, vocab: int, prompt_len: int,
+                    seed: int = 0) -> list:
+    """Deterministic distinct prompts for the rollout loop — one per
+    trajectory group; the group members share the prompt and differ only
+    in their sampling seed."""
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, vocab, size=prompt_len).astype(np.int32)
+            for _ in range(n)]
+
+
+def token_range_reward(target: int, width: int = 1):
+    """The steerable synthetic reward for the rollout loop: the COUNT of
+    generated tokens falling in ``[target, target + width)``. Maximising
+    it has a known optimum (emit only in-range tokens), so a correct
+    policy-gradient step must raise the mean group reward — the rollout
+    subsystem's acceptance signal. ``width = 1`` is the literal
+    count-of-one-token task; a wider band gives a randomly initialised
+    policy enough baseline hits (~width/vocab per token) for the
+    group-relative advantage to carry signal from iteration one."""
+    if width < 1:
+        raise ValueError(f"width={width} must be >= 1")
+
+    def reward(prompt: np.ndarray, tokens: np.ndarray) -> float:
+        toks = np.asarray(tokens)
+        if toks.size == 0:
+            return 0.0
+        return float(np.count_nonzero((toks >= target)
+                                      & (toks < target + width)))
+    return reward
+
+
 def lm_batch_iterator(tokens: np.ndarray, batch: int, seq: int,
                       seed: int = 0) -> Iterator[Dict[str, np.ndarray]]:
     rng = np.random.default_rng(seed)

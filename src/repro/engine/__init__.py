@@ -8,7 +8,8 @@ forcing, and mesh construction; the engines own the train and serve loops.
 """
 from repro.engine.spec import RunSpec
 
-__all__ = ["RunSpec", "TrainEngine", "ServeEngine", "Request",
+__all__ = ["RunSpec", "TrainEngine", "ServeEngine", "RolloutEngine",
+           "Trajectory", "TrajectoryGroup", "reinforce_batch", "Request",
            "poisson_trace", "Fault", "FaultInjector", "EventLog",
            "HealthGuard", "parse_faults", "BlockPool", "PoolExhausted",
            "Parked"]
@@ -21,6 +22,13 @@ def __getattr__(name):
     if name == "ServeEngine":
         from repro.engine.serve import ServeEngine
         return ServeEngine
+    if name == "RolloutEngine":
+        from repro.engine.rollout import RolloutEngine
+        return RolloutEngine
+    if name in ("Trajectory", "TrajectoryGroup", "reinforce_batch"):
+        # trajectory containers (jax-free import, like RunSpec)
+        from repro.engine import trajectory
+        return getattr(trajectory, name)
     if name in ("Request", "poisson_trace"):
         # continuous-batching workload types (jax-free import, like RunSpec)
         from repro.engine import batching

@@ -49,7 +49,15 @@ class Request:
     | "rejected" | "failed") and whatever partial ``tokens`` it earned —
     it never raises a per-request failure at the whole batch.
     ``deadline_steps`` is this request's step budget (queue wait + decode)
-    overriding serve()'s engine-wide default."""
+    overriding serve()'s engine-wide default.
+
+    Sampling controls are per-request so one jitted decode step can serve
+    a heterogeneous batch (rollout groups need diverse samples of the SAME
+    prompt): ``temperature`` overrides the engine-wide default (<= 0 means
+    greedy for this row), ``top_k`` restricts sampling to the k most
+    likely tokens (None/0 disables), and ``seed`` replaces ``rid`` as the
+    fold-in for this request's sampling key stream — two requests with the
+    same prompt and different seeds decode different continuations."""
     rid: int
     prompt: np.ndarray                  # [S] int32, unpadded
     max_gen: int
@@ -58,6 +66,9 @@ class Request:
     status: str = "queued"
     error: Optional[str] = None
     deadline_steps: Optional[int] = None
+    temperature: Optional[float] = None
+    top_k: Optional[int] = None
+    seed: Optional[int] = None
 
 
 def poisson_trace(n: int, rate: float, seed: int = 0) -> List[int]:

@@ -309,6 +309,27 @@ class BlockPool:
         round now hold real content and become prefix-matchable."""
         self.pending.clear()
 
+    def sleep(self):
+        """Pool-wide sleep between serve() calls: drop the prefix registry
+        and return every retained (refcount-0, LRU-cached) block to the
+        free list, leaving occupancy at exactly zero. Only legal when no
+        slot holds blocks — a live or leaked reference is a bug, not a
+        cache to retain — and required before a weight push, since
+        registered blocks hold KV activations of the OLD parameters."""
+        n = self.blocks_in_use()
+        if n:
+            raise RuntimeError(
+                f"pool sleep with {n} blocks still referenced "
+                "(live or leaked slot state)")
+        for b in list(self.registered):
+            self._deregister(b)
+            self.free.append(b)
+        self.lru.clear()
+        self.pending.clear()
+        assert len(self.free) == self.num_blocks, \
+            "pool sleep left blocks unaccounted for"
+        self._log("pool_sleep", -1, None)
+
     def audit(self):
         """Allocator invariants; raises AssertionError on violation."""
         counts = np.zeros(self.num_blocks, np.int64)

@@ -30,6 +30,8 @@ device state exists.
 from __future__ import annotations
 
 import dataclasses
+import json
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
@@ -148,18 +150,41 @@ class FaultInjector:
 class EventLog:
     """Append-only structured log: every skip / rollback / retry /
     quarantine the resilience layer performs is one dict with at least
-    ``kind`` and ``step``. Engines expose it as ``engine.events``."""
+    ``kind``, ``step`` and a monotonic timestamp ``t`` (``time.monotonic``
+    seconds — ordering and phase durations are meaningful within one
+    process; absolute values are not wall-clock). Engines expose it as
+    ``engine.events``; :meth:`to_jsonl` exports the log for offline audit
+    (rollout phase boundaries, chaos replays)."""
 
     def __init__(self):
         self.records: List[Dict[str, Any]] = []
 
     def append(self, kind: str, step: int, **detail) -> Dict[str, Any]:
-        rec = {"kind": kind, "step": int(step), **detail}
+        rec = {"kind": kind, "step": int(step), "t": time.monotonic(),
+               **detail}
         self.records.append(rec)
         return rec
 
     def of(self, kind: str) -> List[Dict[str, Any]]:
         return [r for r in self.records if r["kind"] == kind]
+
+    def to_jsonl(self, path) -> int:
+        """Write one JSON object per record to ``path`` (non-JSON detail
+        values are stringified rather than dropped). Returns the number of
+        records written."""
+        def _default(o):
+            if isinstance(o, (np.integer,)):
+                return int(o)
+            if isinstance(o, (np.floating,)):
+                return float(o)
+            if isinstance(o, np.ndarray):
+                return o.tolist()
+            return str(o)
+
+        with open(path, "w") as f:
+            for rec in self.records:
+                f.write(json.dumps(rec, default=_default) + "\n")
+        return len(self.records)
 
     def __len__(self):
         return len(self.records)

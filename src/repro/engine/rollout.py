@@ -1,0 +1,383 @@
+"""RolloutEngine: an RL rollout loop where train and serve time-share one
+device.
+
+The paper's core move (Sec. 4) is sharing accelerators by staggering
+execution so peak working sets never coincide; this subsystem applies the
+same discipline to the self-improvement workload: ONE process, ONE device
+pool, alternating *generate -> score -> train -> push weights* phases.
+
+  * **generate** — ``ServeEngine.serve()`` continuous batching over the
+    paged KV cache. Each trajectory group samples the SAME prompt under
+    per-request seeds/temperatures (``batching.Request`` sampling fields),
+    so group members share their prompt's prefix blocks and diverge only
+    in their sampled continuations.
+  * **score** — the steerable synthetic reward (``data.synthetic``) plus
+    one jitted forward on the BEHAVIOUR params filling per-token logprobs
+    (the hook for importance-sampling corrections when training on stale
+    weights); group-relative advantages come from ``engine.trajectory``.
+  * **train** — one REINFORCE step through ``TrainEngine.step_external``
+    under any registered ParallelPlan, including ``zero_cdp`` (the
+    stage-sharded f32 masters stay sharded; the policy gradient flows
+    through the same streamed ring as LM training). Before the step the
+    serve pool drops to sleep level 2 (``ServeEngine.pool_sleep``): KV
+    memory and optimizer state never coexist at peak.
+  * **push** — the new params are handed to the serve engine DEVICE-SIDE:
+    one compiled cast (stage-sharded plans all-gather via
+    ``zero_cdp.unchunk_params`` inside the same program) whose destination
+    donates the old serve params. The call runs under
+    ``jax.transfer_guard("disallow")``, so a host round-trip of any
+    parameter array is an error, not a slowdown.
+
+Phase boundaries and durations land in ``engine.events`` (kind
+``"phase"``, monotonic ``t`` timestamps) — auditable offline via
+``EventLog.to_jsonl``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.engine import batching
+from repro.engine import resilience as rsl
+from repro.engine.spec import RunSpec
+from repro.engine.trajectory import (Trajectory, TrajectoryGroup,
+                                     reinforce_batch)
+
+PyTree = Any
+
+#: families the rollout loop serves (forward needs no side inputs)
+ROLLOUT_FAMILIES = ("dense", "moe")
+
+
+def reinforce_loss_fn(cfg):
+    """The policy-gradient loss TrainEngine's jitted step runs: masked
+    group-relative REINFORCE over a ``reinforce_batch``. The
+    log-probability gather uses the same one-hot contraction as
+    ``models.model._xent`` (tensor-parallel friendly: no gather along a
+    vocab-sharded dim), the mask confines credit to generated-token
+    targets, and the MoE aux loss rides along so load balancing survives
+    RL fine-tuning."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models import model as model_mod
+
+    def loss_fn(params, batch):
+        logits, aux, _ = model_mod.forward(cfg, params,
+                                           {"tokens": batch["tokens"]})
+        lg = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        tgt = batch["targets"]
+        onehot = (tgt[..., None] == jax.lax.broadcasted_iota(
+            jnp.int32, tgt.shape + (lg.shape[-1],), tgt.ndim))
+        ll = jnp.sum(jnp.where(onehot, lg, 0.0), axis=-1) - lse   # [B, T]
+        mask = batch["mask"]
+        denom = jnp.maximum(jnp.sum(mask), 1.0)
+        pg = -jnp.sum(batch["adv"][:, None] * ll * mask) / denom
+        loss = pg + aux
+        return loss, {"loss": loss, "pg": pg,
+                      "logp_gen": jnp.sum(ll * mask) / denom}
+    return loss_fn
+
+
+class RolloutEngine:
+    """One-process RL rollout loop over the existing engines.
+
+        spec = RunSpec(arch="stablelm-1.6b", reduced=True)
+        eng = RolloutEngine(spec, plan="dp", groups=2, group_size=4)
+        history = eng.run(iters=3)     # mean reward rises on the way
+
+    ``reward_fn(prompt, tokens) -> float`` scores one trajectory; the
+    default is the steerable ``data.synthetic.token_range_reward`` whose
+    optimum is known, so reward MUST rise under a correct policy-gradient
+    step. ``groups * group_size`` is the train batch B and must divide the
+    data mesh axis evenly (the jitted step shards the batch over it)."""
+
+    def __init__(self, spec: RunSpec, *,
+                 plan=None,                    # ParallelPlan | name | None
+                 reward_fn: Optional[Callable] = None,
+                 groups: int = 2,
+                 group_size: int = 4,
+                 prompt_len: int = 8,
+                 gen: int = 8,
+                 iters: int = 4,
+                 temperature: float = 1.0,
+                 top_k: int = 0,
+                 lr: float = 0.5,
+                 momentum: float = 0.0,
+                 weight_decay: float = 0.0,
+                 kv_block_size: int = 4,
+                 normalize_adv: bool = True,
+                 reward_target: Optional[int] = None,
+                 reward_width: Optional[int] = None,
+                 verbose: bool = True):
+        spec.ensure_host_devices()
+        self.spec = spec
+        self.cfg = spec.resolve_config()
+        if self.cfg.family not in ROLLOUT_FAMILIES:
+            raise NotImplementedError(
+                f"rollout serves token-only families {ROLLOUT_FAMILIES}, "
+                f"not {self.cfg.family!r} (forward would need side inputs "
+                f"the trajectory batch does not carry)")
+        from repro.parallel import resolve_plan
+        self.plan = resolve_plan(plan if plan is not None else spec.plan)
+        if groups < 1 or group_size < 2:
+            raise ValueError(
+                f"groups={groups} must be >= 1 and group_size={group_size} "
+                ">= 2 (a singleton group has zero group-relative advantage)")
+        self.groups = groups
+        self.group_size = group_size
+        self.B = groups * group_size
+        n_data = spec.mesh_data or 1
+        if self.B % n_data:
+            raise ValueError(
+                f"batch groups*group_size={self.B} must be divisible by "
+                f"mesh_data={n_data} (the train step shards the batch)")
+        self.prompt_len = prompt_len
+        self.gen = gen
+        self.iters = iters
+        self.temperature = temperature
+        self.top_k = top_k
+        self.lr = lr
+        self.momentum = momentum
+        self.weight_decay = weight_decay
+        self.kv_block_size = kv_block_size
+        self.normalize_adv = normalize_adv
+        vocab = self.cfg.vocab_size
+        self._reward_target = (vocab // 2 if reward_target is None
+                               else reward_target)
+        self._reward_width = (max(1, vocab // 8) if reward_width is None
+                              else reward_width)
+        self.reward_fn = reward_fn
+        self.verbose = verbose
+        self.events = rsl.EventLog()
+        self.history: List[Dict[str, Any]] = []
+        self.train = None
+        self.serve = None
+        self.prompts = None
+        self._logprob_fn = None
+        self._push_exec = None
+        self._built = False
+
+    def _log(self, msg: str) -> None:
+        if self.verbose:
+            print(msg, flush=True)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def build(self) -> "RolloutEngine":
+        if self._built:
+            return self
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.data.synthetic import rollout_prompts, token_range_reward
+        from repro.engine.serve import ServeEngine
+        from repro.engine.train import TrainEngine
+
+        if self.reward_fn is None:
+            self.reward_fn = token_range_reward(self._reward_target,
+                                                self._reward_width)
+        T = self.prompt_len + self.gen - 1
+        self.train = TrainEngine(
+            self.spec, plan=self.plan, steps=max(self.iters, 1),
+            batch=self.B, seq=T, lr=self.lr, momentum=self.momentum,
+            weight_decay=self.weight_decay,
+            lr_schedule=lambda s: self.lr,    # no warmup: every rollout
+            loss_fn=reinforce_loss_fn(self.cfg),  # iteration trains at lr
+            data_tokens=max(4096, 2 * self.B * (T + 2)),
+            log_every=10 ** 9, verbose=False)
+        self.serve = ServeEngine(
+            self.spec, batch=self.B, prompt_len=self.prompt_len,
+            gen=self.gen, temperature=self.temperature, paged=True,
+            kv_block_size=self.kv_block_size, verbose=False)
+        self.train.build()
+        self.serve.build()
+        # commit the serve params replicated over the TRAIN mesh once, so
+        # the weight-push cast (whose source is mesh-sharded train state)
+        # and every serve fn run on one device set — without this the
+        # push would mix device assignments and need a host round-trip
+        self.serve.params = jax.device_put(
+            self.serve.params, NamedSharding(self.train.mesh, P()))
+        self.prompts = rollout_prompts(self.groups, self.cfg.vocab_size,
+                                       self.prompt_len, seed=self.spec.seed)
+        self._built = True
+        return self
+
+    # -- phase helpers -----------------------------------------------------
+
+    def pool_occupancy(self) -> int:
+        """Blocks the serve pool currently holds references to (0 when the
+        pool is asleep or was never built)."""
+        st = self.serve._paged_state if self.serve else None
+        return 0 if st is None else st["pool"].blocks_in_use()
+
+    def _make_requests(self, it: int) -> List[batching.Request]:
+        """B requests for iteration ``it``: group g's members share
+        prompt g and differ only in ``seed`` (distinct across members AND
+        iterations, so exploration never replays a key stream)."""
+        reqs = []
+        for g in range(self.groups):
+            for m in range(self.group_size):
+                rid = g * self.group_size + m
+                reqs.append(batching.Request(
+                    rid=rid, prompt=self.prompts[g], max_gen=self.gen,
+                    temperature=self.temperature,
+                    top_k=self.top_k or None,
+                    seed=1 + it * self.B + rid))
+        return reqs
+
+    def _collect_groups(self, requests) -> List[TrajectoryGroup]:
+        import numpy as np
+        by_rid = {r.rid: r for r in requests}
+        out = []
+        for g in range(self.groups):
+            trajs = []
+            for m in range(self.group_size):
+                r = by_rid[g * self.group_size + m]
+                if r.status != "ok":
+                    raise RuntimeError(
+                        f"rollout generation failed: request {r.rid} "
+                        f"finished {r.status!r} ({r.error})")
+                trajs.append(Trajectory(
+                    rid=r.rid, prompt=np.asarray(self.prompts[g]),
+                    tokens=np.asarray(r.tokens, np.int32),
+                    reward=self.reward_fn(self.prompts[g], r.tokens)))
+            grp = TrajectoryGroup(trajs)
+            grp.compute_advantages(normalize=self.normalize_adv)
+            out.append(grp)
+        return out
+
+    def _score_logprobs(self, batch) -> "Any":
+        """Per-token behaviour logprobs [B, T] from the CURRENT serve
+        params (the policy that actually sampled the tokens)."""
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+        from repro.models import model as model_mod
+        if self._logprob_fn is None:
+            cfg = self.cfg
+
+            def logprob(params, tokens, targets, mask):
+                logits, _, _ = model_mod.forward(cfg, params,
+                                                 {"tokens": tokens})
+                lg = logits.astype(jnp.float32)
+                lse = jax.nn.logsumexp(lg, axis=-1)
+                onehot = (targets[..., None] == jax.lax.broadcasted_iota(
+                    jnp.int32, targets.shape + (lg.shape[-1],),
+                    targets.ndim))
+                ll = jnp.sum(jnp.where(onehot, lg, 0.0), axis=-1) - lse
+                return ll * mask
+            self._logprob_fn = jax.jit(logprob)
+        return np.asarray(self._logprob_fn(
+            self.serve.params, jnp.asarray(batch["tokens"]),
+            jnp.asarray(batch["targets"]), jnp.asarray(batch["mask"])))
+
+    def push_weights(self) -> None:
+        """Hand the train state's params to the serve engine device-side.
+
+        ONE compiled program: stage-sharded plans reconstruct the full
+        tree from their [N, chunk] masters (``unchunk_params`` under jit —
+        the masters themselves stay sharded), tree plans are a pure per-
+        leaf dtype cast; either way the OLD serve params are donated as
+        the destination, so the hand-off allocates nothing it does not
+        immediately reuse. ``jax.transfer_guard("disallow")`` turns any
+        host round-trip of a parameter array into an error (compilation
+        happens outside the guard, on the first push)."""
+        import jax
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.parallel import PLACE_STAGE_SHARDED
+        staged = self.plan.placement == PLACE_STAGE_SHARDED
+        state = self.train.state
+        src = state["params"]["stages"] if staged else state["params"]
+        if self._push_exec is None:
+            mesh = self.train.mesh
+            if staged:
+                from repro.parallel import zero_cdp as zcdp
+                n = mesh.shape[self.train.trainer.data_axis]
+                layout = zcdp.build_stage_layout(self.cfg, n)
+
+                def cast(stages, dst):
+                    full = zcdp.unchunk_params(layout, stages)
+                    return jax.tree.map(
+                        lambda x, d: x.astype(d.dtype), full, dst)
+            else:
+                def cast(p, dst):
+                    return jax.tree.map(
+                        lambda x, d: x.astype(d.dtype), p, dst)
+            fn = jax.jit(cast, out_shardings=NamedSharding(mesh, P()),
+                         donate_argnums=(1,))
+            self._push_exec = fn.lower(src, self.serve.params).compile()
+        with jax.transfer_guard("disallow"):
+            self.serve.params = self._push_exec(src, self.serve.params)
+
+    # -- the loop ----------------------------------------------------------
+
+    def iteration(self, it: int) -> Dict[str, Any]:
+        """One generate -> score -> train -> push cycle; returns the
+        iteration record (also appended to ``self.history``)."""
+        import numpy as np
+        self.build()
+        phase_s: Dict[str, float] = {}
+
+        t0 = time.monotonic()
+        res = self.serve.serve(self._make_requests(it), max_slots=self.B)
+        groups = self._collect_groups(res["requests"])
+        phase_s["generate"] = time.monotonic() - t0
+        gen_tokens = int(sum(len(t.tokens) for g in groups for t in g))
+        self.events.append("phase", it, phase="generate",
+                           dur_s=phase_s["generate"], tokens=gen_tokens)
+
+        t0 = time.monotonic()
+        batch = reinforce_batch(groups, pad_to=self.prompt_len + self.gen)
+        logp = self._score_logprobs(batch)
+        for i, traj in enumerate(t for g in groups for t in g):
+            lo = len(traj.prompt) - 1
+            traj.logprobs = logp[i, lo:lo + len(traj.tokens)].copy()
+        phase_s["score"] = time.monotonic() - t0
+        self.events.append("phase", it, phase="score",
+                           dur_s=phase_s["score"])
+
+        # train phase: the serve pool sleeps first, so KV memory and
+        # optimizer state never coexist at peak (the paper's staggered
+        # peak-resource argument, applied across the two engines)
+        t0 = time.monotonic()
+        self.serve.pool_sleep(level=2)
+        occ = self.pool_occupancy()
+        assert occ == 0, f"pool still holds {occ} blocks during train"
+        metrics = self.train.step_external(batch)
+        phase_s["train"] = time.monotonic() - t0
+        self.events.append("phase", it, phase="train",
+                           dur_s=phase_s["train"], loss=metrics["loss"])
+
+        t0 = time.monotonic()
+        self.push_weights()
+        phase_s["push"] = time.monotonic() - t0
+        self.events.append("phase", it, phase="push",
+                           dur_s=phase_s["push"])
+
+        rewards = np.asarray([g.mean_reward for g in groups])
+        rec = {"iter": it,
+               "mean_reward": float(rewards.mean()),
+               "group_rewards": [float(r) for r in rewards],
+               "loss": float(metrics["loss"]),
+               "pg": float(metrics.get("pg", metrics["loss"])),
+               "gen_tokens": gen_tokens,
+               "gen_tok_s": round(gen_tokens /
+                                  max(phase_s["generate"], 1e-9), 2),
+               "phase_s": {k: round(v, 4) for k, v in phase_s.items()}}
+        self.history.append(rec)
+        self._log(
+            f"rollout iter {it}: reward {rec['mean_reward']:.3f} "
+            f"loss {rec['loss']:.4f}  gen {rec['gen_tok_s']} tok/s  "
+            f"phases g/s/t/p = "
+            + "/".join(f"{phase_s[k]:.2f}s"
+                       for k in ("generate", "score", "train", "push")))
+        return rec
+
+    def run(self, iters: Optional[int] = None) -> List[Dict[str, Any]]:
+        """Run the loop; returns ``self.history`` (one record per
+        iteration: mean reward, loss, tokens/s, per-phase seconds)."""
+        self.build()
+        n = self.iters if iters is None else int(iters)
+        for it in range(len(self.history), len(self.history) + n):
+            self.iteration(it)
+        return self.history

@@ -62,25 +62,38 @@ from repro.engine.spec import RunSpec
 PyTree = Any
 
 
-def _sampler(temp: float):
-    """Per-row sampling closure shared by the dense and paged serving fns:
-    greedy at temp == 0, else categorical with one key per row (a request's
-    stream never depends on its co-residents)."""
+def _sampler():
+    """Per-row sampling closure shared by the dense and paged serving fns.
+    ``temps``/``topks`` are [B] RUNTIME data (per-request overrides with
+    the engine-wide default filled in host-side), so ONE jitted step serves
+    a heterogeneous batch — rollout groups get per-request diversity
+    without a retrace. A row with temp <= 0 takes argmax (same tokens the
+    old engine-wide greedy path produced); temp > 0 samples categorically
+    over the row's top-k logits (k <= 0 disables the truncation) with one
+    key per row, so a request's stream never depends on its co-residents."""
     import jax
     import jax.numpy as jnp
 
-    def sample(logits, keys):
-        if temp <= 0:
-            return jnp.argmax(logits, -1).astype(jnp.int32), keys
-
-        def one(k, lg):
+    def sample(logits, keys, temps, topks):
+        def one(k, lg, temp, tk):
             nk, sub = jax.random.split(k)
-            t = jax.random.categorical(
-                sub, lg.astype(jnp.float32) / temp, -1)
+            lg32 = lg.astype(jnp.float32)
+            vocab = lg32.shape[-1]
+            kth = jnp.sort(lg32)[::-1][jnp.clip(tk, 1, vocab) - 1]
+            masked = jnp.where((tk <= 0) | (lg32 >= kth), lg32, -jnp.inf)
+            samp = jax.random.categorical(
+                sub, masked / jnp.maximum(temp, 1e-6), -1)
+            t = jnp.where(temp > 0, samp, jnp.argmax(lg, -1))
             return nk, t
-        keys, toks = jax.vmap(one)(keys, logits)
+        keys, toks = jax.vmap(one)(keys, logits, temps, topks)
         return toks.astype(jnp.int32), keys
     return sample
+
+
+def _sid(req: "batching.Request") -> int:
+    """The fold-in id for a request's sampling key stream: ``seed`` when
+    set, else ``rid`` (the historical behaviour)."""
+    return req.seed if req.seed is not None else req.rid
 
 
 class ServeEngine:
@@ -325,8 +338,9 @@ class ServeEngine:
                      sampling.
 
         Both are shape-static: every serve() call with the same slot count
-        reuses the same executables — admission never retraces."""
-        key = (n_slots, self.prompt_len, self.gen, self.temperature)
+        reuses the same executables — admission never retraces (sampling
+        temperature / top-k are runtime [B] data, not trace constants)."""
+        key = (n_slots, self.prompt_len, self.gen)
         if key in self._serving:
             return self._serving[key]
         import jax
@@ -345,9 +359,10 @@ class ServeEngine:
         init_fn = lambda b: init_cache(cfg, b, cache_len + vlm_prefix)
         axes = self._batch_axes(init_fn)
         base_key = jax.random.PRNGKey(self.spec.seed + 1)
-        sample = _sampler(self.temperature)
+        sample = _sampler()
 
-        def admit(params, prompts, lengths, mask, rids, tok, cache, keys):
+        def admit(params, prompts, lengths, mask, rids, tok, cache, keys,
+                  temps, topks):
             b = {"tokens": prompts, "lengths": lengths}
             if cfg.family == "vlm":
                 v = cfg.vlm
@@ -359,15 +374,15 @@ class ServeEngine:
             fresh_keys = jax.vmap(
                 lambda r: jax.random.fold_in(base_key, r))(rids)
             keys = jnp.where(mask[:, None], fresh_keys, keys)
-            tok0, keys2 = sample(logits, keys)
+            tok0, keys2 = sample(logits, keys, temps, topks)
             keys = jnp.where(mask[:, None], keys2, keys)
             tok = jnp.where(mask, tok0, tok)
             return tok, cache, keys
 
-        def step(params, tok, cache, keys):
+        def step(params, tok, cache, keys, temps, topks):
             logits, cache = model_mod.decode_step(cfg, params, {"token": tok},
                                                   cache, ragged=True)
-            tok, keys = sample(logits, keys)
+            tok, keys = sample(logits, keys, temps, topks)
             return tok, cache, keys
 
         fns = {"admit": jax.jit(admit), "step": jax.jit(step),
@@ -396,6 +411,9 @@ class ServeEngine:
         st = self._paged_state
         if st is not None and (st["B"], st["bs"], st["pool_blocks"]) == \
                 (n_slots, bs, pool_blocks):
+            if st["cache"] is None:     # woken from pool_sleep(level=2)
+                st["cache"] = model_mod.init_paged_cache(
+                    self.cfg, n_slots, pool_blocks, bs, cache_len_p)
             return st
         if st is not None:
             self._log("paged: pool geometry changed — rebuilding the block "
@@ -410,6 +428,29 @@ class ServeEngine:
               "row_len": np.zeros((n_slots,), np.int64)}
         self._paged_state = st
         return st
+
+    def pool_sleep(self, level: int = 2) -> None:
+        """Put the persistent paged-serving state to sleep between serve()
+        calls. Level 1 drops the prefix registry (occupancy goes to zero;
+        the device KV arrays stay allocated); level 2 additionally FREES
+        the device pool cache, so during a rollout train phase KV memory
+        and optimizer state never coexist at peak — the next serve() call
+        re-allocates the pool and re-prefills. Either level invalidates
+        every cached prefix, which is also a correctness requirement after
+        a weight push: registered blocks hold KV activations of the OLD
+        parameters. No-op when no paged state exists yet."""
+        if level not in (1, 2):
+            raise ValueError(f"pool_sleep level={level}; expected 1 or 2")
+        st = self._paged_state
+        if st is None:
+            return
+        st["pool"].sleep()
+        st["table"][:] = st["pool_blocks"]
+        st["row_len"][:] = 0
+        if level == 2:
+            st["cache"] = None
+        self.events.append("pool_sleep", 0, level=level,
+                           pool_blocks=st["pool_blocks"])
 
     def _serving_fns_paged(self, n_slots: int, nb_max: int):
         """Paged twins of ``_serving_fns`` (built once per slot count):
@@ -436,7 +477,7 @@ class ServeEngine:
                            leaves have no batch axis, so the dense
                            axes-based fns cannot see rows)."""
         key = ("paged", n_slots, self.prompt_len, self.gen,
-               self.temperature, self.kv_block_size, nb_max)
+               self.kv_block_size, nb_max)
         if key in self._serving:
             return self._serving[key]
         import jax
@@ -448,43 +489,43 @@ class ServeEngine:
         cfg = self.cfg
         B, bs = n_slots, self.kv_block_size
         base_key = jax.random.PRNGKey(self.spec.seed + 1)
-        sample = _sampler(self.temperature)
+        sample = _sampler()
 
-        def resample(logits, mask, rids, tok, keys):
+        def resample(logits, mask, rids, tok, keys, temps, topks):
             fresh_keys = jax.vmap(
                 lambda r: jax.random.fold_in(base_key, r))(rids)
             keys = jnp.where(mask[:, None], fresh_keys, keys)
-            tok0, keys2 = sample(logits, keys)
+            tok0, keys2 = sample(logits, keys, temps, topks)
             keys = jnp.where(mask[:, None], keys2, keys)
             tok = jnp.where(mask, tok0, tok)
             return tok, keys
 
         def admit_fresh(params, prompts, lengths, mask, rids, tok, cache,
-                        keys):
+                        keys, temps, topks):
             S = prompts.shape[1]
             dense = init_cache(cfg, B, paging.round_up(S, bs))
             b = {"tokens": prompts, "lengths": lengths}
             logits, filled = model_mod.prefill_with_cache(cfg, params, b,
                                                           dense)
             cache = paging.scatter_prefill(cache, filled, mask)
-            tok, keys = resample(logits, mask, rids, tok, keys)
+            tok, keys = resample(logits, mask, rids, tok, keys, temps, topks)
             return tok, cache, keys
 
         def admit_shared(params, tails, lengths, hist, mask, rids, tok,
-                         cache, keys):
+                         cache, keys, temps, topks):
             # non-admitted rows carry (lengths, hist) = (cur_len, cur_len)
             # — empty tail, every write trash-redirected, length preserved
             b = {"tokens": tails, "lengths": lengths, "hist": hist}
             logits, cache = model_mod.prefill_with_cache(cfg, params, b,
                                                          cache)
-            tok, keys = resample(logits, mask, rids, tok, keys)
+            tok, keys = resample(logits, mask, rids, tok, keys, temps, topks)
             return tok, cache, keys
 
-        def step(params, tok, cache, keys):
+        def step(params, tok, cache, keys, temps, topks):
             logits, cache = model_mod.decode_step(cfg, params,
                                                   {"token": tok}, cache,
                                                   ragged=True)
-            tok, keys = sample(logits, keys)
+            tok, keys = sample(logits, keys, temps, topks)
             return tok, cache, keys
 
         def wake(cache, payload, idx, slot_mask, new_len, tok, last_tok,
@@ -657,6 +698,21 @@ class ServeEngine:
             cache = fns["init"](B)
         keys = jax.vmap(lambda i: jax.random.fold_in(fns["base_key"], i))(
             jnp.arange(B))
+        # per-slot sampling controls (Request.temperature / Request.top_k
+        # overrides with the engine-wide defaults) — RUNTIME [B] data fed
+        # to the jitted fns, so a heterogeneous batch never retraces. The
+        # .copy() before upload mirrors the table convention: jnp.asarray
+        # transfers asynchronously and the host rows mutate in place.
+        temp_row = np.full((B,), self.temperature, np.float32)
+        topk_row = np.zeros((B,), np.int32)
+
+        def samp():
+            return jnp.asarray(temp_row.copy()), jnp.asarray(topk_row.copy())
+
+        def set_sampling(slot, req):
+            temp_row[slot] = (self.temperature if req.temperature is None
+                              else req.temperature)
+            topk_row[slot] = req.top_k or 0
 
         # compile the serving fns outside the timed loop
         zp = jnp.zeros((B, S_pad), jnp.int32)
@@ -665,17 +721,18 @@ class ServeEngine:
         zr = jnp.zeros((B,), jnp.int32)
         if paged:
             self._warmup(("serve_admit_fresh", B), fns["admit_fresh"],
-                         self.params, zp, zl, zm, zr, tok, cache, keys)
+                         self.params, zp, zl, zm, zr, tok, cache, keys,
+                         *samp())
             if self.prefix_cache:
                 self._warmup(("serve_admit_shared", B), fns["admit_shared"],
                              self.params, zp, jnp.zeros((B,), jnp.int32),
                              jnp.zeros((B,), jnp.int32), zm, zr, tok, cache,
-                             keys)
+                             keys, *samp())
         else:
             self._warmup(("serve_admit", B), fns["admit"], self.params, zp,
-                         zl, zm, zr, tok, cache, keys)
+                         zl, zm, zr, tok, cache, keys, *samp())
         self._warmup(("serve_step", B), fns["step"], self.params, tok, cache,
-                     keys)
+                     keys, *samp())
         preemptions = offloads = wakes = 0
 
         def release_slot_resources(slot, upload=True):
@@ -686,6 +743,8 @@ class ServeEngine:
             resources beyond the scheduler's own bookkeeping.
             ``upload=False`` defers the host->device table refresh so a
             loop releasing several slots can upload once afterwards."""
+            temp_row[slot] = self.temperature
+            topk_row[slot] = 0
             if paged:
                 pool.release_slot(slot)
                 st["table"][slot] = trash
@@ -756,6 +815,7 @@ class ServeEngine:
                 return False
             sched.admit(slot, sched.requests[p.rid], t, len(history),
                         resume=True)
+            set_sampling(slot, sched.requests[p.rid])
             refresh_row(slot)
             row_len[slot] = p.n_tokens
             cache["table"] = jnp.asarray(st["table"].copy())
@@ -901,6 +961,7 @@ class ServeEngine:
                         break       # completions will free blocks; wait
                     sched.admit(slot, req, t, len(history),
                                 resume=p is not None)
+                    set_sampling(slot, req)
                     refresh_row(slot)
                     row_len[slot] = len(prompt)
                     if cow:
@@ -959,7 +1020,7 @@ class ServeEngine:
                             hist_a[:] = row_len
                         for slot, req, prompt, hist_n in items:
                             mask[slot] = True
-                            rids[slot] = req.rid
+                            rids[slot] = _sid(req)
                             lengths[slot] = len(prompt)
                             hist_a[slot] = hist_n
                             tail = prompt[hist_n:] if kind == "shared" \
@@ -970,13 +1031,13 @@ class ServeEngine:
                                 self.params, jnp.asarray(prompts),
                                 jnp.asarray(np.maximum(lengths, 1)),
                                 jnp.asarray(mask), jnp.asarray(rids), tok,
-                                cache, keys)
+                                cache, keys, *samp())
                         else:
                             tok, cache, keys = fns["admit_shared"](
                                 self.params, jnp.asarray(prompts),
                                 jnp.asarray(lengths), jnp.asarray(hist_a),
                                 jnp.asarray(mask), jnp.asarray(rids), tok,
-                                cache, keys)
+                                cache, keys, *samp())
                         prefill_calls += 1
                     if not cow_done:        # defensive: cow without shared
                         do_cow(cow_pairs)
@@ -1030,8 +1091,9 @@ class ServeEngine:
                         prompts[slot, :len(req.prompt)] = req.prompt
                         lengths[slot] = len(req.prompt)
                         mask[slot] = True
-                        rids[slot] = req.rid
+                        rids[slot] = _sid(req)
                         sched.admit(slot, req, t, len(history))
+                        set_sampling(slot, req)
                         if was_live and t > 0:
                             admitted_mid_decode += 1
                         if self.injector is not None and \
@@ -1045,7 +1107,7 @@ class ServeEngine:
                     tok, cache, keys = fns["admit"](
                         self.params, jnp.asarray(prompts),
                         jnp.asarray(lengths), jnp.asarray(mask),
-                        jnp.asarray(rids), tok, cache, keys)
+                        jnp.asarray(rids), tok, cache, keys, *samp())
                     prefill_calls += 1
                     if poison.any():
                         cache = fns["poison"](cache, jnp.asarray(poison))
@@ -1110,7 +1172,8 @@ class ServeEngine:
             # request's first token comes from admit(), not step)
             if sched.live_slots():
                 live_now = sched.live_slots()
-                tok, cache, keys = fns["step"](self.params, tok, cache, keys)
+                tok, cache, keys = fns["step"](self.params, tok, cache, keys,
+                                               *samp())
                 decode_steps += 1
                 if paged:
                     for s in live_now:

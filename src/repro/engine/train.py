@@ -138,6 +138,7 @@ class TrainEngine:
         self._hlo_text = None
         self._step_exec = None        # AOT executable (set by hlo_text)
         self._stream_step = 0         # step index of the next host batch
+        self._ext_steps = {}          # batch-structure -> jitted ext step
 
     # -- plumbing ----------------------------------------------------------
 
@@ -369,6 +370,34 @@ class TrainEngine:
         new["step"] = jax.device_put(np.int32(int(state["step"]) + 1),
                                      self.state_sh["step"])
         return new
+
+    # -- external batches (the RL rollout path) ------------------------------
+
+    def step_external(self, batch) -> Dict[str, float]:
+        """Run ONE jitted train step on an externally built batch instead
+        of the LM loader stream — the rollout loop's policy-gradient path.
+
+        The batch may carry leaves the LM stream does not (``mask``,
+        ``adv``), so the step is jitted once per batch STRUCTURE (sorted
+        keys + shapes + dtypes) through the same ``jit_train_step`` the
+        loader path uses — same plan, same donation, same shardings; pass
+        a custom ``loss_fn=`` at construction to consume the extra leaves
+        (it must return ``(loss, metrics)`` with a ``"loss"`` entry).
+        Advances ``self.state`` and returns the metrics as host floats."""
+        import jax.numpy as jnp
+        from repro.core.trainer import jit_train_step
+        self.build()
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        sig = tuple(sorted((k, v.shape, str(v.dtype))
+                           for k, v in batch.items()))
+        step_fn = self._ext_steps.get(sig)
+        if step_fn is None:
+            step_fn, _, _ = jit_train_step(
+                self.cfg, self.trainer, self.mesh, self.opt, self.state,
+                batch, self.custom_loss_fn)
+            self._ext_steps[sig] = step_fn
+        self.state, metrics = step_fn(self.state, batch)
+        return {k: float(v) for k, v in metrics.items()}
 
     # -- compiled-step access ----------------------------------------------
 

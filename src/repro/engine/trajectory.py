@@ -1,0 +1,130 @@
+"""Trajectory containers for the RL rollout subsystem.
+
+A *trajectory* is one sampled continuation of a prompt plus its scalar
+reward; a *group* is several trajectories of the SAME prompt sampled with
+different seeds (per-request sampling keys through ``ServeEngine.serve``),
+which is what makes a group-relative advantage meaningful: the group mean
+is a zero-parameter baseline, so REINFORCE needs no learned value head.
+
+This module is host-side and jax-free (like ``engine.batching``):
+:class:`RolloutEngine` fills the dataclasses from serve() results and
+:func:`reinforce_batch` packs a list of scored groups into the fixed-shape
+``{"tokens", "targets", "mask", "adv"}`` batch TrainEngine's jitted step
+consumes — sequences are right-padded to one static width so the policy
+gradient step compiles once, and ``mask`` confines the loss to positions
+whose TARGET is a generated (sampled) token: the prompt is conditioning,
+not behaviour, so it carries no gradient.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Trajectory:
+    """One sampled continuation. ``tokens`` are the GENERATED tokens only
+    (the prompt is kept separately); ``logprobs`` are the behaviour
+    policy's per-generated-token log-probabilities (filled by the score
+    phase — the hook for the importance-sampling correction when training
+    on stale weights); ``advantage`` is group-relative, filled by
+    :meth:`TrajectoryGroup.compute_advantages`."""
+    rid: int
+    prompt: np.ndarray                      # [S] int32
+    tokens: np.ndarray                      # [G] int32, generated
+    logprobs: Optional[np.ndarray] = None   # [G] float32, behaviour policy
+    reward: float = 0.0
+    advantage: float = 0.0
+
+    @property
+    def length(self) -> int:
+        """Full sequence length (prompt + generated)."""
+        return len(self.prompt) + len(self.tokens)
+
+    def sequence(self) -> np.ndarray:
+        return np.concatenate([np.asarray(self.prompt, np.int64),
+                               np.asarray(self.tokens, np.int64)])
+
+
+@dataclasses.dataclass
+class TrajectoryGroup:
+    """Trajectories of one shared prompt. The group IS the baseline:
+    ``advantage_i = reward_i - mean(rewards)`` (optionally divided by the
+    group's reward std), so a group whose members all earned the same
+    reward contributes zero gradient — exactly the degenerate case a
+    learned baseline would have to fit."""
+    trajectories: List[Trajectory]
+
+    def __post_init__(self):
+        if not self.trajectories:
+            raise ValueError("a TrajectoryGroup needs >= 1 trajectory")
+
+    def __len__(self) -> int:
+        return len(self.trajectories)
+
+    def __iter__(self):
+        return iter(self.trajectories)
+
+    @property
+    def rewards(self) -> np.ndarray:
+        return np.asarray([t.reward for t in self.trajectories], np.float32)
+
+    @property
+    def mean_reward(self) -> float:
+        return float(self.rewards.mean())
+
+    def compute_advantages(self, *, normalize: bool = True,
+                           eps: float = 1e-6) -> np.ndarray:
+        """Fill each member's ``advantage`` with its group-relative value
+        and return the [len(group)] array. ``normalize`` divides by the
+        group reward std (GRPO-style); the ``eps`` floor keeps an
+        all-equal-reward group at exactly zero advantage instead of 0/0."""
+        r = self.rewards
+        adv = r - r.mean()
+        if normalize:
+            adv = adv / (r.std() + eps)
+        for t, a in zip(self.trajectories, adv):
+            t.advantage = float(a)
+        return adv.astype(np.float32)
+
+
+def reinforce_batch(groups: List[TrajectoryGroup],
+                    pad_to: Optional[int] = None) -> Dict[str, np.ndarray]:
+    """Pack scored groups into the policy-gradient training batch:
+
+        tokens  [B, T] int32   — sequence[:-1] (model input)
+        targets [B, T] int32   — sequence[1:]  (next-token labels)
+        mask    [B, T] float32 — 1 where the TARGET is a generated token
+        adv     [B]    float32 — the trajectory's group-relative advantage
+
+    ``T = pad_to - 1`` when given (a fixed prompt_len + gen keeps the
+    jitted step's shapes static across iterations), else the batch's max
+    sequence length - 1. Short rows are right-padded with zeros and
+    masked out, so padding never contributes loss."""
+    trajs = [t for g in groups for t in g]
+    if not trajs:
+        raise ValueError("reinforce_batch needs >= 1 trajectory")
+    width = max(t.length for t in trajs)
+    if pad_to is not None:
+        if pad_to < width:
+            raise ValueError(f"pad_to={pad_to} < longest sequence {width}")
+        width = pad_to
+    T = width - 1
+    B = len(trajs)
+    tokens = np.zeros((B, T), np.int32)
+    targets = np.zeros((B, T), np.int32)
+    mask = np.zeros((B, T), np.float32)
+    adv = np.zeros((B,), np.float32)
+    for i, t in enumerate(trajs):
+        seq = t.sequence()
+        n = len(seq)
+        tokens[i, :n - 1] = seq[:-1]
+        targets[i, :n - 1] = seq[1:]
+        # target position j predicts seq[j + 1]: generated targets start
+        # where the prompt ends (position len(prompt) - 1 predicts the
+        # first sampled token) and stop at the end of the real sequence
+        mask[i, len(t.prompt) - 1:n - 1] = 1.0
+        adv[i] = t.advantage
+    return {"tokens": tokens, "targets": targets, "mask": mask, "adv": adv}

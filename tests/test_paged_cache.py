@@ -469,3 +469,43 @@ def test_batch_axes_discovered_once_per_engine(dense_engine, monkeypatch):
     a1 = dense_engine._batch_axes(init)
     a2 = dense_engine._batch_axes(init)
     assert calls["n"] == 1 and a1 is a2
+
+
+def test_sleep2_wake_on_shared_prefix_under_preemption_storm():
+    """Satellite: a preemption storm at sleep level 2 (discard +
+    re-prefill) hitting rows whose PREFIX BLOCKS ARE SHARED. A preempted
+    row drops its references and its wake re-admits through the prefix
+    registry — the round-trip must neither corrupt the shared blocks nor
+    leak a reference: refcounts drain to zero and every co-resident's
+    stream is bitwise identical to an unpressured pool's."""
+    rng = np.random.default_rng(23)
+    prefix = _prompt(rng, 12)
+    suffixes = [_prompt(rng, 4) for _ in range(4)]
+
+    def reqs():
+        return [Request(rid=i,
+                        prompt=np.concatenate([prefix, suffixes[i]]),
+                        max_gen=12)
+                for i in range(4)]
+
+    tiny = ServeEngine(SPEC, prompt_len=16, gen=12, paged=True,
+                       kv_block_size=4, kv_pool_blocks=14,
+                       sleep_level=2, verbose=False)
+    res = tiny.serve(reqs(), max_slots=4, max_steps=800)
+    pg = res["metrics"]["paging"]
+    assert res["metrics"]["status_counts"] == {"ok": 4}
+    assert pg["preemptions"] > 0, "workload too tame: no pool pressure"
+    assert pg["offloads"] == 0 and pg["wakes"] > 0    # level 2: discard only
+    assert pg["prefix_hit_rate"] > 0, "prefixes were never shared"
+
+    big = ServeEngine(SPEC, prompt_len=16, gen=12, paged=True,
+                      kv_block_size=4, verbose=False)
+    ref = big.serve(reqs(), max_slots=4)
+    assert ref["metrics"]["paging"]["preemptions"] == 0
+    assert _tokens(res) == _tokens(ref), \
+        "level-2 wake on shared prefixes diverged"
+
+    pool = tiny._paged_state["pool"]
+    assert pool.blocks_in_use() == 0 and (pool.ref == 0).all()
+    assert not pool.pending
+    pool.audit()
