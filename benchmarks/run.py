@@ -122,17 +122,18 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: table1,table2,fig3,fig4,roofline,attn,"
-                         "decode,ssm,rollout")
+                         "decode,ssm,rollout,elastic")
     args = ap.parse_args(argv)
 
-    from benchmarks import (attn_bench, decode_bench, fig3_loss, fig4_memory,
-                            roofline_bench, rollout_bench, ssm_bench,
-                            table1_comm, table2_convergence)
+    from benchmarks import (attn_bench, decode_bench, elastic_bench,
+                            fig3_loss, fig4_memory, roofline_bench,
+                            rollout_bench, ssm_bench, table1_comm,
+                            table2_convergence)
     mods = {"table1": table1_comm, "table2": table2_convergence,
             "fig3": fig3_loss, "fig4": fig4_memory,
             "roofline": roofline_bench, "attn": attn_bench,
             "decode": decode_bench, "ssm": ssm_bench,
-            "rollout": rollout_bench}
+            "rollout": rollout_bench, "elastic": elastic_bench}
     only = args.only.split(",") if args.only else list(mods)
 
     print("name,us_per_call,derived")

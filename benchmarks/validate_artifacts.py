@@ -15,7 +15,11 @@ still carries the fields the tooling reads:
   * ``benchmarks/artifacts/rollout_bench.json`` (when present) — the RL
     rollout loop records: per-plan phase timings (all four phases
     present), generation tok/s, and a reward curve that must RISE —
-    a flat or falling curve means the policy-gradient step broke.
+    a flat or falling curve means the policy-gradient step broke;
+  * ``benchmarks/artifacts/elastic_bench.json`` (when present) — the
+    rank-death recovery records for dp AND zero_cdp: steps lost bounded
+    by the snapshot interval, positive recovery wall-clock, finite
+    post-recovery loss, and a restore source the engine actually has.
 
     PYTHONPATH=src python -m benchmarks.validate_artifacts
 
@@ -67,6 +71,19 @@ ROLLOUT_KEYS = {"arch": str, "plan": str, "iters": int, "groups": int,
                 "phase_s": dict, "compile_iter_s": numbers.Real,
                 "reward_curve": list, "final_loss": numbers.Real}
 ROLLOUT_PHASES = ("generate", "score", "train", "push")
+
+# Elastic recovery records (``elastic_bench.json``, one per plan scenario).
+# Semantic gates beyond the keys: steps_lost must sit inside
+# [0, snapshot_every] (more means the buddy snapshot was not the restore
+# point it claims to be), recovery_s must be positive wall-clock, the
+# post-recovery final loss must be finite, and both the dp and zero_cdp
+# scenarios must be present — a regression that breaks recovery on the
+# ring but not on dp still fails here.
+ELASTIC_KEYS = {"arch": str, "plan": str, "n_ranks": int, "dead_rank": int,
+                "fail_step": int, "recover_step": int, "steps_lost": int,
+                "recovery_s": numbers.Real, "snapshot_s_mean": numbers.Real,
+                "snapshot_bytes": int, "snapshot_every": int,
+                "source": str, "final_loss": numbers.Real}
 
 
 def _check_keys(rec, schema, where, errors):
@@ -172,6 +189,37 @@ def validate(errors=None):
                               f"run (plan {rec.get('plan')!r} got {curve!r}"
                               f" — the policy-gradient step is not "
                               f"learning)")
+    el_path = os.path.join(_ART, "elastic_bench.json")
+    if os.path.exists(el_path):          # conditional: landed with the
+        with open(el_path) as f:         # elastic subsystem, absent before
+            els = json.load(f)
+        if not isinstance(els, list) or not els:
+            errors.append("elastic_bench.json: expected a non-empty list")
+            els = []
+        import math
+        for i, rec in enumerate(els):
+            where = f"elastic_bench.json[{i}]"
+            _check_keys(rec, ELASTIC_KEYS, where, errors)
+            lost, every = rec.get("steps_lost"), rec.get("snapshot_every")
+            if isinstance(lost, int) and isinstance(every, int) \
+                    and not 0 <= lost <= every:
+                errors.append(f"{where}: steps_lost {lost} outside "
+                              f"[0, snapshot_every={every}] — the restore "
+                              f"point was not the newest snapshot")
+            rs = rec.get("recovery_s")
+            if isinstance(rs, numbers.Real) and rs <= 0:
+                errors.append(f"{where}: recovery_s {rs!r} must be positive")
+            fl = rec.get("final_loss")
+            if isinstance(fl, numbers.Real) and not math.isfinite(fl):
+                errors.append(f"{where}: post-recovery final_loss {fl!r} "
+                              f"is not finite")
+            if rec.get("source") not in ("snapshot", "checkpoint"):
+                errors.append(f"{where}: source {rec.get('source')!r} is "
+                              f"neither 'snapshot' nor 'checkpoint'")
+        plans = {r.get("plan") for r in els}
+        if els and not plans >= {"dp", "zero_cdp"}:
+            errors.append("elastic_bench.json: records must cover both the "
+                          f"'dp' and 'zero_cdp' scenarios (got {plans})")
     return errors
 
 
@@ -181,8 +229,9 @@ def main() -> int:
         for e in errors:
             print(f"SCHEMA ERROR: {e}", file=sys.stderr)
         return 1
-    extra = (" + rollout_bench.json" if os.path.exists(
-        os.path.join(_ART, "rollout_bench.json")) else "")
+    extra = "".join(f" + {name}" for name in
+                    ("rollout_bench.json", "elastic_bench.json")
+                    if os.path.exists(os.path.join(_ART, name)))
     print("benchmark artifact schemas OK "
           f"(BENCH_kernels.json + decode_bench.json{extra})")
     return 0

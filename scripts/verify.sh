@@ -15,6 +15,9 @@
 #                                       # + a seeded chaos train smoke
 #     bash scripts/verify.sh rollout    # RL rollout loop smokes (dp +
 #                                       # zero_cdp): reward must rise
+#     bash scripts/verify.sh elastic    # elastic membership: kill-at-step-k
+#                                       # recover smokes (dp + zero_cdp)
+#                                       # + the elastic unit tests
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -110,6 +113,28 @@ run_rollout() {
         --host-devices 2
 }
 
+run_elastic() {
+    echo "=== elastic: unit layer (snapshots, watchdog, re-cut) ==="
+    python -m pytest -x -q tests/test_elastic.py \
+        -k "not recovery and not watchdog and not rejoin and not falls_back and not shrink_mesh"
+
+    echo "=== elastic smoke: dp rank death at step 3, re-form 2 -> 1 ==="
+    # kill rank 1 mid-run; the engine restores the step-2 buddy snapshot,
+    # re-forms the mesh on the survivor, and finishes all 6 steps
+    python -m repro.launch.train --arch stablelm-1.6b --reduced \
+        --steps 6 --batch 4 --seq 16 --mesh-data 2 --mesh-model 1 \
+        --host-devices 2 --log-every 1 --elastic --snapshot-every 2 \
+        --resilience rank_down@3:1
+
+    echo "=== elastic smoke: zero_cdp rank death, ring re-forms 3 -> 2 ==="
+    # the stage-sharded masters are re-cut to the N-1 layout; the re-formed
+    # step stays permute-only (asserted by tests/test_elastic.py in CI)
+    python -m repro.launch.train --arch stablelm-1.6b --reduced \
+        --plan zero_cdp --steps 6 --batch 6 --seq 16 --mesh-data 3 \
+        --mesh-model 1 --host-devices 3 --log-every 1 --elastic \
+        --snapshot-every 2 --resilience rank_down@3:1
+}
+
 target="${1:-all}"
 case "$target" in
     tests)   run_tests ;;
@@ -118,9 +143,10 @@ case "$target" in
     serve)   run_serve ;;
     chaos)   run_chaos ;;
     rollout) run_rollout ;;
-    all)     run_tests; run_train; run_kernels; run_serve; run_chaos; run_rollout ;;
+    elastic) run_elastic ;;
+    all)     run_tests; run_train; run_kernels; run_serve; run_chaos; run_rollout; run_elastic ;;
     *)
-        echo "unknown target '$target' (expected tests|train|kernels|serve|chaos|rollout|all)" >&2
+        echo "unknown target '$target' (expected tests|train|kernels|serve|chaos|rollout|elastic|all)" >&2
         exit 2
         ;;
 esac

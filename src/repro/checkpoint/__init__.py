@@ -1,7 +1,7 @@
-from repro.checkpoint.io import (gc_old_steps, intact_steps,
+from repro.checkpoint.io import (MemorySnapshot, gc_old_steps, intact_steps,
                                  latest_intact_step, latest_step, list_steps,
                                  restore, save, sweep_tmp, verify_step)
 
-__all__ = ["gc_old_steps", "intact_steps", "latest_intact_step",
-           "latest_step", "list_steps", "restore", "save", "sweep_tmp",
-           "verify_step"]
+__all__ = ["MemorySnapshot", "gc_old_steps", "intact_steps",
+           "latest_intact_step", "latest_step", "list_steps", "restore",
+           "save", "sweep_tmp", "verify_step"]

@@ -17,13 +17,14 @@ swept on the next save.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import re
 import time
 import warnings
 import zlib
-from typing import Any, Callable, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -33,16 +34,40 @@ _SEP = "/"
 MANIFEST_FORMAT = 1
 
 
+def _flat_key(path) -> str:
+    """The flat-dict key for one ``tree_flatten_with_path`` path — shared
+    by the npz writer, the loader, and the in-memory snapshots, so all
+    three address leaves identically."""
+    return _SEP.join(
+        str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
 def _flatten(tree: PyTree):
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = _SEP.join(
-            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
         arr = np.asarray(leaf)
         if arr.dtype.name == "bfloat16":      # npz has no bf16; restore()
             arr = arr.astype(np.float32)      # casts back via the template
-        flat[key] = arr
+        flat[_flat_key(path)] = arr
     return flat
+
+
+def _fsync_path(path: str) -> None:
+    """fsync a committed file AND its directory entry. ``os.replace`` is
+    atomic against a crash of THIS process, but neither the renamed file's
+    blocks nor the directory entry are durable across power loss until
+    both are fsynced — without the directory fsync the rename itself can
+    vanish, leaving the manifest pointing at the previous npz."""
+    fd = os.open(path, os.O_RDONLY)
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+    dfd = os.open(os.path.dirname(path) or ".", os.O_RDONLY)
+    try:
+        os.fsync(dfd)
+    finally:
+        os.close(dfd)
 
 
 def _step_path(ckpt_dir: str, step: int) -> str:
@@ -104,6 +129,7 @@ def save(ckpt_dir: str, step: int, tree: PyTree, *,
                               f"attempt {attempt})")
             np.savez(tmp, **flat)
             os.replace(tmp, path)
+            _fsync_path(path)
             manifest = {"format": MANIFEST_FORMAT, "step": step,
                         "file": os.path.basename(path),
                         "crc32": _crc32(path),
@@ -112,6 +138,7 @@ def save(ckpt_dir: str, step: int, tree: PyTree, *,
             with open(mtmp, "w") as f:
                 json.dump(manifest, f)
             os.replace(mtmp, _manifest_path(ckpt_dir, step))
+            _fsync_path(_manifest_path(ckpt_dir, step))
             last_err = None
             break
         except OSError as e:
@@ -197,9 +224,7 @@ def _load_tree(path: str, template: PyTree) -> PyTree:
     paths, treedef = jax.tree_util.tree_flatten_with_path(template)
     leaves = []
     for p, leaf in paths:
-        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
-                        for k in p)
-        arr = data[key]
+        arr = data[_flat_key(p)]
         if hasattr(leaf, "dtype"):
             arr = arr.astype(leaf.dtype)
         leaves.append(arr)
@@ -253,3 +278,65 @@ def restore(ckpt_dir: str, template: PyTree, step: Optional[int] = None,
     raise FileNotFoundError(
         f"no intact checkpoints in {ckpt_dir} (all of {steps} failed "
         f"verification)")
+
+
+# ---------------------------------------------------------------------------
+# In-memory snapshots (elastic CDP's buddy store)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MemorySnapshot:
+    """One committed step parked in host RAM instead of on disk: the same
+    flat-key layout as the npz (``_flatten``) and the same integrity
+    contract as the manifest, but with a per-array CRC32 so a single
+    corrupted buffer is detected without hashing the whole state.
+    ``restore`` mirrors ``_load_tree``: template-keyed, casting each array
+    back to the template leaf's dtype (bf16 round-trips through f32
+    exactly, as on disk). Elastic recovery uses these as the zero-IO fast
+    path; ``checkpoint.restore`` stays the disk fallback."""
+
+    step: int
+    arrays: Dict[str, np.ndarray]
+    crc32: Dict[str, int]
+
+    @classmethod
+    def from_flat(cls, step: int, flat: Dict[str, np.ndarray]
+                  ) -> "MemorySnapshot":
+        arrays = {k: np.array(v, copy=True) for k, v in flat.items()}
+        return cls(step=int(step), arrays=arrays,
+                   crc32={k: zlib.crc32(v.tobytes())
+                          for k, v in arrays.items()})
+
+    @classmethod
+    def from_tree(cls, step: int, tree: PyTree) -> "MemorySnapshot":
+        return cls.from_flat(step, _flatten(tree))
+
+    def verify(self) -> Tuple[bool, str]:
+        """(intact, reason) — the in-memory analogue of ``verify_step``."""
+        for k, v in self.arrays.items():
+            if k not in self.crc32:
+                return False, f"no checksum for {k!r}"
+            if zlib.crc32(v.tobytes()) != self.crc32[k]:
+                return False, f"crc32 mismatch at {k!r}"
+        return True, "ok"
+
+    def restore(self, template: PyTree) -> PyTree:
+        """Rebuild the pytree onto ``template``'s structure and dtypes.
+        Strict like an explicit-step disk restore: a failed checksum
+        raises rather than silently handing back corrupt state."""
+        intact, reason = self.verify()
+        if not intact:
+            raise ValueError(f"memory snapshot (step {self.step}) is not "
+                             f"intact: {reason}")
+        paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+        leaves = []
+        for p, leaf in paths:
+            arr = self.arrays[_flat_key(p)]
+            if hasattr(leaf, "dtype"):
+                arr = arr.astype(leaf.dtype)
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(v.nbytes for v in self.arrays.values())

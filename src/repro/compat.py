@@ -41,6 +41,23 @@ def make_mesh(axis_shapes, axis_names):
     return jax.make_mesh(axis_shapes, axis_names)
 
 
+def mesh_from_devices(devices, axis_names):
+    """Mesh over an EXPLICIT device ndarray with the same Auto axis types
+    as :func:`make_mesh`. ``jax.make_mesh`` picks its own devices; the
+    elastic re-formation path instead keeps the survivors' grid (so their
+    resident shards stay where they are) and only drops the dead rank's
+    row."""
+    axis_type = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+    if axis_type is not None:
+        try:
+            return jax.sharding.Mesh(
+                devices, axis_names,
+                axis_types=(axis_type,) * len(axis_names))
+        except TypeError:
+            pass
+    return jax.sharding.Mesh(devices, axis_names)
+
+
 def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
               check_vma=False):
     """``jax.shard_map`` on both new and 0.4.x jax.

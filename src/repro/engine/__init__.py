@@ -11,8 +11,9 @@ from repro.engine.spec import RunSpec
 __all__ = ["RunSpec", "TrainEngine", "ServeEngine", "RolloutEngine",
            "Trajectory", "TrajectoryGroup", "reinforce_batch", "Request",
            "poisson_trace", "Fault", "FaultInjector", "EventLog",
-           "HealthGuard", "parse_faults", "BlockPool", "PoolExhausted",
-           "Parked"]
+           "HealthGuard", "StepWatchdog", "parse_faults", "BlockPool",
+           "PoolExhausted", "Parked", "BuddySnapshotStore",
+           "SnapshotUnusable"]
 
 
 def __getattr__(name):
@@ -38,8 +39,12 @@ def __getattr__(name):
         from repro.engine import paging
         return getattr(paging, name)
     if name in ("Fault", "FaultInjector", "EventLog", "HealthGuard",
-                "parse_faults"):
+                "StepWatchdog", "parse_faults"):
         # resilience layer (jax-free import, like RunSpec)
         from repro.engine import resilience
         return getattr(resilience, name)
+    if name in ("BuddySnapshotStore", "SnapshotUnusable"):
+        # elastic membership's buddy snapshot store
+        from repro.engine import elastic
+        return getattr(elastic, name)
     raise AttributeError(f"module 'repro.engine' has no attribute {name!r}")

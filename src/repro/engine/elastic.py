@@ -1,0 +1,172 @@
+"""Elastic CDP: buddy-replicated host-RAM snapshots for rank-failure
+recovery.
+
+The paper's ZeRO-CDP layout (Sec. 4.4) makes each data rank the
+persistent owner of one stage chunk of the f32 masters — which means a
+dead rank takes a unique 1/N of the training state with it. The classic
+answer is a disk checkpoint; the elastic answer here is cheaper and
+loses less: every ``snapshot_every`` steps each rank parks its own chunk
+in host RAM and mirrors a copy to its RING PREDECESSOR (the rank that
+already talks to it every tick, so on a real deployment the mirror rides
+the existing point-to-point channel). Any SINGLE rank death is then
+recoverable from memory — rank r's chunk survives either as r's primary
+or as the mirror held by rank (r-1) mod N — and recovery loses at most
+``snapshot_every`` steps without touching disk. Two ADJACENT deaths (a
+chunk losing both its primary and its mirror holder) raise
+:class:`SnapshotUnusable` and the engine falls back to
+``checkpoint.restore``'s newest-intact walk.
+
+For tree-layout plans (dp / cdp_v1 / cdp_v2) the state is replicated, so
+the "snapshot" is one full copy per rank and ANY survivor can restore
+alone — same API, trivially stronger guarantee.
+
+This is a single-process simulation of per-rank host memory (matching
+the repo's forced-host-device meshes): the store keys snapshots by rank
+and models a death by discarding that rank's holdings. The integrity
+story is shared with the disk path — each shard is a
+``checkpoint.MemorySnapshot`` with per-array CRC32s, the in-memory
+analogue of the manifest.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Set
+
+import numpy as np
+
+from repro.checkpoint import io as ckpt_io
+
+PyTree = Any
+
+
+class SnapshotUnusable(RuntimeError):
+    """The buddy store cannot reassemble a consistent state (no snapshot
+    taken yet, a chunk lost both its primary and its mirror holder, or a
+    checksum failed). The engine's next resort is the disk checkpoint."""
+
+
+class BuddySnapshotStore:
+    """Per-rank host-RAM snapshot storage with ring-buddy replication.
+
+    ``take(step, state)`` splits a host-side train state across ``n``
+    simulated rank memories:
+
+      * ``chunked=True`` (stage-sharded plans): every ``[n, chunk]`` leaf
+        is cut by row — rank r keeps row r of each as its PRIMARY shard
+        plus every replicated scalar (``step`` etc.), and additionally
+        holds a MIRROR of rank ``(r+1) % n``'s shard (i.e. each rank
+        mirrors its chunk to its ring predecessor);
+      * ``chunked=False`` (replicated plans): every rank keeps one full
+        copy; mirrors would be redundant and are skipped.
+
+    ``fail(r)`` models rank r's process dying with its host memory.
+    ``assemble(template)`` rebuilds ``(state, step)`` from surviving
+    primaries + mirrors, verifying every shard's CRC32s, or raises
+    :class:`SnapshotUnusable`.
+    """
+
+    def __init__(self, n: int, chunked: bool):
+        if n < 1:
+            raise ValueError(f"need >= 1 rank, got {n}")
+        self.n = int(n)
+        self.chunked = bool(chunked)
+        self.step: Optional[int] = None
+        self.failed: Set[int] = set()
+        self._own: Dict[int, ckpt_io.MemorySnapshot] = {}
+        self._mirror: Dict[int, ckpt_io.MemorySnapshot] = {}
+        self._chunk_keys: Set[str] = set()
+
+    @property
+    def nbytes(self) -> int:
+        """Total host RAM parked across all ranks (primaries + mirrors)."""
+        return (sum(s.nbytes for s in self._own.values())
+                + sum(s.nbytes for s in self._mirror.values()))
+
+    def take(self, step: int, state: PyTree) -> None:
+        """Park a consistent snapshot of ``state`` (a host tree, taken at
+        a step boundary) across the surviving ranks' memories. Replaces
+        the previous snapshot — each rank holds exactly one step."""
+        flat = ckpt_io._flatten(state)
+        if self.chunked:
+            self._chunk_keys = {k for k, v in flat.items()
+                                if v.ndim == 2 and v.shape[0] == self.n}
+            if not self._chunk_keys:
+                raise ValueError(
+                    f"chunked snapshot mode but no [{self.n}, chunk] "
+                    "leaves in the state")
+        else:
+            self._chunk_keys = set()
+        self._own.clear()
+        self._mirror.clear()
+        for r in range(self.n):
+            if r in self.failed:
+                continue
+            shard = {k: (v[r] if k in self._chunk_keys else v)
+                     for k, v in flat.items()}
+            self._own[r] = ckpt_io.MemorySnapshot.from_flat(step, shard)
+        if self.chunked:
+            for r in range(self.n):
+                succ = (r + 1) % self.n
+                if r in self.failed or succ not in self._own:
+                    continue
+                self._mirror[r] = ckpt_io.MemorySnapshot.from_flat(
+                    step, self._own[succ].arrays)
+        self.step = int(step)
+
+    def fail(self, rank: int) -> None:
+        """Rank ``rank`` died: everything parked in its host memory (its
+        primary shard AND the mirror it held for its ring successor) is
+        gone."""
+        if not 0 <= rank < self.n:
+            raise ValueError(f"rank {rank} outside 0..{self.n - 1}")
+        self.failed.add(int(rank))
+        self._own.pop(rank, None)
+        self._mirror.pop(rank, None)
+
+    def _shard(self, rank: int) -> ckpt_io.MemorySnapshot:
+        """Rank ``rank``'s chunk shard: its primary, else the mirror its
+        ring predecessor holds. CRC-verified either way."""
+        snap, where = self._own.get(rank), "primary"
+        if snap is None:
+            snap, where = self._mirror.get((rank - 1) % self.n), "mirror"
+        if snap is None:
+            raise SnapshotUnusable(
+                f"rank {rank}'s chunk is unrecoverable: its primary died "
+                f"and its mirror holder (ring predecessor "
+                f"{(rank - 1) % self.n}) is down too")
+        intact, reason = snap.verify()
+        if not intact:
+            raise SnapshotUnusable(
+                f"rank {rank}'s {where} shard failed verification: {reason}")
+        return snap
+
+    def assemble(self, template: PyTree):
+        """``(state, step)`` reassembled at the ORIGINAL n-rank layout
+        (the caller re-cuts for the survivor ring afterwards).
+        ``template`` supplies tree structure + dtypes, never values — it
+        may be a ``ShapeDtypeStruct`` tree."""
+        if self.step is None:
+            raise SnapshotUnusable("no snapshot has been taken yet")
+        if not self.chunked:
+            reasons = []
+            for r in range(self.n):
+                snap = self._own.get(r)
+                if snap is None:
+                    continue
+                intact, reason = snap.verify()
+                if not intact:
+                    reasons.append(f"rank {r}: {reason}")
+                    continue
+                return snap.restore(template), self.step
+            raise SnapshotUnusable(
+                "no surviving intact replica"
+                + (f" ({'; '.join(reasons)})" if reasons else ""))
+        shards = {r: self._shard(r) for r in range(self.n)}
+        flat = {}
+        for k in shards[min(shards)].arrays:
+            if k in self._chunk_keys:
+                flat[k] = np.stack([shards[r].arrays[k]
+                                    for r in range(self.n)])
+            else:
+                flat[k] = shards[min(shards)].arrays[k]
+        snap = ckpt_io.MemorySnapshot.from_flat(self.step, flat)
+        return snap.restore(template), self.step

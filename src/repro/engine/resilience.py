@@ -19,9 +19,12 @@ Three framework-light pieces shared by :class:`TrainEngine`,
     skipped micro-batch step is just another bounded delay (PipeDream's
     weight stashing makes the same observation for rollback).
   * :class:`EventLog` — the structured ``engine.events`` record of every
-    inject / skip / rollback / retry / quarantine, append-only, queryable
-    by kind. This is the audit trail SLO-aware admission (ROADMAP
-    direction 2) will consume.
+    inject / skip / rollback / retry / quarantine, queryable by kind and
+    optionally bounded (``max_events`` ring buffer). This is the audit
+    trail SLO-aware admission (ROADMAP direction 2) will consume.
+  * :class:`StepWatchdog` — a wall-clock per-step deadline that classifies
+    a step exceeding it as a hung collective (a presumed-dead ring peer)
+    and lets the engine route it into the elastic rank-down recovery path.
 
 This module imports no jax at module scope (like ``engine.spec`` and
 ``engine.batching``) so launchers can parse ``--resilience`` specs before
@@ -29,10 +32,11 @@ device state exists.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import json
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -47,6 +51,9 @@ SITES = (
     "ckpt_truncate",   # newest checkpoint file truncated after save
     "ckpt_io",         # save's write raises OSError for `arg` attempts
     "poison_request",  # serve request `rid` poisons its cache rows to NaN
+    "rank_down",       # data-rank `arg` dies before a step (elastic CDP)
+    "step_hang",       # step stalls `arg` seconds: a hung collective, as
+                       # seen by the StepWatchdog (presumed-dead peer)
 )
 
 
@@ -148,20 +155,33 @@ class FaultInjector:
 
 
 class EventLog:
-    """Append-only structured log: every skip / rollback / retry /
-    quarantine the resilience layer performs is one dict with at least
-    ``kind``, ``step`` and a monotonic timestamp ``t`` (``time.monotonic``
-    seconds — ordering and phase durations are meaningful within one
-    process; absolute values are not wall-clock). Engines expose it as
-    ``engine.events``; :meth:`to_jsonl` exports the log for offline audit
-    (rollout phase boundaries, chaos replays)."""
+    """Structured log: every skip / rollback / retry / quarantine the
+    resilience layer performs is one dict with at least ``kind``, ``step``
+    and a monotonic timestamp ``t`` (``time.monotonic`` seconds — ordering
+    and phase durations are meaningful within one process; absolute values
+    are not wall-clock). Engines expose it as ``engine.events``;
+    :meth:`to_jsonl` exports the log for offline audit (rollout phase
+    boundaries, chaos replays).
 
-    def __init__(self):
-        self.records: List[Dict[str, Any]] = []
+    ``max_events`` bounds memory for long serve/rollout runs: the log
+    becomes a ring buffer keeping the NEWEST ``max_events`` records and
+    counting evictions in ``dropped``. The default (None) is unbounded —
+    the historical append-only behavior."""
+
+    def __init__(self, max_events: Optional[int] = None):
+        if max_events is not None and max_events < 1:
+            raise ValueError(f"max_events must be >= 1, got {max_events}")
+        self.max_events = max_events
+        self.records: Deque[Dict[str, Any]] = collections.deque(
+            maxlen=max_events)
+        self.dropped = 0
 
     def append(self, kind: str, step: int, **detail) -> Dict[str, Any]:
         rec = {"kind": kind, "step": int(step), "t": time.monotonic(),
                **detail}
+        if self.max_events is not None and \
+                len(self.records) == self.max_events:
+            self.dropped += 1             # deque evicts the oldest record
         self.records.append(rec)
         return rec
 
@@ -170,8 +190,11 @@ class EventLog:
 
     def to_jsonl(self, path) -> int:
         """Write one JSON object per record to ``path`` (non-JSON detail
-        values are stringified rather than dropped). Returns the number of
-        records written."""
+        values are stringified rather than dropped). When the ring buffer
+        has evicted records, the FIRST line is a ``events_dropped`` header
+        carrying the drop count, so a reader can tell a short run from a
+        truncated one; an un-dropped log exports exactly ``len(self)``
+        lines. Returns the number of lines written."""
         def _default(o):
             if isinstance(o, (np.integer,)):
                 return int(o)
@@ -181,10 +204,19 @@ class EventLog:
                 return o.tolist()
             return str(o)
 
+        lines = 0
         with open(path, "w") as f:
+            if self.dropped > 0:
+                header = {"kind": "events_dropped", "step": -1,
+                          "dropped": self.dropped,
+                          "kept": len(self.records),
+                          "max_events": self.max_events}
+                f.write(json.dumps(header) + "\n")
+                lines += 1
             for rec in self.records:
                 f.write(json.dumps(rec, default=_default) + "\n")
-        return len(self.records)
+                lines += 1
+        return lines
 
     def __len__(self):
         return len(self.records)
@@ -232,6 +264,42 @@ class HealthGuard:
         loss is the new normal)."""
         self.ema = None
         self.healthy_steps = 0
+
+
+class StepWatchdog:
+    """Wall-clock deadline per training step. A step that blows past its
+    deadline is, on a ring topology, indistinguishable from a peer that
+    died mid-collective — the permute never completes, every survivor
+    blocks. ``arm(step)`` starts the clock before dispatch; ``expired()``
+    after the step's results materialize returns the elapsed seconds when
+    the deadline was exceeded (else None), and the engine routes that
+    verdict into the same rank-down recovery path as an explicit
+    ``rank_down`` fault. Pure host-side bookkeeping (no jax, no threads):
+    the engine decides when to block on device results and when to check.
+    """
+
+    def __init__(self, timeout_s: float):
+        if timeout_s <= 0:
+            raise ValueError(f"watchdog timeout must be > 0, got {timeout_s}")
+        self.timeout_s = float(timeout_s)
+        self.step: Optional[int] = None
+        self._armed_at: Optional[float] = None
+
+    def arm(self, step: int) -> None:
+        self.step = int(step)
+        self._armed_at = time.monotonic()
+
+    def expired(self) -> Optional[float]:
+        """Elapsed seconds since :meth:`arm` if over the deadline, else
+        None. Disarmed (never armed / after :meth:`disarm`) is never
+        expired."""
+        if self._armed_at is None:
+            return None
+        elapsed = time.monotonic() - self._armed_at
+        return elapsed if elapsed > self.timeout_s else None
+
+    def disarm(self) -> None:
+        self._armed_at = None
 
 
 # ---------------------------------------------------------------------------

@@ -109,6 +109,10 @@ class RolloutEngine:
                  normalize_adv: bool = True,
                  reward_target: Optional[int] = None,
                  reward_width: Optional[int] = None,
+                 resilience=None,              # FaultInjector | spec | None
+                 guard: Optional[bool] = None,  # None = on iff resilience
+                 guard_spike_factor: float = 10.0,
+                 max_events: Optional[int] = None,
                  verbose: bool = True):
         spec.ensure_host_devices()
         self.spec = spec
@@ -149,7 +153,17 @@ class RolloutEngine:
                               else reward_width)
         self.reward_fn = reward_fn
         self.verbose = verbose
-        self.events = rsl.EventLog()
+        # chaos wiring (mirrors TrainEngine): one injector shared with the
+        # inner ServeEngine (same seed, same charge accounting), plus a
+        # loop-level health guard — a NaN policy-gradient step must skip
+        # its update WITHOUT pushing corrupted weights to serve
+        self.injector = rsl.FaultInjector.from_spec(resilience,
+                                                    seed=spec.seed)
+        if guard is None:
+            guard = self.injector is not None
+        self.guard = rsl.HealthGuard(spike_factor=guard_spike_factor) \
+            if guard else None
+        self.events = rsl.EventLog(max_events=max_events)
         self.history: List[Dict[str, Any]] = []
         self.train = None
         self.serve = None
@@ -184,11 +198,15 @@ class RolloutEngine:
             lr_schedule=lambda s: self.lr,    # no warmup: every rollout
             loss_fn=reinforce_loss_fn(self.cfg),  # iteration trains at lr
             data_tokens=max(4096, 2 * self.B * (T + 2)),
-            log_every=10 ** 9, verbose=False)
+            log_every=10 ** 9,
+            # the guard-skip reuses the pre-step state, so its buffers
+            # must survive the step (TrainEngine defaults donate=True)
+            donate=self.guard is None, verbose=False)
         self.serve = ServeEngine(
             self.spec, batch=self.B, prompt_len=self.prompt_len,
             gen=self.gen, temperature=self.temperature, paged=True,
-            kv_block_size=self.kv_block_size, verbose=False)
+            kv_block_size=self.kv_block_size,
+            resilience=self.injector, verbose=False)
         self.train.build()
         self.serve.build()
         # commit the serve params replicated over the TRAIN mesh once, so
@@ -309,6 +327,46 @@ class RolloutEngine:
         with jax.transfer_guard("disallow"):
             self.serve.params = self._push_exec(src, self.serve.params)
 
+    # -- chaos (train-phase faults + guard) ----------------------------------
+
+    def _inject_train_faults(self, it: int, metrics):
+        """Train-phase fault injection, keyed by ITERATION index: like
+        TrainEngine's nan_loss site, a fired fault poisons the landed
+        update AND the reported loss — an unguarded loop would push NaN
+        weights to serve."""
+        if self.injector is None:
+            return metrics
+        f = self.injector.fires("nan_loss", it)
+        if f is not None:
+            import jax
+            import jax.numpy as jnp
+            poison = lambda x: x * jnp.nan \
+                if jnp.issubdtype(x.dtype, jnp.inexact) else x
+            st = dict(self.train.state)
+            st["params"] = jax.tree.map(poison, st["params"])
+            self.train.state = st
+            metrics = dict(metrics)
+            metrics["loss"] = float("nan")
+            self.events.append("inject", it, site="nan_loss")
+        return metrics
+
+    def _guard_verdict(self, it: int, metrics, prev_state) -> bool:
+        """Health-check the train step; on a bad verdict restore the
+        pre-step state (step counter still advances — the same legal
+        bounded delay as TrainEngine's skip) and report True so the push
+        phase leaves serve's weights untouched."""
+        if self.guard is None:
+            return False
+        verdict = self.guard.check(float(metrics["loss"]))
+        if verdict == "ok":
+            return False
+        self.train.state = self.train._bump_step(prev_state)
+        self.events.append("skip", it, reason=verdict,
+                           loss=float(metrics["loss"]))
+        self._log(f"rollout iter {it}: {verdict} loss "
+                  f"({metrics['loss']}) — skipping update and push")
+        return True
+
     # -- the loop ----------------------------------------------------------
 
     def iteration(self, it: int) -> Dict[str, Any]:
@@ -343,21 +401,28 @@ class RolloutEngine:
         self.serve.pool_sleep(level=2)
         occ = self.pool_occupancy()
         assert occ == 0, f"pool still holds {occ} blocks during train"
+        prev_state = self.train.state if self.guard is not None else None
         metrics = self.train.step_external(batch)
+        metrics = self._inject_train_faults(it, metrics)
+        skipped = self._guard_verdict(it, metrics, prev_state)
         phase_s["train"] = time.monotonic() - t0
         self.events.append("phase", it, phase="train",
                            dur_s=phase_s["train"], loss=metrics["loss"])
 
+        # push phase: a skipped train step pushes NOTHING — serve keeps the
+        # last healthy params; the pool still wakes on the next generate
         t0 = time.monotonic()
-        self.push_weights()
+        if not skipped:
+            self.push_weights()
         phase_s["push"] = time.monotonic() - t0
         self.events.append("phase", it, phase="push",
-                           dur_s=phase_s["push"])
+                           dur_s=phase_s["push"], skipped=skipped)
 
         rewards = np.asarray([g.mean_reward for g in groups])
         rec = {"iter": it,
                "mean_reward": float(rewards.mean()),
                "group_rewards": [float(r) for r in rewards],
+               "skipped": skipped,
                "loss": float(metrics["loss"]),
                "pg": float(metrics.get("pg", metrics["loss"])),
                "gen_tokens": gen_tokens,

@@ -120,3 +120,32 @@ class RunSpec:
     def build_mesh(self):
         from repro.launch.mesh import make_host_mesh
         return make_host_mesh(self.mesh_data, self.mesh_model, self.mesh_pod)
+
+
+def shrink_mesh(mesh, dead_rank: int, data_axis: str = "data"):
+    """The survivor mesh after data-rank ``dead_rank`` dies: its row of
+    model devices is deleted from the device grid, every surviving rank
+    keeps its devices (their resident shards stay valid), and ranks above
+    the dead one renumber down by one — exactly how the stage ring re-forms
+    at N-1. A pod axis does not compose with elastic membership yet (the
+    stage ring spans exactly the data axis)."""
+    import numpy as np
+
+    from repro import compat
+
+    names = tuple(mesh.axis_names)
+    if "pod" in names:
+        raise ValueError(
+            "elastic shrink does not compose with a pod axis yet")
+    if data_axis not in names:
+        raise ValueError(f"mesh has no {data_axis!r} axis (axes: {names})")
+    ax = names.index(data_axis)
+    n = mesh.devices.shape[ax]
+    if n <= 1:
+        raise ValueError("cannot shrink a mesh with a single data rank")
+    if not 0 <= dead_rank < n:
+        raise ValueError(
+            f"dead rank {dead_rank} outside the {data_axis!r} axis "
+            f"(size {n})")
+    survivors = np.delete(np.asarray(mesh.devices), dead_rank, axis=ax)
+    return compat.mesh_from_devices(survivors, names)

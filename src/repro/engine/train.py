@@ -31,6 +31,19 @@ current step (the stream is a pure function of the step index, so the
 retried batch is bit-identical). Every skip / rollback / retry / injected
 fault lands in the structured ``engine.events`` log. The guard needs the
 pre-step state alive, so it forces ``donate=False``.
+
+Elastic membership (``elastic=True``; see ``engine.elastic``): the run
+survives the LOSS OF A DATA RANK. ``snapshot_every`` arms buddy-replicated
+host-RAM snapshots (each rank's ZeRO-CDP chunk mirrored to its ring
+predecessor); on a ``rank_down`` fault — or a step blowing past
+``watchdog_timeout`` seconds, which on a ring is a hung collective — the
+engine restores the newest snapshot (disk checkpoint as fallback), drops
+the dead device, re-forms the mesh at N-1, re-cuts the stage chunks via
+``build_stage_layout(cfg, n-1)``, re-jits, and resumes with the data
+stream fast-forwarded: at most ``snapshot_every`` steps lost, and the
+post-recovery trajectory is bit-identical to an uninterrupted N-1 run
+from the snapshot step. ``rejoin_after`` scales back up (N-1 -> N re-cut)
+at a step boundary once the failed rank returns.
 """
 from __future__ import annotations
 
@@ -69,6 +82,10 @@ class TrainEngine:
                  guard_spike_factor: float = 10.0,
                  guard_max_bad: int = 3,
                  loader_retries: int = 2,
+                 elastic: bool = False,
+                 snapshot_every: int = 0,       # buddy snapshots (0 = off)
+                 watchdog_timeout: float = 0.0,  # step deadline s (0 = off)
+                 rejoin_after: int = 0,  # steps after recovery to scale up
                  verbose: bool = True):
         spec.ensure_host_devices()
         self.spec = spec
@@ -117,6 +134,20 @@ class TrainEngine:
         self.loader_retries = loader_retries
         self.events = rsl.EventLog()
         self._bad_streak = 0
+
+        # -- elastic membership ----------------------------------------------
+        self.elastic = bool(elastic)
+        self.snapshot_every = int(snapshot_every)
+        self.rejoin_after = int(rejoin_after)
+        self.watchdog = rsl.StepWatchdog(watchdog_timeout) \
+            if watchdog_timeout else None
+        self.recoveries: List[Dict[str, Any]] = []
+        self._snapshots = None        # engine.elastic.BuddySnapshotStore
+        self._snapshot_s: List[float] = []
+        self._rejoin_at: Optional[int] = None
+        self._n_data = 0              # current data-axis size (set by build)
+        self._fresh_program = True    # first step after a (re)jit compiles;
+                                      # the watchdog must not count that
         if self.guard is not None:
             # skipping a bad update reuses the PRE-step state, so its
             # buffers must survive the step: donation is incompatible
@@ -205,6 +236,7 @@ class TrainEngine:
         self.opt = self.optimizer or sgd_momentum(self.momentum,
                                                   self.weight_decay)
         self.trainer = self._make_trainer_config()
+        self._n_data = self.mesh.shape[self.trainer.data_axis]
         self.state = init_state(self.cfg, self.trainer, params, self.opt,
                                 mesh=self.mesh)
 
@@ -239,6 +271,7 @@ class TrainEngine:
                     next(self._host_it)
                 self._log(f"restored step {self.start_step}")
         self._stream_step = self.start_step
+        self._fresh_program = True
         self._built = True
         return self
 
@@ -371,6 +404,173 @@ class TrainEngine:
                                      self.state_sh["step"])
         return new
 
+    # -- elastic membership: snapshot / shrink / rejoin ----------------------
+
+    def _state_template(self):
+        """Shape/dtype skeleton of the CURRENT state layout — what the
+        snapshot/checkpoint restore paths key on. Values are never read,
+        so this stays valid even when the live buffers were donated."""
+        import jax
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.state)
+
+    def _host_state(self):
+        import jax
+        import numpy as np
+        return jax.tree.map(lambda x: np.asarray(x), self.state)
+
+    def _stage_sharded(self) -> bool:
+        from repro.parallel import PLACE_STAGE_SHARDED
+        return self.plan.placement == PLACE_STAGE_SHARDED
+
+    def _take_snapshot(self, step: int) -> None:
+        """Park a consistent snapshot of the committed state in the buddy
+        store (``step`` = the resume point: the next step to run)."""
+        from repro.engine import elastic as el
+        t0 = time.monotonic()
+        if self._snapshots is None or self._snapshots.n != self._n_data:
+            self._snapshots = el.BuddySnapshotStore(
+                self._n_data, chunked=self._stage_sharded())
+        self._snapshots.take(step, self._host_state())
+        dur = time.monotonic() - t0
+        self._snapshot_s.append(dur)
+        self.events.append("snapshot", step, dur_s=dur, n=self._n_data,
+                           bytes=self._snapshots.nbytes)
+
+    def _restore_point_for(self, step: int, dead: int):
+        """(host_state, restored_step, source) for a rank-down recovery:
+        the buddy snapshot when it survives the death, else the newest
+        intact disk checkpoint. The state comes back at the OLD (pre-
+        shrink) layout — the caller re-cuts it."""
+        from repro import checkpoint as ckpt
+        from repro.engine import elastic as el
+        template = self._state_template()
+        if self._snapshots is not None:
+            self._snapshots.fail(dead)
+            try:
+                state, rstep = self._snapshots.assemble(template)
+                return state, rstep, "snapshot"
+            except el.SnapshotUnusable as e:
+                self.events.append("snapshot_unusable", step, reason=str(e))
+                self._log(f"step {step}: buddy snapshot unusable ({e}); "
+                          f"falling back to disk")
+        if self.ckpt_dir:
+            try:
+                state, rstep = ckpt.restore(
+                    self.ckpt_dir, template,
+                    on_fallback=lambda s, r: self.events.append(
+                        "ckpt_fallback", s, reason=r))
+                return state, rstep, "checkpoint"
+            except FileNotFoundError:
+                pass
+        raise RuntimeError(
+            f"data rank {dead} died at step {step} with no usable buddy "
+            f"snapshot and no intact checkpoint "
+            f"(snapshot_every={self.snapshot_every}, "
+            f"ckpt_dir={self.ckpt_dir!r})")
+
+    def _reprogram(self, host_state, stream_step: int) -> None:
+        """Re-jit the step for the CURRENT mesh, land ``host_state`` on it,
+        and invalidate everything compiled or prefetched for the old one
+        (AOT executable, external-batch jits, the loader's shardings)."""
+        import jax
+        from repro.core.trainer import jit_train_step
+        self.step_fn, self.state_sh, self.batch_sh = jit_train_step(
+            self.cfg, self.trainer, self.mesh, self.opt, host_state,
+            self._batch0, self.custom_loss_fn)
+        self.state = jax.device_put(host_state, self.state_sh)
+        self._hlo_text = None
+        self._step_exec = None
+        self._ext_steps = {}
+        self._fresh_program = True
+        self.close()
+        self._rebuild_stream(stream_step)
+        self._snapshots = None        # old-layout shards cannot restore the
+                                      # resized ring; next take() re-creates
+
+    def _recover_rank_down(self, step: int, dead: int, cause: str) -> int:
+        """Rank ``dead`` is gone: re-form the ring on the N-1 survivors
+        from the newest consistent snapshot (disk as fallback) and resume.
+        Returns the restored step (the new loop position)."""
+        n_old = self._n_data
+        self.events.append("rank_down", step, rank=dead, cause=cause,
+                           n=n_old)
+        self._log(f"step {step}: data rank {dead} is down ({cause})")
+        if not self.elastic:
+            raise RuntimeError(
+                f"data rank {dead} went down at step {step} and elastic "
+                "membership is off (pass elastic=True / --elastic)")
+        if not 0 <= dead < n_old:
+            raise ValueError(
+                f"rank_down rank {dead} outside the data axis (size {n_old})")
+        from repro.engine.spec import shrink_mesh
+        n_new = n_old - 1
+        t0 = time.monotonic()
+        self.plan.validate_resize(n_old, n_new)
+        if self.batch % n_new:
+            raise ValueError(
+                f"global batch {self.batch} does not divide over the "
+                f"{n_new} survivor(s); cannot re-form the ring")
+        # pick the restore point BEFORE touching the mesh: the snapshot /
+        # checkpoint is at the old layout and restores via its template
+        host_state, rstep, source = self._restore_point_for(step, dead)
+        self.mesh = shrink_mesh(self.mesh, dead, self.trainer.data_axis)
+        if self._stage_sharded():
+            from repro.parallel import zero_cdp as zcdp
+            host_state = zcdp.recut_stage_state(self.cfg, host_state,
+                                                n_old, n_new)
+        self._n_data = n_new
+        self._reprogram(host_state, rstep)
+        if self.guard is not None:
+            self.guard.reset()
+        self._bad_streak = 0
+        if self.watchdog is not None:
+            self.watchdog.disarm()
+        dur = time.monotonic() - t0
+        self.recoveries.append({
+            "failed_at": step, "step": rstep, "dead": dead, "cause": cause,
+            "n": n_new, "source": source, "steps_lost": step - rstep,
+            "duration_s": dur, "state": host_state})
+        self.events.append("recover", rstep, failed_at=step, n=n_new,
+                           source=source, steps_lost=step - rstep,
+                           dur_s=dur)
+        self._log(f"re-formed the ring on {n_new} rank(s) from {source} "
+                  f"step {rstep} ({step - rstep} step(s) lost, "
+                  f"{dur:.2f}s)")
+        if self.rejoin_after:
+            self._rejoin_at = rstep + self.rejoin_after
+        return rstep
+
+    def rejoin(self, step: int) -> None:
+        """Scale back up at a step boundary: the failed rank returned, the
+        mesh re-forms at the spec's full size and the state is re-cut
+        N-1 -> N. No rewind — a step boundary is already a consistent cut
+        (the rejoining rank receives its chunk instead of contributing
+        one)."""
+        n_old, n_new = self._n_data, self.spec.mesh_data
+        if n_new <= n_old:
+            raise RuntimeError(
+                f"rejoin at step {step}: already at {n_old} rank(s)")
+        t0 = time.monotonic()
+        self.plan.validate_resize(n_old, n_new)
+        if self.batch % n_new:
+            raise ValueError(
+                f"global batch {self.batch} does not divide over "
+                f"{n_new} ranks; cannot rejoin")
+        host_state = self._host_state()
+        self.mesh = self.spec.build_mesh()
+        if self._stage_sharded():
+            from repro.parallel import zero_cdp as zcdp
+            host_state = zcdp.recut_stage_state(self.cfg, host_state,
+                                                n_old, n_new)
+        self._n_data = n_new
+        self._reprogram(host_state, step)
+        self._rejoin_at = None
+        dur = time.monotonic() - t0
+        self.events.append("rejoin", step, n=n_new, dur_s=dur)
+        self._log(f"step {step}: failed rank rejoined — ring re-formed at "
+                  f"{n_new} ranks ({dur:.2f}s)")
+
     # -- external batches (the RL rollout path) ------------------------------
 
     def step_external(self, batch) -> Dict[str, float]:
@@ -436,11 +636,25 @@ class TrainEngine:
         self.build()
         total = self.steps if steps is None else steps
         t0 = time.time()
+        if self.elastic and self.snapshot_every and self._snapshots is None:
+            # arm the buddy store before the first step: a death in the
+            # first interval recovers to here instead of dying diskless
+            self._take_snapshot(self.start_step)
         try:
             step_fn = self._step_exec if self._step_exec is not None \
                 else self.step_fn
             step = self.start_step
             while step < total:
+                if self._rejoin_at is not None and step >= self._rejoin_at:
+                    self.rejoin(step)
+                    step_fn = self.step_fn
+                if self.injector is not None:
+                    f = self.injector.fires("rank_down", step)
+                    if f is not None:
+                        step = self._recover_rank_down(
+                            step, dead=int(f.arg), cause="rank_down")
+                        step_fn = self.step_fn
+                        continue
                 batch = self._next_batch(step)
                 if self.injector is not None:
                     f = self.injector.fires("slow_step", step)
@@ -450,8 +664,42 @@ class TrainEngine:
                         dur = f.arg or 0.05
                         self.events.append("slow_step", step, sleep_s=dur)
                         time.sleep(dur)
+                # the watchdog measures dispatch -> results materialized;
+                # the first step after a (re)jit compiles, so it is exempt
+                armed = self.watchdog is not None and not self._fresh_program
+                if armed:
+                    self.watchdog.arm(step)
                 new_state, metrics = step_fn(self.state, batch)
                 metrics = dict(metrics)
+                if self.injector is not None:
+                    f = self.injector.fires("step_hang", step)
+                    if f is not None:
+                        # a hung collective: a ring peer died mid-permute
+                        # and this step never completes on the survivors —
+                        # simulated as a stall past the watchdog deadline
+                        dur = f.arg or (1.5 * self.watchdog.timeout_s
+                                        if self.watchdog else 0.1)
+                        self.events.append("inject", step, site="step_hang",
+                                           sleep_s=dur)
+                        time.sleep(dur)
+                if armed:
+                    float(metrics["loss"])    # block until the step is done
+                    over = self.watchdog.expired()
+                    if over is not None:
+                        # indistinguishable from a dead peer on the ring:
+                        # presume the highest rank dead and recover (its
+                        # results never land, so drop this step's output)
+                        self.events.append(
+                            "step_hang", step, elapsed_s=over,
+                            timeout_s=self.watchdog.timeout_s)
+                        self._log(f"step {step}: exceeded the "
+                                  f"{self.watchdog.timeout_s:.1f}s deadline "
+                                  f"({over:.1f}s) — presuming a dead peer")
+                        step = self._recover_rank_down(
+                            step, dead=self._n_data - 1, cause="step_hang")
+                        step_fn = self.step_fn
+                        continue
+                self._fresh_program = False
                 if self.injector is not None:
                     new_state, metrics = self._inject_step_faults(
                         step, new_state, metrics)
@@ -476,6 +724,9 @@ class TrainEngine:
                               f"lr {rec['lr']:.4f}  {time.time()-t0:.1f}s")
                 if self.ckpt_dir and (step + 1) % self.ckpt_every == 0:
                     self._save_checkpoint(step + 1)
+                if self.elastic and self.snapshot_every and \
+                        (step + 1) % self.snapshot_every == 0:
+                    self._take_snapshot(step + 1)
                 step += 1
         finally:
             if total >= self.steps:

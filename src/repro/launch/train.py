@@ -67,7 +67,21 @@ def main(argv=None):
                          "('nan_loss@7,loader%%0.01,slow_step@3:0.2') for "
                          "deterministic chaos injection (sites: "
                          "loader nan_loss loss_spike slow_step "
-                         "ckpt_truncate ckpt_io)")
+                         "ckpt_truncate ckpt_io rank_down step_hang)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="survive a data-rank loss: re-form the ring at N-1 "
+                         "from the newest buddy snapshot (disk checkpoint "
+                         "as fallback) and keep training")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="buddy-replicated host-RAM snapshot interval in "
+                         "steps (0 = off; recovery then needs --ckpt-dir)")
+    ap.add_argument("--watchdog-timeout", type=float, default=0.0,
+                    help="per-step wall-clock deadline in seconds (0 = off); "
+                         "an overrun counts as a hung collective and "
+                         "triggers elastic recovery")
+    ap.add_argument("--rejoin-after", type=int, default=0,
+                    help="scale back up to the full mesh N steps after a "
+                         "recovery (simulates the failed rank returning)")
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
@@ -97,6 +111,10 @@ def main(argv=None):
                          ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
                          keep_last=args.keep_last,
                          resilience=args.resilience,
+                         elastic=args.elastic,
+                         snapshot_every=args.snapshot_every,
+                         watchdog_timeout=args.watchdog_timeout,
+                         rejoin_after=args.rejoin_after,
                          log_every=args.log_every)
     engine.run()
     print("done.")

@@ -134,6 +134,21 @@ class ParallelPlan:
                     "yet (the stage ring spans exactly the data axis)")
         return self
 
+    def validate_resize(self, n_old: int, n_new: int) -> "ParallelPlan":
+        """Fail fast on an elastic ring resize (shrink after a rank death,
+        grow on rejoin) the plan cannot survive — BEFORE any state has
+        been re-cut or a mesh rebuilt."""
+        if n_new < max(self.min_data, 1):
+            raise ValueError(
+                f"plan {self.name!r}: cannot re-form at {n_new} rank(s) "
+                f"(needs >= {max(self.min_data, 1)}); the survivors can "
+                "only resume from a checkpoint on a fresh mesh")
+        if self.n_stages and self.n_stages != n_new:
+            raise ValueError(
+                f"plan {self.name!r}: n_stages={self.n_stages} is pinned, "
+                f"which forbids an elastic resize {n_old} -> {n_new}")
+        return self
+
 
 # ---------------------------------------------------------------------------
 # Registry

@@ -189,6 +189,62 @@ def params_from_state(cfg, state: PyTree, n: int) -> PyTree:
 
 
 # ---------------------------------------------------------------------------
+# Elastic re-cut: [n_old, chunk_old] -> [n_new, chunk_new]
+# ---------------------------------------------------------------------------
+
+def recut_chunks(layout_old: StageLayout, layout_new: StageLayout,
+                 stages: np.ndarray) -> np.ndarray:
+    """Re-cut one ``[n_old, chunk_old]`` chunk stack to the new layout
+    WITHOUT a round-trip through the parameter pytree. The per-leaf flat
+    buffers are reassembled from the old segments and re-sliced by the new
+    ones, which handles the two traps a naive stream split would hit:
+    stage assignment depends on n (``param_stage_ids(cfg, shapes, n)``
+    reorders the stream), and ``unchunk_params`` casts to each leaf's
+    dtype — fatal for f32 optimizer slots of a bf16 parameter. Here the
+    arrays never leave the chunk dtype. Host-side numpy: recovery and
+    rejoin run between steps, not inside jit."""
+    if layout_old.treedef != layout_new.treedef:
+        raise ValueError("recut_chunks: layouts describe different "
+                         "parameter trees")
+    stages = np.asarray(stages)
+    if stages.shape != (layout_old.n, layout_old.chunk):
+        raise ValueError(
+            f"recut_chunks: expected [{layout_old.n}, {layout_old.chunk}] "
+            f"chunks, got {stages.shape}")
+    pieces = [[] for _ in layout_old.shapes]
+    for s in layout_old.segments:                # leaf-major order
+        pieces[s.leaf].append(
+            stages[s.stage, s.offset:s.offset + s.stop - s.start])
+    flats = [np.concatenate(ps) if len(ps) > 1 else ps[0] for ps in pieces]
+    parts = [[] for _ in range(layout_new.n)]
+    for s in layout_new.segments:                # offsets follow this order
+        parts[s.stage].append(flats[s.leaf][s.start:s.stop])
+    rows = []
+    for ps in parts:
+        v = np.concatenate(ps) if ps else np.zeros((0,), stages.dtype)
+        rows.append(np.pad(v, (0, layout_new.chunk - v.shape[0])))
+    return np.stack(rows)
+
+
+def recut_stage_state(cfg, state: PyTree, n_old: int, n_new: int) -> PyTree:
+    """Re-cut a whole ZeRO-CDP train state across a ring resize: every
+    ``[n_old, chunk_old]`` leaf (master chunks, ``params_prev``, optimizer
+    slots — matched by shape, not by key, so new optimizers' slots recut
+    too) moves to the ``n_new`` layout; scalars (``step``, adamw's ``t``)
+    pass through untouched. Input and output are host trees."""
+    lo = build_stage_layout(cfg, n_old)
+    ln = build_stage_layout(cfg, n_new)
+
+    def one(x):
+        arr = np.asarray(x)
+        if arr.shape == (lo.n, lo.chunk):
+            return recut_chunks(lo, ln, arr)
+        return arr
+
+    return jax.tree.map(one, state)
+
+
+# ---------------------------------------------------------------------------
 # The point-to-point stage ring
 # ---------------------------------------------------------------------------
 

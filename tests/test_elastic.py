@@ -1,0 +1,430 @@
+"""Elastic CDP: rank-failure tolerance for the point-to-point ring.
+
+Unit layer: the new fault sites, the StepWatchdog, the bounded EventLog,
+MemorySnapshot checksums, the BuddySnapshotStore's replication guarantees
+and the dtype-preserving stage re-cut.
+
+Engine layer (forced-device subprocesses, like test_parallel_plan): an
+injected ``rank_down@k`` re-forms the ring on the survivors from the
+buddy snapshot, the post-recovery trajectory is BIT-IDENTICAL to an
+uninterrupted N-1 run started from the snapshot step, the re-formed
+step's HLO stays permute-only (zero all-gather, zero gradient
+all-reduce), the watchdog routes a hung step into the same recovery, and
+``rejoin_after`` scales back up at a step boundary.
+"""
+import math
+import time
+
+import numpy as np
+import pytest
+
+from repro.engine import resilience as rsl
+from repro.engine.elastic import BuddySnapshotStore, SnapshotUnusable
+from repro.checkpoint import MemorySnapshot
+
+
+# ---------------------------------------------------------------------------
+# fault sites + watchdog
+# ---------------------------------------------------------------------------
+
+def test_rank_down_and_step_hang_parse():
+    faults = rsl.parse_faults("rank_down@3:1,step_hang@5:0.2,rank_down%0.5")
+    assert faults[0].site == "rank_down" and faults[0].step == 3
+    assert faults[0].arg == 1.0
+    assert faults[1].site == "step_hang" and faults[1].arg == 0.2
+    assert faults[2].prob == 0.5
+
+
+def test_step_watchdog_deadline():
+    wd = rsl.StepWatchdog(0.05)
+    assert wd.expired() is None          # never armed
+    wd.arm(7)
+    assert wd.step == 7
+    assert wd.expired() is None          # within deadline
+    time.sleep(0.08)
+    over = wd.expired()
+    assert over is not None and over > 0.05
+    wd.disarm()
+    assert wd.expired() is None
+    with pytest.raises(ValueError):
+        rsl.StepWatchdog(0.0)
+
+
+# ---------------------------------------------------------------------------
+# bounded event log
+# ---------------------------------------------------------------------------
+
+def test_event_log_ring_buffer(tmp_path):
+    log = rsl.EventLog(max_events=3)
+    for i in range(5):
+        log.append("tick", i)
+    assert len(log) == 3 and log.dropped == 2
+    assert [r["step"] for r in log] == [2, 3, 4]   # newest kept
+    p = tmp_path / "events.jsonl"
+    n = log.to_jsonl(p)
+    lines = p.read_text().splitlines()
+    assert n == len(lines) == 4                    # header + 3 records
+    import json
+    hdr = json.loads(lines[0])
+    assert hdr["kind"] == "events_dropped"
+    assert hdr["dropped"] == 2 and hdr["kept"] == 3
+
+
+def test_event_log_unbounded_has_no_header(tmp_path):
+    log = rsl.EventLog()
+    for i in range(4):
+        log.append("tick", i)
+    assert log.dropped == 0
+    p = tmp_path / "events.jsonl"
+    # the export contract test_rollout relies on: lines == len(log)
+    assert log.to_jsonl(p) == len(p.read_text().splitlines()) == 4
+
+
+# ---------------------------------------------------------------------------
+# memory snapshots + buddy store
+# ---------------------------------------------------------------------------
+
+def _chunked_state(n=4, chunk=8, seed=0):
+    rng = np.random.default_rng(seed)
+    return {"params": {"stages":
+                       rng.standard_normal((n, chunk)).astype(np.float32)},
+            "opt": {"mom": {"stages":
+                            rng.standard_normal((n, chunk))
+                            .astype(np.float32)}},
+            "step": np.int32(5)}
+
+
+def test_memory_snapshot_roundtrip_and_crc():
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": np.int32(7)}
+    snap = MemorySnapshot.from_tree(4, tree)
+    back = snap.restore(tree)
+    assert np.array_equal(back["a"], tree["a"]) and back["b"] == 7
+    # snapshots COPY: mutating the source must not alias
+    tree["a"][0, 0] = 99.0
+    assert snap.restore(tree)["a"][0, 0] == 0.0
+    # corruption is detected, and a strict restore refuses it
+    snap.arrays["a"][0, 1] = -1.0
+    intact, reason = snap.verify()
+    assert not intact and "crc32" in reason
+    with pytest.raises(ValueError, match="not intact"):
+        snap.restore(tree)
+
+
+def test_buddy_store_survives_any_single_rank_death():
+    state = _chunked_state(n=4)
+    for dead in range(4):
+        store = BuddySnapshotStore(4, chunked=True)
+        store.take(5, state)
+        store.fail(dead)
+        out, step = store.assemble(state)
+        assert step == 5
+        assert np.array_equal(out["params"]["stages"],
+                              state["params"]["stages"])
+        assert np.array_equal(out["opt"]["mom"]["stages"],
+                              state["opt"]["mom"]["stages"])
+        assert out["step"] == 5
+
+
+def test_buddy_store_adjacent_double_death_is_unusable():
+    state = _chunked_state(n=4)
+    store = BuddySnapshotStore(4, chunked=True)
+    store.take(5, state)
+    # rank 1's primary dies AND its mirror holder (ring predecessor 0)
+    store.fail(1)
+    store.fail(0)
+    with pytest.raises(SnapshotUnusable, match="mirror holder"):
+        store.assemble(state)
+    # NON-adjacent double death still assembles (mirrors cover both)
+    store = BuddySnapshotStore(4, chunked=True)
+    store.take(5, state)
+    store.fail(1)
+    store.fail(3)
+    out, _ = store.assemble(state)
+    assert np.array_equal(out["params"]["stages"], state["params"]["stages"])
+
+
+def test_buddy_store_replicated_mode():
+    state = _chunked_state(n=3)
+    store = BuddySnapshotStore(3, chunked=False)
+    store.take(2, state)
+    store.fail(0)
+    store.fail(2)                        # any one survivor suffices
+    out, step = store.assemble(state)
+    assert step == 2
+    assert np.array_equal(out["params"]["stages"], state["params"]["stages"])
+    store.fail(1)
+    with pytest.raises(SnapshotUnusable):
+        store.assemble(state)
+
+
+def test_buddy_store_take_before_assemble_required():
+    store = BuddySnapshotStore(2, chunked=False)
+    with pytest.raises(SnapshotUnusable, match="no snapshot"):
+        store.assemble({})
+
+
+# ---------------------------------------------------------------------------
+# layout re-cut (dtype-preserving, n-dependent stage order)
+# ---------------------------------------------------------------------------
+
+def test_recut_chunks_matches_direct_cut_bitwise():
+    import jax
+    from repro.configs import get_reduced
+    from repro.models import init_params
+    from repro.parallel import zero_cdp as zcdp
+
+    cfg = get_reduced("stablelm-1.6b")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    l4 = zcdp.build_stage_layout(cfg, 4)
+    l3 = zcdp.build_stage_layout(cfg, 3)
+    c4 = np.asarray(zcdp.chunk_params(l4, params))
+    c3 = zcdp.recut_chunks(l4, l3, c4)
+    # the re-cut equals cutting the pristine params at n=3 directly —
+    # i.e. the n-dependent stage reorder is handled exactly
+    assert np.array_equal(c3, np.asarray(zcdp.chunk_params(l3, params)))
+    assert c3.dtype == c4.dtype == np.float32
+    # and it round-trips (grow back to 4)
+    assert np.array_equal(zcdp.recut_chunks(l3, l4, c3), c4)
+
+
+def test_recut_stage_state_recuts_slots_and_keeps_scalars():
+    from repro.configs import get_reduced
+    from repro.parallel import zero_cdp as zcdp
+
+    cfg = get_reduced("stablelm-1.6b")
+    l4 = zcdp.build_stage_layout(cfg, 4)
+    l3 = zcdp.build_stage_layout(cfg, 3)
+    rng = np.random.default_rng(1)
+    c4 = rng.standard_normal((4, l4.chunk)).astype(np.float32)
+    state = {"params": {"stages": c4},
+             "opt": {"mom": {"stages": c4 * 0.5}},
+             "step": np.int32(7)}
+    out = zcdp.recut_stage_state(cfg, state, 4, 3)
+    assert out["params"]["stages"].shape == (3, l3.chunk)
+    assert np.array_equal(out["opt"]["mom"]["stages"],
+                          zcdp.recut_chunks(l4, l3, c4 * 0.5))
+    assert out["step"] == 7              # scalars pass through untouched
+
+
+def test_plan_validate_resize():
+    from repro.parallel import get_plan
+
+    zc = get_plan("zero_cdp")
+    zc.validate_resize(3, 2)             # legal shrink
+    with pytest.raises(ValueError, match="re-form"):
+        zc.validate_resize(2, 1)         # min_data=2: the ring degenerates
+    get_plan("dp").validate_resize(2, 1)  # dp survives to a single rank
+    pinned = zc.with_(n_stages=3)
+    with pytest.raises(ValueError, match="pinned"):
+        pinned.validate_resize(3, 2)
+
+
+# ---------------------------------------------------------------------------
+# engine recovery (forced-device subprocesses)
+# ---------------------------------------------------------------------------
+
+def test_elastic_recovery_dp_2_to_1(subproc):
+    """Kill rank 1 of a 2-rank dp run at step 3: the engine re-forms on
+    the survivor from the step-2 buddy snapshot and finishes; the
+    post-recovery trajectory is bit-identical to an uninterrupted 1-rank
+    run started from the recovered state."""
+    subproc("""
+import tempfile
+import numpy as np
+from repro.engine import RunSpec, TrainEngine
+from repro import checkpoint as ckpt
+
+spec = RunSpec(arch="stablelm-1.6b", reduced=True, plan="dp",
+               mesh_data=2, mesh_model=1)
+eng = TrainEngine(spec, steps=6, batch=4, seq=16, log_every=1,
+                  elastic=True, snapshot_every=2,
+                  resilience="rank_down@3:1", verbose=False)
+eng.run()
+assert len(eng.recoveries) == 1
+rec = eng.recoveries[0]
+assert rec["failed_at"] == 3 and rec["step"] == 2 and rec["dead"] == 1
+assert rec["n"] == 1 and rec["source"] == "snapshot"
+assert rec["steps_lost"] == 1 and eng._n_data == 1
+kinds = [r["kind"] for r in eng.events]
+assert "rank_down" in kinds and "recover" in kinds and "snapshot" in kinds
+
+# baseline: clean 1-rank run STARTED from the recovered state/step
+d = tempfile.mkdtemp()
+ckpt.save(d, rec["step"], rec["state"])
+base = TrainEngine(spec.with_(mesh_data=1), steps=6, batch=4, seq=16,
+                   log_every=1, ckpt_dir=d, ckpt_every=1000, verbose=False)
+base.run()
+el = {}
+for h in eng.history:                 # last occurrence per step: the
+    el[h["step"]] = h["loss"]         # replay overwrites the pre-fail entry
+bl = {h["step"]: h["loss"] for h in base.history}
+for s in range(rec["step"], 6):
+    assert el[s] == bl[s], (s, el[s], bl[s])
+for a, b in zip((np.asarray(x) for x in __import__("jax").tree.leaves(
+                    eng.state)),
+                (np.asarray(x) for x in __import__("jax").tree.leaves(
+                    base.state))):
+    assert np.array_equal(a, b)
+print("OK")
+""", n_devices=2, timeout=900)
+
+
+def test_elastic_recovery_zero_cdp_bitwise_and_permute_only(subproc):
+    """The acceptance run: rank_down@3 on a 3-rank zero_cdp ring. The
+    survivors re-form at N-1=2 from the buddy snapshot; the re-formed
+    step's HLO is permute-only (zero all-gather, zero gradient
+    all-reduce, same assertion style as test_parallel_plan); and the
+    post-recovery loss trajectory + final stage-sharded state are
+    bit-identical to an uninterrupted 2-rank run from the snapshot
+    step."""
+    subproc("""
+import tempfile
+import numpy as np
+from repro.engine import RunSpec, TrainEngine
+from repro import checkpoint as ckpt
+from repro.launch.roofline import parse_collectives
+
+spec = RunSpec(arch="stablelm-1.6b", reduced=True, plan="zero_cdp",
+               mesh_data=3, mesh_model=1)
+eng = TrainEngine(spec, steps=6, batch=6, seq=16, log_every=1,
+                  elastic=True, snapshot_every=2,
+                  resilience="rank_down@3:1", verbose=False)
+eng.run()
+rec = eng.recoveries[0]
+assert rec["step"] == 2 and rec["n"] == 2 and rec["source"] == "snapshot"
+assert eng.state["params"]["stages"].shape[0] == 2
+
+# the re-formed N-1 step keeps the paper's comm signature: point-to-point
+# permutes only — no all-gather, no gradient-sized all-reduce
+stats = parse_collectives(eng.hlo_text())
+n_new = 2
+assert stats.op_counts["collective-permute"] >= 2 * (n_new - 1)
+assert stats.op_counts["all-gather"] == 0
+chunk_bytes = 4 * eng.state["params"]["stages"].shape[1]
+assert stats.max_by_type["all-reduce"] < chunk_bytes // 100
+
+d = tempfile.mkdtemp()
+ckpt.save(d, rec["step"], rec["state"])
+base = TrainEngine(spec.with_(mesh_data=2), steps=6, batch=6, seq=16,
+                   log_every=1, ckpt_dir=d, ckpt_every=1000, verbose=False)
+base.run()
+el = {}
+for h in eng.history:
+    el[h["step"]] = h["loss"]
+bl = {h["step"]: h["loss"] for h in base.history}
+for s in range(rec["step"], 6):
+    assert el[s] == bl[s], (s, el[s], bl[s])
+assert np.array_equal(np.asarray(eng.state["params"]["stages"]),
+                      np.asarray(base.state["params"]["stages"]))
+assert np.array_equal(np.asarray(eng.state["opt"]["mom"]["stages"]),
+                      np.asarray(base.state["opt"]["mom"]["stages"]))
+print("OK")
+""", n_devices=3, timeout=900)
+
+
+def test_step_hang_watchdog_routes_into_recovery(subproc):
+    """A step stalling past the watchdog deadline is classified as a hung
+    collective: the presumed-dead peer is dropped and the run recovers
+    through the same rank-down path, discarding the hung step's output."""
+    subproc("""
+from repro.engine import RunSpec, TrainEngine
+
+spec = RunSpec(arch="stablelm-1.6b", reduced=True, plan="dp",
+               mesh_data=2, mesh_model=1)
+eng = TrainEngine(spec, steps=5, batch=4, seq=16, log_every=1,
+                  elastic=True, snapshot_every=2, watchdog_timeout=3.0,
+                  resilience="step_hang@3:4.5", verbose=False)
+eng.run()
+rec = eng.recoveries[0]
+assert rec["cause"] == "step_hang" and rec["failed_at"] == 3
+assert rec["dead"] == 1 and rec["n"] == 1 and rec["source"] == "snapshot"
+hang = eng.events.of("step_hang")
+assert hang and hang[0]["elapsed_s"] > 3.0
+import math
+assert all(math.isfinite(h["loss"]) for h in eng.history)
+print("OK")
+""", n_devices=2, timeout=900)
+
+
+def test_rejoin_scales_back_up_at_step_boundary(subproc):
+    """Shrink 3 -> 2 on the injected death, then rejoin 2 -> 3 two steps
+    after recovery: the state is re-cut to the full ring and the run
+    finishes at N with finite losses."""
+    subproc("""
+import math
+from repro.engine import RunSpec, TrainEngine
+
+spec = RunSpec(arch="stablelm-1.6b", reduced=True, plan="zero_cdp",
+               mesh_data=3, mesh_model=1)
+eng = TrainEngine(spec, steps=8, batch=6, seq=16, log_every=1,
+                  elastic=True, snapshot_every=2, rejoin_after=2,
+                  resilience="rank_down@3:1", verbose=False)
+eng.run()
+assert eng.recoveries[0]["step"] == 2 and eng.recoveries[0]["n"] == 2
+rj = eng.events.of("rejoin")
+assert len(rj) == 1 and rj[0]["step"] == 4 and rj[0]["n"] == 3
+assert eng._n_data == 3
+assert eng.state["params"]["stages"].shape[0] == 3
+assert all(math.isfinite(h["loss"]) for h in eng.history)
+print("OK")
+""", n_devices=3, timeout=900)
+
+
+def test_rank_down_falls_back_to_disk_and_raises_without_elastic(subproc):
+    """snapshot_every=0 forces the disk path: recovery restores the
+    newest intact checkpoint (template-keyed at the OLD layout, then
+    re-cut). Without elastic=True a rank death is fatal, loudly."""
+    subproc("""
+import tempfile
+from repro.engine import RunSpec, TrainEngine
+
+spec = RunSpec(arch="stablelm-1.6b", reduced=True, plan="dp",
+               mesh_data=2, mesh_model=1)
+d = tempfile.mkdtemp()
+eng = TrainEngine(spec, steps=5, batch=4, seq=16, log_every=1,
+                  elastic=True, snapshot_every=0, ckpt_dir=d, ckpt_every=2,
+                  resilience="rank_down@3:0", verbose=False)
+eng.run()
+rec = eng.recoveries[0]
+assert rec["source"] == "checkpoint" and rec["dead"] == 0
+assert rec["step"] == 2 and rec["n"] == 1
+
+eng2 = TrainEngine(spec, steps=4, batch=4, seq=16, log_every=100,
+                   resilience="rank_down@2:0", verbose=False)
+try:
+    eng2.run()
+    raise SystemExit("expected RuntimeError")
+except RuntimeError as e:
+    assert "elastic" in str(e)
+print("OK")
+""", n_devices=2, timeout=900)
+
+
+def test_shrink_mesh_drops_exactly_the_dead_rank(subproc):
+    subproc("""
+import numpy as np
+from repro.launch.mesh import make_host_mesh
+from repro.engine.spec import shrink_mesh
+
+mesh = make_host_mesh(3, 1, 0)
+small = shrink_mesh(mesh, 1)
+assert small.shape["data"] == 2 and small.shape["model"] == 1
+kept = [d.id for d in np.asarray(small.devices).ravel()]
+orig = [d.id for d in np.asarray(mesh.devices).ravel()]
+assert kept == [orig[0], orig[2]]     # survivors keep their devices
+for bad in (-1, 3):
+    try:
+        shrink_mesh(mesh, bad)
+        raise SystemExit("expected ValueError")
+    except ValueError:
+        pass
+one = shrink_mesh(shrink_mesh(mesh, 0), 0)
+assert one.shape["data"] == 1
+try:
+    shrink_mesh(one, 0)
+    raise SystemExit("expected ValueError")
+except ValueError:
+    pass
+print("OK")
+""", n_devices=3, timeout=300)

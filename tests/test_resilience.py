@@ -343,6 +343,60 @@ def test_ckpt_truncate_injection_forces_fallback(tmp_path):
     assert resumed.start_step == 2
 
 
+def test_zero_cdp_guard_skip_and_rollback_bitwise(subproc):
+    """Guard-skip and rollback on stage-sharded f32 masters (--plan
+    zero_cdp): a NaN-skip replays bitwise against a same-seed clean run,
+    and a guard_max_bad rollback restores the [N, chunk] stages + momentum
+    bitwise — the recovery moves tested on dp hold on the ring too."""
+    subproc("""
+import tempfile
+import numpy as np
+from repro.engine import RunSpec, TrainEngine
+
+SPEC = RunSpec(arch="stablelm-1.6b", reduced=True, plan="zero_cdp",
+               mesh_data=2, mesh_model=1)
+KW = dict(batch=4, seq=16, log_every=100, verbose=False)
+
+def stages_equal(a, b, msg):
+    np.testing.assert_array_equal(np.asarray(a["params"]["stages"]),
+                                  np.asarray(b["params"]["stages"]),
+                                  err_msg=msg)
+    np.testing.assert_array_equal(np.asarray(a["opt"]["mom"]["stages"]),
+                                  np.asarray(b["opt"]["mom"]["stages"]),
+                                  err_msg=msg)
+
+# NaN-skip: the poisoned update is dropped, the trajectory stays on the
+# clean run's rail EXCEPT the skipped step, and same seed replays bitwise
+eng = TrainEngine(SPEC, steps=6, resilience="nan_loss@3", **KW)
+state = eng.run()
+skips = eng.events.of("skip")
+assert len(skips) == 1 and skips[0]["step"] == 3 \\
+    and skips[0]["reason"] == "nonfinite"
+assert np.all(np.isfinite(np.asarray(state["params"]["stages"])))
+assert int(state["step"]) == 6
+rep = TrainEngine(SPEC, steps=6, resilience="nan_loss@3", **KW).run()
+stages_equal(state, rep, "same seed + same fault must replay bitwise")
+
+# Rollback: two consecutive NaNs trip guard_max_bad=2 -> restore the
+# newest intact checkpoint (step 2) into the stage-sharded layout and
+# replay; the finish must equal a same-seed CLEAN run bitwise (the
+# replayed stream is bit-identical, the bad updates never landed)
+d = tempfile.mkdtemp()
+clean = TrainEngine(SPEC, steps=6, donate=False, **KW).run()
+eng = TrainEngine(SPEC, steps=6, ckpt_dir=d, ckpt_every=2,
+                  guard_max_bad=2,
+                  resilience="nan_loss@3,nan_loss@4", **KW)
+state = eng.run()
+rb = eng.events.of("rollback")
+assert len(rb) == 1 and rb[0]["step"] == 4 and rb[0]["to_step"] == 2
+assert [r["step"] for r in eng.events.of("skip")] == [3, 4]
+stages_equal(clean, state,
+             "rollback + bit-identical replay must match the clean run")
+assert int(state["step"]) == 6
+print("OK")
+""", n_devices=2, timeout=900)
+
+
 # ---------------------------------------------------------------------------
 # ServeEngine: graceful degradation
 # ---------------------------------------------------------------------------

@@ -218,6 +218,44 @@ def test_rollout_rejects_bad_shapes():
         RolloutEngine(spec2, groups=1, group_size=3, verbose=False)
 
 
+def test_rollout_nan_skip_never_pushes_corrupted_weights():
+    """Chaos: an injected NaN loss in iteration 1's train phase trips the
+    HealthGuard — the update is skipped, the PUSH is skipped (serve never
+    sees the poisoned params), and the pool still wakes for iteration 2's
+    generate phase. The loop finishes with finite weights on both sides."""
+    import jax
+
+    eng = RolloutEngine(SPEC, plan="dp", groups=2, group_size=4,
+                        prompt_len=8, gen=8, iters=3,
+                        resilience="nan_loss@1", verbose=False)
+    eng.run()
+
+    skips = eng.events.of("skip")
+    assert len(skips) == 1 and skips[0]["step"] == 1 \
+        and skips[0]["reason"] == "nonfinite"
+    assert eng.events.of("inject")[0]["site"] == "nan_loss"
+    assert np.isnan(eng.history[1]["loss"])
+    assert [h["skipped"] for h in eng.history] == [False, True, False]
+    pushes = eng.events.of("phase")
+    push_skips = [p["skipped"] for p in pushes if p["phase"] == "push"]
+    assert push_skips == [False, True, False], \
+        "the poisoned iteration must not push weights to serve"
+
+    for leaf in jax.tree.leaves(eng.serve.params):
+        assert np.all(np.isfinite(np.asarray(leaf))), \
+            "corrupted weights leaked into the serve engine"
+    for leaf in jax.tree.leaves(eng.train.state["params"]):
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.floating):
+            assert np.all(np.isfinite(arr)), \
+                "the skipped update leaked into the train state"
+    assert int(eng.train.state["step"]) == 3, \
+        "a skipped iteration still advances the step counter"
+    # the pool woke after the skipped push: iteration 2 generated tokens
+    assert eng.history[2]["gen_tok_s"] > 0
+    assert np.isfinite(eng.history[2]["loss"])
+
+
 def test_rollout_zero_cdp_stage_sharded_push(subproc):
     """The same loop under ``zero_cdp`` on a 2-device data mesh: reward
     rises, and the serve params equal a host-side ``unchunk_params``
