@@ -149,7 +149,7 @@ def run():
                      round(dt * 1e6 / GEN, 1), f"{tok_s:.0f}tok/s"))
 
     # ---- serving level: continuous batching vs static batch --------------
-    from repro.engine import RunSpec
+    from repro.engine import RunSpec, ServePolicy
     from repro.engine.batching import synthetic_requests
     from repro.engine.serve import ServeEngine
 
@@ -165,7 +165,8 @@ def run():
         reqs = synthetic_requests(SERVE_REQS, engine.cfg.vocab_size,
                                   SERVE_PROMPT, SERVE_GEN,
                                   arrival="poisson", rate=1.0, seed=0)
-        m = engine.serve(reqs, max_slots=SERVE_SLOTS, policy=policy)["metrics"]
+        m = engine.serve(reqs, policy=ServePolicy(
+            max_slots=SERVE_SLOTS, policy=policy))["metrics"]
         records.append({
             "level": "serving", "policy": policy, "arch": "stablelm-1.6b",
             "n_requests": m["n_requests"], "n_slots": m["n_slots"],
@@ -185,10 +186,49 @@ def run():
                      f"{m['decode_tok_s']:.0f}tok/s_p99_"
                      f"{m['latency_s']['p99']}s"))
 
-    # ---- serving level: paged KV cache, shared-prefix chat --------------
+    # ---- serving level: SLO-aware admission vs FCFS ----------------------
     import numpy as np
 
     from repro.engine import Request
+
+    # deterministic virtual clock: two doomed requests (deadline shorter
+    # than their own decode time) arrive first, feasible short ones queue
+    # behind them. FCFS burns both slots on the doomed pair until the
+    # doomed deadline expires — by then the tail of the feasible queue is
+    # unservable; SLO's feasibility cull never admits the doomed pair.
+    # Absolute sizes on purpose: the level measures policy behaviour, not
+    # scale, and must separate the policies in smoke AND full runs.
+    SLO_DOOMED, SLO_FEASIBLE = 2, 6
+
+    def slo_workload():
+        reqs = [Request(rid=i, prompt=list(range(1, SERVE_PROMPT + 1)),
+                        max_gen=8, arrival_step=0, deadline_steps=6)
+                for i in range(SLO_DOOMED)]
+        reqs += [Request(rid=10 + i, prompt=[1, 2, 3, 4], max_gen=3,
+                         arrival_step=0, deadline_steps=14)
+                 for i in range(SLO_FEASIBLE)]
+        return reqs
+
+    slo_goodput = {}
+    for admission in ("fcfs", "slo"):
+        m = engine.serve(slo_workload(), policy=ServePolicy(
+            max_slots=2, clock="virtual",
+            admission=admission))["metrics"]
+        slo_goodput[admission] = m["goodput"]
+        records.append({
+            "level": "serving_slo", "admission": admission,
+            "arch": "stablelm-1.6b", "smoke": SMOKE,
+            "n_requests": m["n_requests"], "n_slots": m["n_slots"],
+            "clock": m["clock"], "goodput": m["goodput"],
+            "ttft_p50": m["ttft"]["p50"], "ttft_p99": m["ttft"]["p99"],
+            "status_counts": m["status_counts"],
+        })
+        rows.append((f"decode.serving.slo.{admission}",
+                     round(m["wall_s"] * 1e6, 1),
+                     f"goodput{m['goodput']}_ttft_p99_"
+                     f"{m['ttft']['p99']}"))
+
+    # ---- serving level: paged KV cache, shared-prefix chat --------------
 
     paged = ServeEngine(spec, prompt_len=PAGED_SYS + PAGED_TURN,
                         gen=PAGED_GEN, paged=True, kv_block_size=PAGED_BS,
@@ -209,7 +249,8 @@ def run():
     # fresh user turns against the now-cached prefix — the steady state a
     # chat deployment actually runs in
     for phase, seed in (("cold", 1), ("warm", 2)):
-        m = paged.serve(turns(seed), max_slots=PAGED_SLOTS)["metrics"]
+        m = paged.serve(turns(seed), policy=ServePolicy(
+            max_slots=PAGED_SLOTS))["metrics"]
         pg = m["paging"]
         records.append({
             "level": "serving_paged", "phase": phase,

@@ -28,6 +28,7 @@ Exits non-zero listing every violation (never just the first).
 from __future__ import annotations
 
 import json
+import math
 import numbers
 import os
 import sys
@@ -58,6 +59,13 @@ DECODE_LEVEL_KEYS = {
                       "prefill_tokens_requested": int,
                       "marginal_prefill_tokens": int, "preemptions": int,
                       "decode_tok_s": numbers.Real},
+    # SLO-aware admission vs FCFS on the same virtual-clock workload; the
+    # semantic gates below require finite TTFT tails and that slo's
+    # goodput is at least fcfs's (the policy's entire reason to exist)
+    "serving_slo": {"admission": str, "n_requests": int, "n_slots": int,
+                    "clock": str, "goodput": numbers.Real,
+                    "ttft_p50": numbers.Real, "ttft_p99": numbers.Real,
+                    "status_counts": dict},
 }
 
 # RL rollout loop records (``rollout_bench.json``, one per plan). Beyond
@@ -164,6 +172,29 @@ def validate(errors=None):
                     errors.append(f"decode_bench.json serving_paged[{i}]: "
                                   f"peak occupancy {peak} exceeds pool "
                                   f"size {total}")
+        slo = {r.get("admission"): r for r in records
+               if r.get("level") == "serving_slo"}
+        if slo:
+            if not set(slo) >= {"fcfs", "slo"}:
+                errors.append("decode_bench.json: serving_slo records "
+                              "must cover both 'fcfs' and 'slo' admission")
+            for name, rec in slo.items():
+                for k in ("ttft_p50", "ttft_p99", "goodput"):
+                    v = rec.get(k)
+                    if isinstance(v, numbers.Real) and not math.isfinite(v):
+                        errors.append(f"decode_bench.json serving_slo"
+                                      f"[{name}]: {k} {v!r} not finite")
+                g = rec.get("goodput")
+                if isinstance(g, numbers.Real) and not 0.0 <= g <= 1.0:
+                    errors.append(f"decode_bench.json serving_slo[{name}]: "
+                                  f"goodput {g!r} outside [0, 1]")
+            gf, gs = (slo.get("fcfs", {}).get("goodput"),
+                      slo.get("slo", {}).get("goodput"))
+            if isinstance(gf, numbers.Real) and \
+                    isinstance(gs, numbers.Real) and gs < gf:
+                errors.append(f"decode_bench.json: slo admission goodput "
+                              f"{gs} below fcfs {gf} — the deadline-aware "
+                              "policy regressed on its own workload")
 
     roll_path = os.path.join(_ART, "rollout_bench.json")
     if os.path.exists(roll_path):        # conditional: landed with the
@@ -196,7 +227,6 @@ def validate(errors=None):
         if not isinstance(els, list) or not els:
             errors.append("elastic_bench.json: expected a non-empty list")
             els = []
-        import math
         for i, rec in enumerate(els):
             where = f"elastic_bench.json[{i}]"
             _check_keys(rec, ELASTIC_KEYS, where, errors)

@@ -80,6 +80,20 @@ run_serve() {
     # peak pool occupancy independent of the engine's max_len headroom
     python -m pytest -x -q tests/test_paged_cache.py \
         -k "warm_hit_rate or peak_occupancy"
+
+    echo "=== engine smoke: wall-clock serving (stream + slo + chunked) ==="
+    # ServePolicy surface through the launcher: live token streaming,
+    # deadline-aware (slo) admission, and chunked prefill interleaved
+    # with decode — the wall-clock serving API end to end
+    python -m repro.launch.serve --arch stablelm-1.6b --reduced \
+        --max-slots 2 --arrival poisson --rate 0.5 --num-requests 4 \
+        --prompt-len 16 --gen 8 --prefill-chunk 5 --clock virtual \
+        --stream --policy slo --mesh-data 1 --mesh-model 1 \
+        --host-devices 1
+
+    # chunked-prefill bitwise parity + fused host sync acceptance gates
+    python -m pytest -x -q tests/test_serving_api.py \
+        -k "bitwise_parity or fused_host_transfer"
 }
 
 run_chaos() {

@@ -13,7 +13,7 @@ __all__ = ["RunSpec", "TrainEngine", "ServeEngine", "RolloutEngine",
            "poisson_trace", "Fault", "FaultInjector", "EventLog",
            "HealthGuard", "StepWatchdog", "parse_faults", "BlockPool",
            "PoolExhausted", "Parked", "BuddySnapshotStore",
-           "SnapshotUnusable"]
+           "SnapshotUnusable", "ServePolicy"]
 
 
 def __getattr__(name):
@@ -30,7 +30,7 @@ def __getattr__(name):
         # trajectory containers (jax-free import, like RunSpec)
         from repro.engine import trajectory
         return getattr(trajectory, name)
-    if name in ("Request", "poisson_trace"):
+    if name in ("Request", "poisson_trace", "ServePolicy"):
         # continuous-batching workload types (jax-free import, like RunSpec)
         from repro.engine import batching
         return getattr(batching, name)

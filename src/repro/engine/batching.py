@@ -25,7 +25,8 @@ Three framework-light pieces live here so the engine stays a thin loop:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+import warnings
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import numpy as np
 
@@ -57,7 +58,16 @@ class Request:
     greedy for this row), ``top_k`` restricts sampling to the k most
     likely tokens (None/0 disables), and ``seed`` replaces ``rid`` as the
     fold-in for this request's sampling key stream — two requests with the
-    same prompt and different seeds decode different continuations."""
+    same prompt and different seeds decode different continuations.
+
+    Wall-clock serving (``ServePolicy.clock`` "wall" | "virtual") reads
+    ``arrival_time``/``deadline_s`` in SECONDS instead of the step fields
+    (each defaults to its step twin scaled by ``ServePolicy.step_dt`` when
+    unset). ``on_token`` is the streaming hook: called as
+    ``on_token(rid, token, step, wall_t)`` from the engine's post-step
+    host sync for every token this request emits — it observes the host
+    copy only, so greedy streams are bitwise identical with and without
+    it."""
     rid: int
     prompt: np.ndarray                  # [S] int32, unpadded
     max_gen: int
@@ -69,6 +79,9 @@ class Request:
     temperature: Optional[float] = None
     top_k: Optional[int] = None
     seed: Optional[int] = None
+    arrival_time: Optional[float] = None      # seconds (wall/virtual clock)
+    deadline_s: Optional[float] = None        # seconds (wall/virtual clock)
+    on_token: Optional[Callable[[int, int, int, float], None]] = None
 
 
 def poisson_trace(n: int, rate: float, seed: int = 0) -> List[int]:
@@ -98,6 +111,185 @@ def synthetic_requests(n: int, vocab: int, prompt_len: int, max_gen: int,
         reqs.append(Request(rid=i, prompt=prompt, max_gen=gen,
                             arrival_step=arrivals[i]))
     return reqs
+
+
+# ---------------------------------------------------------------------------
+# ServePolicy: the one serve() configuration surface
+# ---------------------------------------------------------------------------
+
+#: scheduler clock modes: "step" is the historical decode-step logical
+#: clock (bitwise-reproducible trace replay); "wall" reads the monotonic
+#: clock in seconds (arrival_time/deadline_s); "virtual" runs the SAME
+#: wall-clock code path on a deterministic clock (now = step * step_dt),
+#: so wall-mode scheduling is testable bitwise.
+CLOCK_MODES = ("step", "wall", "virtual")
+
+
+@dataclasses.dataclass
+class ServePolicy:
+    """Everything ``ServeEngine.serve()`` used to take as nine kwargs, plus
+    the chunked-prefill / wall-clock / admission knobs. ``serve(policy=
+    ServePolicy(...))`` is the surface; the old kwargs remain as deprecated
+    aliases resolved by :func:`serve_policy_from_legacy_kwargs`.
+
+    ``prefill_chunk`` > 0 cuts every admitted prompt into chunks of that
+    many tokens, prefilled one chunk per scheduler iteration interleaved
+    with decode (a partially-prefilled request has status "prefilling" and
+    emits nothing); 0 keeps the historical whole-prompt admission prefill.
+    ``admission`` picks the queue-ordering policy ("fcfs" | "slo", or an
+    :class:`AdmissionPolicy` instance). ``watchdog_s`` arms a
+    :class:`~repro.engine.resilience.StepWatchdog` around each decode step
+    in wall/virtual clock mode (slow steps land in the event log)."""
+    max_slots: Optional[int] = None
+    num_requests: int = 8
+    arrival: str = "none"
+    rate: float = 0.5
+    eos_id: Optional[int] = None
+    policy: str = "continuous"                # "continuous" | "static"
+    deadline_steps: Optional[int] = None
+    queue_limit: Optional[int] = None
+    max_steps: int = 1_000_000
+    prefill_chunk: int = 0                    # 0 = whole-prompt prefill
+    admission: Union[str, "AdmissionPolicy"] = "fcfs"
+    clock: str = "step"                       # "step" | "wall" | "virtual"
+    step_dt: float = 1.0                      # virtual seconds per step
+    deadline_s: Optional[float] = None        # wall/virtual default deadline
+    watchdog_s: Optional[float] = None        # slow-step watchdog (wall)
+
+    def __post_init__(self):
+        if self.policy not in ("continuous", "static"):
+            raise ValueError(f"unknown policy {self.policy!r}")
+        if self.clock not in CLOCK_MODES:
+            raise ValueError(f"unknown clock {self.clock!r} "
+                             f"(expected one of {CLOCK_MODES})")
+        if self.prefill_chunk < 0:
+            raise ValueError(f"prefill_chunk={self.prefill_chunk} must "
+                             "be >= 0")
+        if isinstance(self.admission, str) and \
+                self.admission not in ("fcfs", "slo"):
+            raise ValueError(f"unknown admission policy "
+                             f"{self.admission!r} (expected 'fcfs', 'slo' "
+                             "or an AdmissionPolicy instance)")
+
+
+#: the legacy serve() kwargs ServePolicy absorbed, in their historical order
+LEGACY_SERVE_KWARGS = ("max_slots", "num_requests", "arrival", "rate",
+                       "eos_id", "policy", "deadline_steps", "queue_limit",
+                       "max_steps")
+
+
+def serve_policy_from_legacy_kwargs(**kwargs) -> ServePolicy:
+    """The :class:`ServePolicy` a deprecated ``serve(max_slots=..., ...)``
+    call meant (the ``plan_from_legacy_flags`` idiom). Emits ONE
+    `DeprecationWarning` naming the kwargs that were passed; unknown
+    kwargs raise TypeError like a real signature would."""
+    given = {k: v for k, v in kwargs.items() if v is not None}
+    unknown = set(given) - set(LEGACY_SERVE_KWARGS)
+    if unknown:
+        raise TypeError(f"serve() got unexpected keyword arguments "
+                        f"{sorted(unknown)}")
+    if given:
+        warnings.warn(
+            f"serve({', '.join(sorted(given))}=...) kwargs are deprecated; "
+            "pass serve(policy=ServePolicy(...)) instead",
+            DeprecationWarning, stacklevel=3)
+    return ServePolicy(**given)
+
+
+# ---------------------------------------------------------------------------
+# Admission policies (host-side, framework-free)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class AdmissionContext:
+    """What an :class:`AdmissionPolicy` may read when ordering the waiting
+    queue: the scheduler clock, slot/queue pressure, the chunked-prefill
+    granularity, and the engine event log's per-step degradation signals
+    (timeouts and queue rejections so far)."""
+    step: int
+    now: float                      # clock units (steps, or seconds)
+    free_slots: int
+    queue_depth: int
+    prefill_chunk: int              # 0 = whole-prompt prefill
+    default_deadline: Optional[float]   # engine-wide, clock units
+    timeouts: int = 0
+    rejects: int = 0
+    step_dt: float = 1.0            # clock units per scheduler iteration
+    # engine-supplied clock resolution (wall/virtual modes map seconds
+    # fields); the step-clock fallback below keeps the context usable
+    # standalone in tests
+    deadline_fn: Optional[Callable[[Request], Optional[float]]] = None
+
+    def deadline_of(self, req: Request) -> Optional[float]:
+        """Absolute deadline of ``req`` in clock units (None = none)."""
+        if self.deadline_fn is not None:
+            return self.deadline_fn(req)
+        d = req.deadline_steps if req.deadline_steps is not None \
+            else self.default_deadline
+        return None if d is None else req.arrival_step + d
+
+    def cost_of(self, req: Request) -> float:
+        """Estimated clock units to finish ``req`` from admission: its
+        prefill chunks plus one decode iteration per generated token,
+        scaled by ``step_dt``."""
+        chunk = self.prefill_chunk or len(req.prompt)
+        iters = -(-len(req.prompt) // max(chunk, 1)) + req.max_gen
+        return iters * self.step_dt
+
+
+class AdmissionPolicy:
+    """Orders (and optionally culls) the waiting queue each scheduler
+    iteration; the engine admits from the front of the returned list while
+    slots are free. Requests NOT returned stay queued (and expire through
+    the normal deadline machinery)."""
+    name = "base"
+
+    def select(self, waiting: List[Request],
+               ctx: AdmissionContext) -> List[Request]:
+        raise NotImplementedError
+
+
+class FCFSAdmission(AdmissionPolicy):
+    """Arrival order, admit everything — the historical behaviour."""
+    name = "fcfs"
+
+    def select(self, waiting, ctx):
+        return list(waiting)
+
+
+class SLOAdmission(AdmissionPolicy):
+    """Deadline-aware admission: earliest-deadline-first with feasibility
+    culling. A request whose estimated cost (prefill chunks + max_gen
+    decode steps) cannot fit inside its remaining deadline is SKIPPED —
+    admitting it would burn a slot on work the deadline eviction will
+    throw away, starving feasible requests behind it (the fcfs failure
+    mode on a deadline-heavy queue). Ties break toward shorter prompts
+    (protecting time-to-first-token of the cheap requests), then rid."""
+    name = "slo"
+
+    def select(self, waiting, ctx):
+        feasible = []
+        for r in waiting:
+            d = ctx.deadline_of(r)
+            if d is not None and ctx.now + ctx.cost_of(r) > d:
+                continue                      # doomed: let it expire queued
+            feasible.append(r)
+        inf = float("inf")
+        return sorted(feasible,
+                      key=lambda r: (ctx.deadline_of(r) if ctx.deadline_of(r)
+                                     is not None else inf,
+                                     len(r.prompt), r.rid))
+
+
+def resolve_admission(admission) -> AdmissionPolicy:
+    """"fcfs" | "slo" | AdmissionPolicy instance -> AdmissionPolicy."""
+    if isinstance(admission, AdmissionPolicy):
+        return admission
+    if admission == "fcfs":
+        return FCFSAdmission()
+    if admission == "slo":
+        return SLOAdmission()
+    raise ValueError(f"unknown admission policy {admission!r}")
 
 
 # ---------------------------------------------------------------------------
@@ -146,6 +338,10 @@ class SlotScheduler:
         self.complete_time: Dict[int, float] = {}
         self.gen_done: Dict[int, int] = {}
         self.events: List[tuple] = []
+        # slots whose request is still mid-chunked-prefill: they own the
+        # slot (nobody else can be admitted into it) but emit NO tokens
+        # until prefill_done() flips them live
+        self.prefilling: set = set()
 
     # -- queries ------------------------------------------------------------
 
@@ -158,7 +354,7 @@ class SlotScheduler:
     # -- transitions ---------------------------------------------------------
 
     def admit(self, slot: int, req: Request, step: int, hist_idx: int,
-              resume: bool = False) -> None:
+              resume: bool = False, prefilling: bool = False) -> None:
         if self.owner[slot] is not None:
             raise RuntimeError(
                 f"slot {slot} already serves request {self.owner[slot]}")
@@ -171,8 +367,26 @@ class SlotScheduler:
         self.segments.setdefault(req.rid, []).append([hist_idx, slot, 0])
         self.first_hist.setdefault(req.rid, hist_idx)
         self.admit_step[req.rid] = step
+        if prefilling:
+            # mid-chunked-prefill: hist_idx is provisional (the engine
+            # rewrites it via prefill_done once the last chunk lands and
+            # the slot starts emitting)
+            self.prefilling.add(slot)
         self.events.append(("resume" if resume else "admit", step, slot,
                             req.rid))
+
+    def prefill_done(self, slot: int, step: int, hist_idx: int) -> None:
+        """The slot's chunked prefill finished: it starts emitting at
+        history row ``hist_idx``. Rewrites the provisional segment start
+        recorded at admit time (the engine only knows the true emission
+        row once the final chunk lands)."""
+        if slot not in self.prefilling:
+            raise RuntimeError(f"prefill_done on non-prefilling slot {slot}")
+        self.prefilling.discard(slot)
+        rid = self.owner[slot]
+        self.segments[rid][-1][0] = hist_idx
+        if len(self.segments[rid]) == 1:
+            self.first_hist[rid] = hist_idx
 
     def total_gen(self, rid: int) -> int:
         """Emissions logged for the request across ALL of its segments."""
@@ -190,6 +404,8 @@ class SlotScheduler:
         Returns the freed slot ids."""
         freed = []
         for slot in self.live_slots():
+            if slot in self.prefilling:
+                continue                     # mid-prefill: emits nothing
             rid = self.owner[slot]
             self.logged[slot] += 1
             self.segments[rid][-1][2] += 1
@@ -218,6 +434,7 @@ class SlotScheduler:
         self.complete_time[rid] = now
         self.events.append((reason, step, slot, rid))
         self.owner[slot] = None
+        self.prefilling.discard(slot)
         return rid
 
     def preempt(self, slot: int, step: int) -> int:
@@ -229,6 +446,7 @@ class SlotScheduler:
         if rid is None:
             raise RuntimeError(f"preempt on free slot {slot}")
         self.owner[slot] = None
+        self.prefilling.discard(slot)
         self.events.append(("preempt", step, slot, rid))
         return rid
 

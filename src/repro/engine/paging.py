@@ -178,7 +178,7 @@ class BlockPool:
             hashes.append(h)
         return hashes
 
-    def admit(self, slot: int, prompt
+    def admit(self, slot: int, prompt, pending_all: bool = False
               ) -> Tuple[int, Optional[Tuple[int, int, int]]]:
         """Allocate the slot's block list for ``prompt``; returns ``(hist,
         cow)``. ``hist`` is the number of leading tokens already present in
@@ -195,9 +195,14 @@ class BlockPool:
         prefills and after CoW copies) and is not matchable until the
         engine calls :meth:`mark_written`; matching stops at the first
         pending block so nothing reads or CoW-copies unwritten content.
-        Raises PoolExhausted with no state change (blocks this admission
-        registered are deregistered again — their content was never
-        written, so a retry must not see them as prefix hits)."""
+        ``pending_all=True`` (chunked prefill) marks EVERY block this
+        admission registered as pending regardless of a prefix hit — the
+        content lands one chunk at a time over several engine iterations,
+        so nothing may match these blocks until the final chunk's
+        :meth:`mark_written`. Raises PoolExhausted with no state change
+        (blocks this admission registered are deregistered again — their
+        content was never written, so a retry must not see them as prefix
+        hits)."""
         if slot in self.slot_blocks:
             raise RuntimeError(f"slot {slot} already holds blocks")
         plen = len(prompt)
@@ -240,10 +245,12 @@ class BlockPool:
                 self._deregister(b)
             self.release_slot(slot)   # roll back; the engine may preempt
             raise
-        if hist > 0:
+        if hist > 0 or pending_all:
             # a prefix hit means the engine prefills only the TAIL (the
             # "shared" plan, which runs after fresh prefills and CoW) —
-            # until that prefill executes these blocks hold no content
+            # until that prefill executes these blocks hold no content.
+            # Chunked admissions (pending_all) fill even hist-0 blocks
+            # incrementally, so the same discipline applies to all of them.
             self.pending.update(newly_registered)
         self._bump_peak()
         return hist, cow
@@ -303,11 +310,18 @@ class BlockPool:
     def unpin(self, b: int):
         self._drop(-1, b)
 
-    def mark_written(self):
+    def mark_written(self, blocks=None):
         """The engine finished an admission round: every planned prefill
         (fresh and shared-tail) has executed, so blocks registered this
-        round now hold real content and become prefix-matchable."""
-        self.pending.clear()
+        round now hold real content and become prefix-matchable.
+        ``blocks`` restricts the clear to one request's blocks (a chunked
+        admission finishing its LAST chunk must not unblock other slots'
+        still-unwritten pending blocks)."""
+        if blocks is None:
+            self.pending.clear()
+        else:
+            for b in blocks:
+                self.pending.discard(b)
 
     def sleep(self):
         """Pool-wide sleep between serve() calls: drop the prefix registry

@@ -377,7 +377,8 @@ class RolloutEngine:
         phase_s: Dict[str, float] = {}
 
         t0 = time.monotonic()
-        res = self.serve.serve(self._make_requests(it), max_slots=self.B)
+        res = self.serve.serve(self._make_requests(it),
+                               policy=batching.ServePolicy(max_slots=self.B))
         groups = self._collect_groups(res["requests"])
         phase_s["generate"] = time.monotonic() - t0
         gen_tokens = int(sum(len(t.tokens) for g in groups for t in g))

@@ -49,6 +49,27 @@ Pool/prefix state PERSISTS across serve() calls, so a warmed engine serves
 repeat prompts at a high prefix hit rate. Every terminal status — ok,
 timeout, rejected, failed — releases the slot's blocks through one choke
 point, so the pool can never leak from an eviction path.
+
+Wall-clock serving (``serve(policy=batching.ServePolicy(...))``): the
+nine historical serve() kwargs are deprecated aliases of ONE policy
+dataclass, which additionally configures
+
+* chunked prefill (``prefill_chunk=N``): each admitted prompt is cut into
+  N-token chunks prefilled one per scheduler iteration, interleaved with
+  the co-residents' decode steps — a long prompt no longer stalls every
+  live stream for its whole prefill, and the emitted tokens stay BITWISE
+  identical to whole-prompt admission (dense and paged);
+* a clock mode ("step" | "wall" | "virtual"): seconds-denominated
+  arrivals/deadlines (``Request.arrival_time``/``deadline_s``) with a
+  deterministic virtual clock for tests and a StepWatchdog for slow-step
+  reporting;
+* pluggable admission ("fcfs" | "slo"): SLO admission is
+  earliest-deadline-first with feasibility culling — doomed requests are
+  left to expire in the queue instead of burning slots;
+* streaming: ``Request.on_token`` / :meth:`ServeEngine.serve_stream`
+  observe each emitted token from the SAME fused per-iteration host sync
+  that serves the eos check and the quarantine health pass (one [B]-sized
+  transfer per iteration, never one per concern).
 """
 from __future__ import annotations
 
@@ -142,6 +163,7 @@ class ServeEngine:
         self._serving = {}                # slot-count -> jitted serving fns
         self._cache_axes = None           # dense merge axes, once per build
         self._paged_state = None          # pool + device cache, persistent
+        self._stream_cb = None            # serve_stream's per-token hook
 
     def _log(self, msg: str) -> None:
         if self.verbose:
@@ -379,17 +401,55 @@ class ServeEngine:
             tok = jnp.where(mask, tok0, tok)
             return tok, cache, keys
 
+        def admit_chunk(params, tails, lengths, hist, mask, rids, tok,
+                        cache, keys, temps, topks):
+            # chunked prefill directly on the LIVE dense cache: each row
+            # advances its tail (absolute positions hist..lengths); rows
+            # with (lengths, hist) = (len, len) carry an empty tail — no
+            # writes, length preserved. ``mask`` marks rows landing their
+            # FINAL chunk: only those re-seed their key stream and sample
+            # their first token.
+            b = {"tokens": tails, "lengths": lengths, "hist": hist}
+            logits, cache = model_mod.prefill_with_cache(cfg, params, b,
+                                                         cache)
+            fresh_keys = jax.vmap(
+                lambda r: jax.random.fold_in(base_key, r))(rids)
+            keys = jnp.where(mask[:, None], fresh_keys, keys)
+            tok0, keys2 = sample(logits, keys, temps, topks)
+            keys = jnp.where(mask[:, None], keys2, keys)
+            tok = jnp.where(mask, tok0, tok)
+            return tok, cache, keys
+
         def step(params, tok, cache, keys, temps, topks):
             logits, cache = model_mod.decode_step(cfg, params, {"token": tok},
                                                   cache, ragged=True)
             tok, keys = sample(logits, keys, temps, topks)
             return tok, cache, keys
 
+        def step_active(params, tok, cache, keys, temps, topks, active):
+            # chunked-mode decode: rows with active=False (mid-prefill)
+            # drop their cache write and keep their length frozen
+            logits, cache = model_mod.decode_step(
+                cfg, params, {"token": tok, "active": active}, cache,
+                ragged=True)
+            tok, keys = sample(logits, keys, temps, topks)
+            return tok, cache, keys
+
+        health_fn = rsl.row_health_fn(axes)
+
+        def sync(tok, cache):
+            # the fused per-iteration host readback: sampled tokens (eos /
+            # streaming) and row health (quarantine) in ONE [2, B] transfer
+            return jnp.stack([tok, health_fn(cache).astype(jnp.int32)])
+
         fns = {"admit": jax.jit(admit), "step": jax.jit(step),
+               "admit_chunk": jax.jit(admit_chunk),
+               "step_active": jax.jit(step_active),
+               "sync": jax.jit(sync),
                "init": init_fn, "base_key": base_key, "axes": axes,
                # resilience pair: [B] row health + NaN row poisoning (the
                # quarantine detector and its chaos-test driver)
-               "health": jax.jit(rsl.row_health_fn(axes)),
+               "health": jax.jit(health_fn),
                "poison": jax.jit(rsl.poison_rows_fn(axes))}
         self._serving[key] = fns
         return fns
@@ -528,6 +588,20 @@ class ServeEngine:
             tok, keys = sample(logits, keys, temps, topks)
             return tok, cache, keys
 
+        def step_active(params, tok, cache, keys, temps, topks, active):
+            # chunked-mode decode: inactive (mid-prefill) rows write to the
+            # trash block and keep their length frozen
+            logits, cache = model_mod.decode_step(
+                cfg, params, {"token": tok, "active": active}, cache,
+                ragged=True)
+            tok, keys = sample(logits, keys, temps, topks)
+            return tok, cache, keys
+
+        def sync(tok, cache):
+            # fused host readback: tokens + row health in ONE [2, B] pull
+            return jnp.stack(
+                [tok, paging.paged_row_health(cache).astype(jnp.int32)])
+
         def wake(cache, payload, idx, slot_mask, new_len, tok, last_tok,
                  keys, key_row):
             cache = paging.upload_slot(cache, payload, idx, slot_mask,
@@ -539,6 +613,8 @@ class ServeEngine:
         fns = {"admit_fresh": jax.jit(admit_fresh),
                "admit_shared": jax.jit(admit_shared),
                "step": jax.jit(step),
+               "step_active": jax.jit(step_active),
+               "sync": jax.jit(sync),
                "gather": jax.jit(paging.gather_slot),
                "wake": jax.jit(wake),
                "copy": jax.jit(paging.copy_blocks),
@@ -583,36 +659,57 @@ class ServeEngine:
         return accepted
 
     def serve(self, requests: Optional[List[batching.Request]] = None, *,
-              max_slots: Optional[int] = None,
-              num_requests: int = 8,
-              arrival: str = "none",
-              rate: float = 0.5,
-              eos_id: Optional[int] = None,
-              policy: str = "continuous",
-              deadline_steps: Optional[int] = None,
-              queue_limit: Optional[int] = None,
-              max_steps: int = 1_000_000) -> Dict[str, Any]:
+              policy: Any = None, **legacy) -> Dict[str, Any]:
         """Serve a request queue with iteration-level (continuous) batching.
 
+        Configuration is ONE object: ``serve(policy=batching.ServePolicy(
+        ...))``. The nine historical kwargs (``max_slots`` /
+        ``num_requests`` / ``arrival`` / ``rate`` / ``eos_id`` /
+        ``policy`` (str) / ``deadline_steps`` / ``queue_limit`` /
+        ``max_steps``) remain as deprecated aliases: passing any of them
+        resolves through ``batching.serve_policy_from_legacy_kwargs`` with
+        ONE DeprecationWarning naming the kwargs to migrate.
+
         ``requests``: list of ``batching.Request``; None synthesises a
-        staggered workload of ``num_requests`` with the given ``arrival``
-        trace ("none" | "poisson" at ``rate`` requests per decode step).
+        staggered workload of ``policy.num_requests`` with the given
+        ``policy.arrival`` trace ("none" | "poisson" at ``policy.rate``
+        requests per decode step).
 
-        ``policy="continuous"`` admits into any freed slot the moment a row
-        finishes; ``policy="static"`` is the fixed-batch baseline (a new
-        batch is admitted only when EVERY slot is free) — same jitted
-        functions, so the two are directly comparable.
+        ``ServePolicy.policy="continuous"`` admits into any freed slot the
+        moment a row finishes; ``"static"`` is the fixed-batch baseline (a
+        new batch is admitted only when EVERY slot is free) — same jitted
+        functions, so the two are directly comparable. Beyond the
+        historical step-clock behaviour, the policy adds:
 
-        ``eos_id``: optional early-stop token (validated against the vocab
-        — a bad id is an operator error and raises). Checking it needs the
-        token values on the host, so it costs one [B]-int transfer per
-        step; leave None for fully async stepping.
+        * ``prefill_chunk=N`` — chunked prefill: each admitted prompt is
+          cut into N-token chunks prefilled one per scheduler iteration,
+          interleaved with the co-residents' decode steps. A mid-prefill
+          request has status "prefilling" and emits nothing; its token
+          stream is BITWISE identical to whole-prompt admission (dense and
+          paged — the paged path scatters each chunk into its blocks as it
+          lands, and prefix-cache hits skip straight to the first cold
+          chunk).
+        * ``clock`` — "step" (the historical unit clock), "wall"
+          (``time.monotonic`` seconds) or "virtual" (deterministic
+          seconds, ``t * step_dt``). Seconds clocks honor
+          ``Request.arrival_time`` / ``Request.deadline_s`` and
+          ``ServePolicy.deadline_s``; ``watchdog_s`` arms a resilience
+          ``StepWatchdog`` around each decode step and logs "slow_step"
+          events (it blocks on the step's results, trading async dispatch
+          for a truthful per-step latency verdict).
+        * ``admission`` — "fcfs" (historical) | "slo" (earliest-deadline-
+          first with feasibility culling) | any
+          ``batching.AdmissionPolicy`` instance, reading queue depth and
+          the run's timeout/reject counts from the admission context.
+        * streaming — ``Request.on_token(rid, token, step, wall_t)`` fires
+          per emitted token from the fused per-iteration host sync (the
+          same single transfer that serves the eos check and the
+          quarantine health pass); see :meth:`serve_stream`.
 
-        Degradation contract: serve() NEVER raises for a per-request
-        failure. A malformed request is rejected at enqueue time
-        (``status="rejected"``); ``deadline_steps`` (engine-wide, or
-        per-request via ``Request.deadline_steps``) expires a request —
-        waiting or live — as ``status="timeout"`` with its partial tokens;
+        Degradation contract (unchanged): serve() NEVER raises for a
+        per-request failure. A malformed request is rejected at enqueue
+        time (``status="rejected"``); deadlines expire a request — waiting
+        or live — as ``status="timeout"`` with its partial tokens;
         ``queue_limit`` bounds the admission queue with explicit rejection
         at arrival; a request whose cache rows go non-finite is
         quarantined (``status="failed"``) with its co-residents bitwise
@@ -621,30 +718,101 @@ class ServeEngine:
         completes normally returns ``status="ok"``.
 
         Returns the requests (``tokens`` + ``status`` filled), the
-        scheduler event log, and throughput/latency metrics (p50/p99 over
-        requests that produced tokens)."""
+        scheduler event log, and throughput/latency/TTFT/goodput metrics
+        (p50/p99 over requests that produced tokens)."""
+        if isinstance(policy, batching.ServePolicy):
+            if legacy:
+                raise TypeError(
+                    "serve(policy=ServePolicy(...)) does not combine with "
+                    f"the deprecated kwargs {sorted(legacy)} — set those "
+                    "fields on the ServePolicy instead")
+            sp = policy
+        else:
+            if policy is not None:
+                legacy["policy"] = policy
+            sp = batching.serve_policy_from_legacy_kwargs(**legacy)
+        return self._serve_impl(requests, sp)
+
+    def serve_stream(self, requests: Optional[List[batching.Request]] = None,
+                     *, policy: Any = None, **legacy):
+        """Run :meth:`serve` on a background thread and yield ``(rid,
+        token)`` pairs live, in emission order (the launcher's
+        ``--stream`` path). The generator's return value
+        (``StopIteration.value``) is serve()'s full result dict.
+
+        Greedy rows are bitwise identical with or without streaming: the
+        hook only OBSERVES the fused per-iteration host copy of the
+        sampled tokens — it adds no device transfer and feeds nothing back
+        into the jitted fns."""
+        import queue
+        import threading
+
+        q: "queue.Queue" = queue.Queue()
+        sentinel = object()
+        box: Dict[str, Any] = {}
+
+        def run():
+            prev = self._stream_cb
+            try:
+                self._stream_cb = lambda rid, tok, step, wt: q.put((rid,
+                                                                    tok))
+                box["result"] = self.serve(requests, policy=policy,
+                                           **legacy)
+            except BaseException as e:       # surfaced to the consumer
+                box["error"] = e
+            finally:
+                self._stream_cb = prev
+                q.put(sentinel)
+
+        th = threading.Thread(target=run, daemon=True)
+        th.start()
+        while True:
+            item = q.get()
+            if item is sentinel:
+                break
+            yield item
+        th.join()
+        if "error" in box:
+            raise box["error"]
+        return box["result"]
+
+    def _serve_impl(self, requests: Optional[List[batching.Request]],
+                    sp: "batching.ServePolicy") -> Dict[str, Any]:
         import jax
         import jax.numpy as jnp
         import numpy as np
 
         self.build()
+        policy, eos_id = sp.policy, sp.eos_id
+        deadline_steps, queue_limit = sp.deadline_steps, sp.queue_limit
+        max_steps, prefill_chunk = sp.max_steps, sp.prefill_chunk
+        clock, step_dt = sp.clock, sp.step_dt
         if self.cfg.family not in self._SLOT_FAMILIES:
             raise NotImplementedError(
                 f"continuous batching serves attention-cache families "
                 f"{self._SLOT_FAMILIES}, not {self.cfg.family!r} (a "
                 f"recurrent prefill state would absorb ragged pad tails)")
-        if policy not in ("continuous", "static"):
-            raise ValueError(f"unknown policy {policy!r}")
         if eos_id is not None and not (0 <= eos_id < self.cfg.vocab_size):
             raise ValueError(
                 f"eos_id={eos_id} outside the vocab [0, "
                 f"{self.cfg.vocab_size}) — no request could ever emit it")
-        B = max_slots or self.batch
+        if prefill_chunk:
+            if self.cfg.family not in ("dense", "moe"):
+                raise NotImplementedError(
+                    f"chunked prefill supports dense/moe decoder stacks, "
+                    f"not {self.cfg.family!r} (the VLM patch prefix is "
+                    "prefilled in one piece)")
+            if self.cfg.attn_window:
+                raise NotImplementedError(
+                    f"chunked prefill with attn_window="
+                    f"{self.cfg.attn_window}: ring-buffer windows prefill "
+                    "whole-prompt")
+        B = sp.max_slots or self.batch
         S_pad = self.prompt_len
         if requests is None:
             requests = batching.synthetic_requests(
-                num_requests, self.cfg.vocab_size, S_pad, self.gen,
-                arrival=arrival, rate=rate, seed=self.spec.seed)
+                sp.num_requests, self.cfg.vocab_size, S_pad, self.gen,
+                arrival=sp.arrival, rate=sp.rate, seed=self.spec.seed)
         if not requests:
             raise ValueError("serve() needs at least one request")
         accepted = self._validate_requests(requests, S_pad)
@@ -690,7 +858,67 @@ class ServeEngine:
             accepted = fits
         else:
             fns = self._serving_fns(B)
-        pending = sorted(accepted, key=lambda r: (r.arrival_step, r.rid))
+
+        # -- clock machinery -------------------------------------------------
+        # "step" counts scheduler iterations (the historical unit clock —
+        # bitwise-stable for every existing test); "virtual" is the SAME
+        # deterministic schedule denominated in seconds (t * step_dt);
+        # "wall" reads time.monotonic. All arrival/deadline comparisons go
+        # through these three helpers, so the step-clock arithmetic is
+        # numerically identical to the historical integer comparisons.
+        adm = batching.resolve_admission(sp.admission)
+        scale = 1.0 if clock == "step" else step_dt
+        unit = "steps" if clock == "step" else "s"
+        _mono0 = time.monotonic()
+
+        def clock_now():
+            if clock == "wall":
+                return time.monotonic() - _mono0
+            return t * scale
+
+        def arr_of(r):
+            if clock != "step" and r.arrival_time is not None:
+                return r.arrival_time
+            return r.arrival_step * scale
+
+        def ddl_of(r):
+            """Relative deadline of ``r`` in clock units (None = none)."""
+            if clock != "step" and r.deadline_s is not None:
+                return r.deadline_s
+            if r.deadline_steps is not None:
+                return r.deadline_steps * scale
+            if clock != "step" and sp.deadline_s is not None:
+                return sp.deadline_s
+            if deadline_steps is not None:
+                return deadline_steps * scale
+            return None
+
+        timeouts_ct = rejects_ct = 0
+
+        def admission_order(free_ct):
+            """The waiting queue as the admission policy orders (and
+            possibly culls) it; FCFS short-circuits to the queue itself —
+            the historical behaviour, no context construction per step."""
+            if type(adm) is batching.FCFSAdmission:
+                return list(waiting)
+            ctx = batching.AdmissionContext(
+                step=t, now=cnow, free_slots=free_ct,
+                queue_depth=len(waiting), prefill_chunk=prefill_chunk,
+                default_deadline=(deadline_steps * scale
+                                  if deadline_steps is not None else None),
+                timeouts=timeouts_ct, rejects=rejects_ct, step_dt=scale,
+                deadline_fn=lambda r: (
+                    None if ddl_of(r) is None else arr_of(r) + ddl_of(r)))
+            return adm.select(list(waiting), ctx)
+
+        wd = rsl.StepWatchdog(sp.watchdog_s) if sp.watchdog_s else None
+        # streaming hooks observe the fused host sync — their presence (or
+        # eos / an armed injector) is what turns that sync on at all
+        stream_hooks = (self._stream_cb is not None or
+                        any(r.on_token is not None for r in accepted))
+        need_sync = guard or stream_hooks or eos_id is not None
+
+        pending = sorted(accepted, key=lambda r: (arr_of(r), r.rid))
         waiting: List[batching.Request] = []
         parked: Dict[int, paging.Parked] = {}
         tok = jnp.zeros((B,), jnp.int32)
@@ -731,9 +959,31 @@ class ServeEngine:
         else:
             self._warmup(("serve_admit", B), fns["admit"], self.params, zp,
                          zl, zm, zr, tok, cache, keys, *samp())
-        self._warmup(("serve_step", B), fns["step"], self.params, tok, cache,
-                     keys, *samp())
+        if prefill_chunk:
+            ztail = jnp.zeros((B, prefill_chunk), jnp.int32)
+            zi = jnp.zeros((B,), jnp.int32)
+            chunk_fn = fns["admit_shared"] if paged else fns["admit_chunk"]
+            self._warmup(("serve_chunk", B, prefill_chunk), chunk_fn,
+                         self.params, ztail, zi, zi, zm, zr, tok, cache,
+                         keys, *samp())
+            self._warmup(("serve_step_active", B), fns["step_active"],
+                         self.params, tok, cache, keys, *samp(),
+                         jnp.ones((B,), bool))
+        else:
+            self._warmup(("serve_step", B), fns["step"], self.params, tok,
+                         cache, keys, *samp())
+        if guard:
+            self._warmup(("serve_sync", B), fns["sync"], tok, cache)
         preemptions = offloads = wakes = 0
+        host_syncs = emission_iters = 0
+        first_emit: Dict[int, float] = {}   # rid -> clock time of 1st token
+        # chunked-prefill jobs: slot -> {req, prompt, off, hist0, blocks,
+        # poison}; one chunk per job advances per scheduler iteration
+        prefill_jobs: Dict[int, Dict[str, Any]] = {}
+        # dense chunked mode tracks every row's device cache length on the
+        # host (chunk calls must pass passenger rows their EXACT length);
+        # decode increments all active rows, chunks set their row
+        dense_len = np.zeros((B,), np.int64)
 
         def release_slot_resources(slot, upload=True):
             """THE terminal choke point: every path that frees a slot —
@@ -745,6 +995,7 @@ class ServeEngine:
             loop releasing several slots can upload once afterwards."""
             temp_row[slot] = self.temperature
             topk_row[slot] = 0
+            prefill_jobs.pop(slot, None)
             if paged:
                 pool.release_slot(slot)
                 st["table"][slot] = trash
@@ -774,6 +1025,23 @@ class ServeEngine:
             The pending sampled token is NOT yet in the history, so on wake
             it is re-injected (level 1) or re-derived (level 2)."""
             nonlocal preemptions, offloads
+            if slot in sched.prefilling:
+                # a mid-prefill victim has no sampled token to re-inject
+                # and its cache row is half-filled — park at level-2
+                # semantics regardless of sleep_level: keep only the
+                # prompt, re-chunk from scratch on wake
+                prefill_jobs.pop(slot, None)
+                rid = sched.preempt(slot, t)
+                parked[rid] = paging.Parked(rid=rid, level=2, n_tokens=0,
+                                            generated=[])
+                preemptions += 1
+                pool._log("page_drop", slot, rid)
+                release_slot_resources(slot)
+                self.events.append("preempt", t, rid=rid, slot=slot,
+                                   level=2, reason=why)
+                self._log(f"step {t}: mid-prefill request {rid} preempted "
+                          f"from slot {slot} (level 2: {why})")
+                return
             rid = sched.preempt(slot, t)
             p = paging.Parked(rid=rid, level=self.sleep_level,
                               n_tokens=int(row_len[slot]), generated=[])
@@ -840,19 +1108,18 @@ class ServeEngine:
             live = sched.live_slots()
             if not live:
                 return None
-            return max(live,
+            # prefer a victim with tokens to park over a mid-prefill row
+            # (whose park drops all its prefill work)
+            pool_ = [s for s in live if s not in sched.prefilling] or live
+            return max(pool_,
                        key=lambda s: (sched.admit_step[sched.owner[s]], s))
 
-        def deadline_of(r):
-            return r.deadline_steps if r.deadline_steps is not None \
-                else deadline_steps
-
-        def quarantine(now):
-            """Evict live rows whose cache went non-finite. Rows are
+        def quarantine(health, now):
+            """Evict live rows whose cache went non-finite (``health`` is
+            this iteration's fused host sync verdict). Rows are
             independent across the batch axis, so a NaN row cannot perturb
             its co-residents — the quarantine just frees the slot and
             reports the failure instead of serving garbage."""
-            health = np.asarray(fns["health"](cache))
             for slot in sched.live_slots():
                 if not health[slot]:
                     rid = sched.evict(slot, t, now, "failed")
@@ -863,6 +1130,31 @@ class ServeEngine:
                     self.events.append("quarantine", t, rid=rid, slot=slot)
                     self._log(f"step {t}: request {rid} quarantined "
                               f"(non-finite cache rows)")
+
+        def paged_poison(slots):
+            """Quarantine isolation for the paged injector: give each
+            poisoned row a PRIVATE copy of every block it shares (or has
+            registered for future sharing) before the NaN fill — the whole
+            block is NaN'd anyway, so the CoW needs no device copy — and
+            fill only blocks the row exclusively owns. Co-resident rows
+            and the prefix registry never see the poison. If the pool
+            cannot supply a private copy, the shared block is left intact
+            (un-poisoned) rather than corrupting its other readers."""
+            nonlocal cache
+            idx = np.full((B, nb_max), trash + 1, np.int32)
+            for slot in slots:
+                nblk = len(pool.slot_blocks.get(slot, []))
+                for lb in range(nblk):
+                    try:
+                        pool.prepare_write(slot, lb * bs)
+                    except paging.PoolExhausted:
+                        break
+                for lb, b in enumerate(pool.slot_blocks.get(slot, [])):
+                    if pool.ref[b] == 1 and b not in pool.registered:
+                        idx[slot, lb] = b
+                refresh_row(slot)
+            cache["table"] = jnp.asarray(st["table"].copy())
+            cache = fns["poison"](cache, jnp.asarray(idx))
 
         history: List[Any] = []          # device [B] token vectors
         owners_log: List[np.ndarray] = []
@@ -876,54 +1168,60 @@ class ServeEngine:
                 truncated = True         # graceful: time the stragglers
                 break                    # out below instead of raising
             now = time.perf_counter()
+            cnow = clock_now()
             if paged:
                 pool.step = t            # stamp allocator events
             # -- arrivals (bounded admission queue) --------------------------
             n_arrived = 0
             for r in pending:
-                if r.arrival_step > t:
+                if arr_of(r) > cnow:
                     break                # pending is sorted by arrival
                 n_arrived += 1
                 arrival_wall.setdefault(r.rid, now)
                 if queue_limit is not None and len(waiting) >= queue_limit:
                     self._reject(r, f"admission queue full "
                                     f"(queue_limit={queue_limit})")
+                    rejects_ct += 1
                 else:
                     waiting.append(r)
             pending = pending[n_arrived:]
             # -- deadline expiry (waiting, then live) ------------------------
             still = []
             for r in waiting:
-                d = deadline_of(r)
-                if d is not None and t - r.arrival_step >= d:
+                d = ddl_of(r)
+                if d is not None and cnow - arr_of(r) >= d:
                     r.status = "timeout"
-                    r.error = f"deadline of {d} steps expired in queue"
+                    r.error = f"deadline of {d:g} {unit} expired in queue"
                     r.tokens = np.zeros((0,), np.int32)
                     self.events.append("timeout", t, rid=r.rid,
                                        where="queue")
+                    timeouts_ct += 1
                 else:
                     still.append(r)
             waiting = still
             for slot in sched.live_slots():
                 r = sched.requests[sched.owner[slot]]
-                d = deadline_of(r)
-                if d is not None and t - r.arrival_step >= d:
+                d = ddl_of(r)
+                if d is not None and cnow - arr_of(r) >= d:
                     rid = sched.evict(slot, t, now, "timeout")
                     sched.requests[rid].status = "timeout"
-                    sched.requests[rid].error = (f"deadline of {d} steps "
+                    sched.requests[rid].error = (f"deadline of {d:g} {unit} "
                                                  f"expired mid-decode")
                     release_slot_resources(slot)
                     self.events.append("timeout", t, rid=rid, where="slot")
+                    timeouts_ct += 1
             for rid in list(parked):
                 r = sched.requests[rid]
-                d = deadline_of(r)
-                if d is not None and t - r.arrival_step >= d:
+                d = ddl_of(r)
+                if d is not None and cnow - arr_of(r) >= d:
                     parked.pop(rid)      # payload dropped with it
                     r.status = "timeout"
-                    r.error = f"deadline of {d} steps expired while parked"
+                    r.error = (f"deadline of {d:g} {unit} expired while "
+                               f"parked")
                     sched.close(rid, t, now, "timeout")
                     self.events.append("timeout", t, rid=rid,
                                        where="parked")
+                    timeouts_ct += 1
             # -- admissions --------------------------------------------------
             elig_ok = not (policy == "static" and sched.live_slots())
             if paged:
@@ -941,11 +1239,12 @@ class ServeEngine:
                     cands = [(sched.requests[rid], parked[rid])
                              for rid in list(parked)
                              if parked[rid].level == 2]
-                    cands += [(r, None) for r in waiting]
+                    cands += [(r, None) for r in
+                              admission_order(len(sched.free_slots()))]
                 S_res = S_pad + self.gen
                 plans = {}                  # (kind, width) -> [admission]
                 cow_pairs, cow_pins, poison_slots = [], [], []
-                taken_waiting = 0
+                admitted_rids = set()
                 for req, p in cands:
                     free_now = sched.free_slots()
                     if not free_now:
@@ -956,25 +1255,49 @@ class ServeEngine:
                         prompt = np.concatenate(
                             [prompt, np.asarray(p.generated, np.int64)])
                     try:
-                        hist_n, cow = pool.admit(slot, prompt)
+                        hist_n, cow = pool.admit(
+                            slot, prompt, pending_all=bool(prefill_chunk))
                     except paging.PoolExhausted:
                         break       # completions will free blocks; wait
                     sched.admit(slot, req, t, len(history),
-                                resume=p is not None)
+                                resume=p is not None,
+                                prefilling=bool(prefill_chunk))
                     set_sampling(slot, req)
                     refresh_row(slot)
-                    row_len[slot] = len(prompt)
-                    if cow:
-                        # the device copy is deferred until the source's
-                        # content is valid — pin it so a later admission in
-                        # this round cannot reclaim + overwrite it first
-                        cow_pairs.append(cow[:2])
-                        cow_pins.append(cow[0])
-                        pool.pin(cow[0])
-                    key2 = ("shared" if hist_n else "fresh",
-                            S_pad if p is None else S_res)
-                    plans.setdefault(key2, []).append(
-                        (slot, req, prompt, hist_n))
+                    poisoned = (self.injector is not None and
+                                self.injector.fires("poison_request",
+                                                    req.rid))
+                    if prefill_chunk:
+                        # chunked admission bypasses the plans machinery:
+                        # the chunk phase below prefills positions
+                        # hist_n.. one chunk per iteration (a prefix-cache
+                        # hit skips straight to the first cold chunk). The
+                        # full-hit CoW copy runs NOW — its source blocks
+                        # already hold written content.
+                        req.status = "prefilling"
+                        row_len[slot] = hist_n
+                        if cow:
+                            do_cow([cow[:2]])
+                        prefill_jobs[slot] = {
+                            "req": req, "prompt": prompt, "off": hist_n,
+                            "hist0": hist_n,
+                            "blocks": [b for b in pool.slot_blocks[slot]
+                                       if b in pool.pending],
+                            "poison": poisoned}
+                    else:
+                        row_len[slot] = len(prompt)
+                        if cow:
+                            # the device copy is deferred until the
+                            # source's content is valid — pin it so a
+                            # later admission in this round cannot reclaim
+                            # + overwrite it first
+                            cow_pairs.append(cow[:2])
+                            cow_pins.append(cow[0])
+                            pool.pin(cow[0])
+                        key2 = ("shared" if hist_n else "fresh",
+                                S_pad if p is None else S_res)
+                        plans.setdefault(key2, []).append(
+                            (slot, req, prompt, hist_n))
                     if was_live and t > 0:
                         admitted_mid_decode += 1
                     if p is not None:
@@ -984,14 +1307,14 @@ class ServeEngine:
                         self.events.append("wake", t, rid=req.rid,
                                            slot=slot, level=2)
                     else:
-                        taken_waiting += 1
-                    if self.injector is not None and \
-                            self.injector.fires("poison_request", req.rid):
-                        poison_slots.append(slot)
+                        admitted_rids.add(req.rid)
+                    if poisoned:
+                        if not prefill_chunk:
+                            poison_slots.append(slot)
                         self.events.append("inject", t,
                                            site="poison_request",
                                            rid=req.rid, slot=slot)
-                waiting = waiting[taken_waiting:]
+                waiting = [r for r in waiting if r.rid not in admitted_rids]
                 if plans:
                     cache["table"] = jnp.asarray(st["table"].copy())
                     # fresh admissions prefill (and REGISTER their blocks)
@@ -1048,45 +1371,47 @@ class ServeEngine:
                     # content and become prefix-matchable again
                     pool.mark_written()
                     if poison_slots:
-                        # quarantine isolation: give each poisoned row a
-                        # PRIVATE copy of every block it shares (or has
-                        # registered for future sharing) before the NaN
-                        # fill — the whole block is NaN'd anyway, so the
-                        # CoW needs no device copy — and fill only blocks
-                        # the row exclusively owns. Co-resident rows and
-                        # the prefix registry never see the poison. If the
-                        # pool cannot supply a private copy, the shared
-                        # block is left intact (un-poisoned) rather than
-                        # corrupting its other readers.
-                        idx = np.full((B, nb_max), trash + 1, np.int32)
-                        for slot in poison_slots:
-                            nblk = len(pool.slot_blocks.get(slot, []))
-                            for lb in range(nblk):
-                                try:
-                                    pool.prepare_write(slot, lb * bs)
-                                except paging.PoolExhausted:
-                                    break
-                            for lb, b in enumerate(
-                                    pool.slot_blocks.get(slot, [])):
-                                if pool.ref[b] == 1 and \
-                                        b not in pool.registered:
-                                    idx[slot, lb] = b
-                            refresh_row(slot)
-                        cache["table"] = jnp.asarray(st["table"].copy())
-                        cache = fns["poison"](cache, jnp.asarray(idx))
-                    if guard:
-                        quarantine(time.perf_counter())
+                        paged_poison(poison_slots)
             else:
                 free = sched.free_slots()
-                elig = waiting if elig_ok else []
+                elig = admission_order(len(free)) if elig_ok else []
                 take = min(len(free), len(elig))
-                if take:
+                if take and prefill_chunk:
+                    # chunked admission: allocate the slot and open a
+                    # prefill job — the chunk phase below pushes the first
+                    # chunk THIS iteration, so scheduling is unchanged
+                    was_live = bool(sched.live_slots())
+                    admitted_rids = set()
+                    for slot, req in zip(free[:take], elig[:take]):
+                        sched.admit(slot, req, t, len(history),
+                                    prefilling=True)
+                        req.status = "prefilling"
+                        set_sampling(slot, req)
+                        poisoned = (self.injector is not None and
+                                    self.injector.fires("poison_request",
+                                                        req.rid))
+                        if poisoned:
+                            self.events.append("inject", t,
+                                               site="poison_request",
+                                               rid=req.rid, slot=slot)
+                        prefill_jobs[slot] = {
+                            "req": req,
+                            "prompt": np.asarray(req.prompt, np.int64),
+                            "off": 0, "hist0": 0, "blocks": [],
+                            "poison": poisoned}
+                        admitted_rids.add(req.rid)
+                        if was_live and t > 0:
+                            admitted_mid_decode += 1
+                    waiting = [r for r in waiting
+                               if r.rid not in admitted_rids]
+                elif take:
                     was_live = bool(sched.live_slots())
                     prompts = np.zeros((B, S_pad), np.int32)
                     lengths = np.ones((B,), np.int32)
                     mask = np.zeros((B,), bool)
                     rids = np.zeros((B,), np.int32)
                     poison = np.zeros((B,), bool)
+                    admitted_rids = set()
                     for slot, req in zip(free[:take], elig[:take]):
                         prompts[slot, :len(req.prompt)] = req.prompt
                         lengths[slot] = len(req.prompt)
@@ -1094,6 +1419,7 @@ class ServeEngine:
                         rids[slot] = _sid(req)
                         sched.admit(slot, req, t, len(history))
                         set_sampling(slot, req)
+                        admitted_rids.add(req.rid)
                         if was_live and t > 0:
                             admitted_mid_decode += 1
                         if self.injector is not None and \
@@ -1103,7 +1429,8 @@ class ServeEngine:
                             self.events.append("inject", t,
                                                site="poison_request",
                                                rid=req.rid, slot=slot)
-                    waiting = waiting[take:]
+                    waiting = [r for r in waiting
+                               if r.rid not in admitted_rids]
                     tok, cache, keys = fns["admit"](
                         self.params, jnp.asarray(prompts),
                         jnp.asarray(lengths), jnp.asarray(mask),
@@ -1111,8 +1438,65 @@ class ServeEngine:
                     prefill_calls += 1
                     if poison.any():
                         cache = fns["poison"](cache, jnp.asarray(poison))
-                    if guard:
-                        quarantine(time.perf_counter())
+            # -- chunked prefill: every prefilling slot advances ONE chunk --
+            # (one batched call per iteration; rows on their FINAL chunk
+            # sample their first token exactly like a legacy admission, so
+            # it is logged as this iteration's emission)
+            if prefill_jobs:
+                C = prefill_chunk
+                tails = np.zeros((B, C), np.int32)
+                lengths = np.zeros((B,), np.int32)
+                hist_a = np.zeros((B,), np.int32)
+                mask = np.zeros((B,), bool)
+                rids = np.zeros((B,), np.int32)
+                # passenger rows: empty tail at their own EXACT length —
+                # no writes, length preserved (the paged shared-tail
+                # admission convention)
+                mirror = row_len if paged else dense_len
+                lengths[:] = mirror
+                hist_a[:] = mirror
+                finals = []
+                for slot, job in prefill_jobs.items():
+                    prompt, off = job["prompt"], job["off"]
+                    end = min(off + C, len(prompt))
+                    tails[slot, :end - off] = prompt[off:end]
+                    lengths[slot] = end
+                    hist_a[slot] = off
+                    last = end >= len(prompt)
+                    mask[slot] = last
+                    rids[slot] = _sid(job["req"])
+                    job["off"] = end
+                    if last:
+                        finals.append((slot, job))
+                chunk_fn = fns["admit_shared"] if paged \
+                    else fns["admit_chunk"]
+                if paged:
+                    cache["table"] = jnp.asarray(st["table"].copy())
+                tok, cache, keys = chunk_fn(
+                    self.params, jnp.asarray(tails), jnp.asarray(lengths),
+                    jnp.asarray(hist_a), jnp.asarray(mask),
+                    jnp.asarray(rids), tok, cache, keys, *samp())
+                prefill_calls += 1
+                for slot, job in prefill_jobs.items():
+                    mirror[slot] = job["off"]
+                pmask = np.zeros((B,), bool)
+                for slot, job in finals:
+                    prefill_jobs.pop(slot)
+                    req = job["req"]
+                    sched.prefill_done(slot, t, len(history))
+                    req.status = "queued"
+                    if paged:
+                        pool.mark_written(job["blocks"])
+                    pmask[slot] = job["poison"]
+                    self.events.append(
+                        "prefill_done", t, rid=req.rid, slot=slot,
+                        hist=job["hist0"],
+                        chunks=-(-(len(job["prompt"]) - job["hist0"]) // C))
+                if pmask.any():
+                    if paged:
+                        paged_poison([s for s, j in finals if j["poison"]])
+                    else:
+                        cache = fns["poison"](cache, jnp.asarray(pmask))
             # -- paged: make every live row's next write position resident --
             # (BEFORE the emission is logged: a preempted row's pending
             # token stays pending, so its wake re-injects it exactly once)
@@ -1120,8 +1504,8 @@ class ServeEngine:
                 cow_pairs, dirty = [], False
                 for slot in list(sched.live_slots()):
                     rid = sched.owner[slot]
-                    if rid is None:
-                        continue    # parked as an earlier slot's LIFO victim
+                    if rid is None or slot in sched.prefilling:
+                        continue    # parked victim, or still mid-prefill
                     # the block is allocated even for a request completing
                     # this step (released again at completion): the decode
                     # READS the position it just wrote, so the write must
@@ -1150,36 +1534,101 @@ class ServeEngine:
             if not live:
                 if not pending and not waiting and not parked:
                     break                # everything terminal: done
+                if clock == "wall" and pending:
+                    # real-time idle: sleep toward the next arrival instead
+                    # of spinning the iteration counter
+                    gap = arr_of(pending[0]) - clock_now()
+                    if gap > 0:
+                        time.sleep(min(gap, 0.05))
                 t += 1                   # idle tick: clock runs to the next
                 continue                 # arrival without touching devices
-            # -- log this iteration's emission for every live slot ----------
-            history.append(tok)
-            owners = np.full((B,), -1, np.int64)
-            for s in live:
-                owners[s] = sched.owner[s]
-            owners_log.append(owners)
-            eos_hit = None
-            if eos_id is not None:
-                th = np.asarray(tok)     # documented per-step host sync
-                eos_hit = [bool(th[s] == eos_id) for s in range(B)]
-            done_now = sched.log_emissions(t, time.perf_counter(), eos_hit)
-            for s in done_now:               # completion frees the blocks;
-                release_slot_resources(s, upload=False)
-            if paged and done_now:           # ONE table upload per step,
-                cache["table"] = jnp.asarray(st["table"].copy())
+            # -- fused host sync: tokens (eos / streaming) + row health ------
+            # (ONE [B]-sized transfer per iteration — never one per concern)
+            host_tok = None
+            if need_sync:
+                if guard:
+                    synced = np.asarray(fns["sync"](tok, cache))
+                    host_tok, health = synced[0], synced[1].astype(bool)
+                else:
+                    host_tok = np.asarray(tok)
+                host_syncs += 1
+                if guard:
+                    # quarantine at the emission point: a row poisoned at
+                    # admission is evicted BEFORE its first token is logged
+                    quarantine(health, time.perf_counter())
+                    live = sched.live_slots()
+                    if not live:
+                        t += 1
+                        continue
+            emitting = [(s, sched.owner[s]) for s in live
+                        if s not in sched.prefilling]
+            if emitting:
+                # -- log this iteration's emission for every emitting slot --
+                history.append(tok)
+                emission_iters += 1
+                owners = np.full((B,), -1, np.int64)
+                for s, rid in emitting:
+                    owners[s] = rid
+                    first_emit.setdefault(rid, cnow)
+                owners_log.append(owners)
+                eos_hit = None
+                if eos_id is not None:
+                    eos_hit = [bool(host_tok[s] == eos_id)
+                               for s in range(B)]
+                done_now = sched.log_emissions(t, time.perf_counter(),
+                                               eos_hit)
+                if host_tok is not None and stream_hooks:
+                    # streaming observes the host copy only — nothing
+                    # feeds back into the jitted fns
+                    for s, rid in emitting:
+                        req = sched.requests[rid]
+                        tkn = int(host_tok[s])
+                        if req.on_token is not None:
+                            req.on_token(rid, tkn, t, cnow)
+                        if self._stream_cb is not None:
+                            self._stream_cb(rid, tkn, t, cnow)
+                for s in done_now:           # completion frees the blocks;
+                    release_slot_resources(s, upload=False)
+                if paged and done_now:       # ONE table upload per step,
+                    cache["table"] = jnp.asarray(st["table"].copy())
             # -- one ragged decode step for the whole slot batch -------------
-            # (only when a live row still needs it: a freshly admitted
-            # request's first token comes from admit(), not step)
-            if sched.live_slots():
-                live_now = sched.live_slots()
-                tok, cache, keys = fns["step"](self.params, tok, cache, keys,
-                                               *samp())
+            # (only when an emitting row still needs it: a freshly admitted
+            # request's first token comes from the prefill, not step; a
+            # mid-prefill row neither emits nor decodes)
+            live_now = [s for s in sched.live_slots()
+                        if s not in sched.prefilling]
+            if live_now:
+                if wd is not None:
+                    wd.arm(t)
+                if prefill_chunk:
+                    # mid-prefill rows are INACTIVE: their cache writes are
+                    # dropped and their lengths stay frozen
+                    act = np.ones((B,), bool)
+                    for s in prefill_jobs:
+                        act[s] = False
+                    tok, cache, keys = fns["step_active"](
+                        self.params, tok, cache, keys, *samp(),
+                        jnp.asarray(act))
+                    if not paged:
+                        dense_len[act] += 1
+                else:
+                    tok, cache, keys = fns["step"](self.params, tok, cache,
+                                                   keys, *samp())
                 decode_steps += 1
+                if wd is not None:
+                    # the watchdog's verdict needs the step's results on
+                    # the host — opting in trades async dispatch for a
+                    # truthful per-step latency reading
+                    jax.block_until_ready(tok)
+                    over = wd.expired()
+                    if over is not None:
+                        self.events.append("slow_step", t,
+                                           elapsed_s=round(over, 6),
+                                           timeout_s=wd.timeout_s)
+                    wd.disarm()
                 if paged:
                     for s in live_now:
                         row_len[s] += 1
-                if guard:
-                    quarantine(time.perf_counter())
             t += 1
         jax.block_until_ready(tok)
         wall = time.perf_counter() - t_start
@@ -1247,6 +1696,21 @@ class ServeEngine:
             "latency_steps": {"p50": pct(lat_steps, 50),
                               "p99": pct(lat_steps, 99)},
         }
+        # wall-clock serving metrics: TTFT is first-token latency in clock
+        # units (steps on the step clock, seconds on wall/virtual);
+        # goodput is the fraction of requests that finished "ok" — i.e.
+        # inside their deadline, since expiry flips status to "timeout"
+        ttft_vals = np.array([first_emit[r.rid] - arr_of(r)
+                              for r in requests if r.rid in first_emit])
+        metrics.update({
+            "clock": clock,
+            "admission": adm.name,
+            "prefill_chunk": prefill_chunk,
+            "host_syncs": host_syncs,
+            "emission_iters": emission_iters,
+            "goodput": round(status_counts.get("ok", 0) / len(requests), 4),
+            "ttft": {"p50": pct(ttft_vals, 50), "p99": pct(ttft_vals, 99)},
+        })
         if paged:
             st["cache"] = cache          # persist: the prefix cache stays
             lookup = pool.prefix_lookup_tokens

@@ -24,6 +24,13 @@ paging metrics line reports peak pool occupancy and the prefix hit rate.
 Prefill runs as ONE fused ``prefill_with_cache`` pass (prefill tok/s is
 reported alongside decode tok/s); enc-dec archs go through the public
 ``models.encode``.
+
+Wall-clock serving knobs (all built into one explicit ``ServePolicy``):
+``--prefill-chunk N`` interleaves chunked prompt prefill with decode,
+``--clock {step,wall,virtual}`` picks the scheduler clock, ``--admission
+slo`` (or the ``--policy slo`` shorthand) enables deadline-aware
+admission, and ``--stream`` prints each token live via
+``serve_stream()``.
 """
 from __future__ import annotations
 
@@ -61,9 +68,28 @@ def main(argv=None):
     ap.add_argument("--num-requests", type=int, default=8,
                     help="synthetic staggered workload size (continuous)")
     ap.add_argument("--policy", default="continuous",
-                    choices=["continuous", "static"],
+                    choices=["continuous", "static", "slo"],
                     help="scheduler policy for --max-slots serving (static "
-                         "= fixed-batch baseline on the same jitted fns)")
+                         "= fixed-batch baseline on the same jitted fns; "
+                         "slo = continuous scheduling with deadline-aware "
+                         "admission, shorthand for --admission slo)")
+    ap.add_argument("--admission", default=None, choices=["fcfs", "slo"],
+                    help="queue-ordering policy: fcfs (default) or "
+                         "earliest-deadline-first with feasibility culling")
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="cut admitted prompts into chunks of N tokens, "
+                         "prefilled one chunk per scheduler iteration "
+                         "interleaved with decode (0 = whole-prompt)")
+    ap.add_argument("--clock", default="step",
+                    choices=["step", "wall", "virtual"],
+                    help="scheduler clock: step units (default), the "
+                         "monotonic wall clock, or a deterministic virtual "
+                         "clock advancing --step-dt seconds per step")
+    ap.add_argument("--step-dt", type=float, default=1.0,
+                    help="virtual seconds per decode step (--clock virtual)")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve via serve_stream() and print each token "
+                         "the moment its decode step syncs to host")
     ap.add_argument("--eos-id", type=int, default=None,
                     help="optional early-stop token id (costs one host "
                          "sync per decode step)")
@@ -126,12 +152,33 @@ def main(argv=None):
                          sleep_level=args.sleep_level)
 
     if args.max_slots:
-        res = engine.serve(max_slots=args.max_slots,
-                           num_requests=args.num_requests,
-                           arrival=args.arrival, rate=args.rate,
-                           policy=args.policy, eos_id=args.eos_id,
-                           deadline_steps=args.deadline_steps,
-                           queue_limit=args.queue_limit)
+        from repro.engine import ServePolicy
+        sched = "continuous" if args.policy == "slo" else args.policy
+        admission = args.admission or \
+            ("slo" if args.policy == "slo" else "fcfs")
+        sp = ServePolicy(max_slots=args.max_slots,
+                         num_requests=args.num_requests,
+                         arrival=args.arrival, rate=args.rate,
+                         policy=sched, admission=admission,
+                         eos_id=args.eos_id,
+                         deadline_steps=args.deadline_steps,
+                         queue_limit=args.queue_limit,
+                         prefill_chunk=args.prefill_chunk,
+                         clock=args.clock, step_dt=args.step_dt)
+        if args.stream:
+            gen = engine.serve_stream(policy=sp)
+            n_streamed = 0
+            while True:
+                try:
+                    rid, tok = next(gen)
+                except StopIteration as fin:
+                    res = fin.value
+                    break
+                print(f"  [stream] rid {rid} token {tok}")
+                n_streamed += 1
+            print(f"  streamed {n_streamed} tokens live")
+        else:
+            res = engine.serve(policy=sp)
         for r in res["requests"][:2]:
             print(f"  request {r.rid} (arrival step {r.arrival_step}, "
                   f"{len(r.prompt)}-token prompt, status {r.status}): "
@@ -140,6 +187,9 @@ def main(argv=None):
         print(f"  admitted mid-decode: {m['admitted_mid_decode']} / "
               f"{m['n_requests']}")
         print(f"  status counts: {m['status_counts']}")
+        print(f"  clock {m['clock']} admission {m['admission']} "
+              f"goodput {m['goodput']} ttft p50/p99 "
+              f"{m['ttft']['p50']}/{m['ttft']['p99']}")
         if "paging" in m:
             pg = m["paging"]
             print(f"  paging: {pg['blocks_in_use_peak']}/"

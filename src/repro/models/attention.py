@@ -326,12 +326,57 @@ def _prefill_fill(buf, new, ring: bool):
     return jnp.roll(new[:, S - T:], S % T, axis=1)
 
 
-def gqa_decode(p, cfg, x, cache, *, window=None, ragged=False):
+def gqa_prefill_chunked(p, cfg, x, cache, lengths, hist):
+    """Chunked dense prefill: ``x`` holds each row's NEXT prompt chunk
+    (absolute positions ``hist[b]..lengths[b]``, packed left-aligned), which
+    is scattered into the row's [T] cache at its absolute slots and attended
+    over the row's full logical range — the dense-cache twin of
+    ``gqa_prefill_paged``. Rows with ``hist == lengths`` are pure
+    passengers: nothing is written, ``len`` is unchanged, and their (unused)
+    output attends an empty range.
+
+    A row's FIRST chunk (``hist == 0``) zeroes the whole cache row before
+    scattering: the whole-prompt path gets fresh zero rows from the
+    admission merge, and a quarantined previous tenant may have left NaN —
+    which would leak through decode's exactly-zero masked probabilities
+    (0 * NaN = NaN). Sliding windows are unsupported (the engine gates
+    chunked prefill to non-windowed archs). Returns (out [B,S,d],
+    new_cache)."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(p, cfg, x)
+    pos = hist[:, None] + jnp.arange(S)[None, :]                 # [B,S]
+    q = apply_rope(q, pos, cfg.rope_theta, cfg.partial_rotary_factor,
+                   interleaved=cfg.rope_2d)
+    k = apply_rope(k, pos, cfg.rope_theta, cfg.partial_rotary_factor,
+                   interleaved=cfg.rope_2d)
+    T = cache["k"].shape[1]
+    reset = ((hist == 0) & (lengths > 0))[:, None, None, None]
+    k_buf = jnp.where(reset, jnp.zeros_like(cache["k"]), cache["k"])
+    v_buf = jnp.where(reset, jnp.zeros_like(cache["v"]), cache["v"])
+    valid = jnp.arange(S)[None, :] < (lengths - hist)[:, None]   # [B,S]
+    dst = jnp.where(valid, pos, T)          # invalid lanes: dropped OOB
+    bidx = jnp.arange(B)[:, None]
+    k_buf = k_buf.at[bidx, dst].set(k.astype(k_buf.dtype), mode="drop")
+    v_buf = v_buf.at[bidx, dst].set(v.astype(v_buf.dtype), mode="drop")
+    new_len = lengths.astype(jnp.int32)
+    ctx = paged_prefill_attention_ref(q, k_buf, v_buf,
+                                      hist.astype(jnp.int32), new_len)
+    new_cache = {"k": k_buf, "v": v_buf, "len": new_len}
+    return ctx.reshape(B, S, -1) @ p["wo"], new_cache
+
+
+def gqa_decode(p, cfg, x, cache, *, window=None, ragged=False, active=None):
     """One-token decode. x: [B,1,d]; cache: {"k","v": [B,T,KV,hd], "len": [B]}.
 
     ``ragged=True`` is the continuous-batching path: every row sits at its
     own cache position (``len`` is genuinely per-row), so the write is a
     per-row scatter instead of one dynamic_update_slice.
+
+    ``active`` ([B] bool, ragged-only) marks rows genuinely decoding this
+    step: inactive rows (slots mid-chunked-prefill) drop their cache write
+    and keep their ``len`` — a decode step must not clobber a half-filled
+    prompt. ``active=None`` (or all-True) is value-identical to the
+    historical path.
     """
     B = x.shape[0]
     q, k, v = _project_qkv(p, cfg, x)
@@ -349,9 +394,13 @@ def gqa_decode(p, cfg, x, cache, *, window=None, ragged=False):
         # synchronized branch below stays the default.
         slot = cache["len"] % T if ring else jnp.minimum(cache["len"], T - 1)
         bidx = jnp.arange(B)
-        k_cache = cache["k"].at[bidx, slot].set(k[:, 0])
-        v_cache = cache["v"].at[bidx, slot].set(v[:, 0])
+        if active is not None:
+            slot = jnp.where(active, slot, T)        # inactive: dropped OOB
+        k_cache = cache["k"].at[bidx, slot].set(k[:, 0], mode="drop")
+        v_cache = cache["v"].at[bidx, slot].set(v[:, 0], mode="drop")
     else:
+        if active is not None:
+            raise ValueError("active mask requires ragged=True")
         # Synchronized batched decode: all rows advance together, so the
         # write is a dynamic_update_slice on the (unsharded) time axis. A
         # per-row scatter (`.at[arange(B), slot]`) forces GSPMD to
@@ -365,7 +414,8 @@ def gqa_decode(p, cfg, x, cache, *, window=None, ragged=False):
                                                       axis=1)
         v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot0,
                                                       axis=1)
-    new_len = cache["len"] + 1
+    new_len = cache["len"] + (jnp.int32(1) if active is None
+                              else active.astype(jnp.int32))
     out = decode_attention(q, k_cache, v_cache, new_len,
                            window=0 if ring else win,
                            backend=registry.backend_for(cfg, "decode_attn"))
@@ -485,11 +535,14 @@ def gqa_prefill_paged(p, cfg, x, cache, table, lengths, hist):
     return ctx.reshape(B, S, -1) @ p["wo"], new_cache
 
 
-def gqa_decode_paged(p, cfg, x, cache, table):
+def gqa_decode_paged(p, cfg, x, cache, table, active=None):
     """One-token paged decode: scatter the new K/V at pool slot
     (table[b, len // bs], len % bs), attend over the row's logical range.
     Always ragged (per-row ``len``); sliding windows are unsupported — the
-    engine gates paged mode to non-windowed GQA archs."""
+    engine gates paged mode to non-windowed GQA archs.
+
+    ``active`` ([B] bool): rows mid-chunked-prefill drop their write into
+    the out-of-bounds lane and keep their ``len`` (see ``gqa_decode``)."""
     B = x.shape[0]
     q, k, v = _project_qkv(p, cfg, x)
     pos = cache["len"][:, None]                                  # [B,1]
@@ -505,12 +558,15 @@ def gqa_decode_paged(p, cfg, x, cache, table):
     # rows without an allocated block here (freed slots that keep stepping)
     # drop their write out of bounds — the trash block stays all-zero
     phys = jnp.where(phys == trash, trash + 1, phys)
+    if active is not None:
+        phys = jnp.where(active, phys, trash + 1)
     off = cache["len"] % bs
     k_pool = cache["k"].at[phys, off].set(k[:, 0].astype(cache["k"].dtype),
                                           mode="drop")
     v_pool = cache["v"].at[phys, off].set(v[:, 0].astype(cache["v"].dtype),
                                           mode="drop")
-    new_len = cache["len"] + 1
+    new_len = cache["len"] + (jnp.int32(1) if active is None
+                              else active.astype(jnp.int32))
     if registry.backend_for(cfg, "paged_attn") == "pallas":
         from repro.kernels import ops
         out = ops.paged_decode_attention(q, k_pool, v_pool, table, new_len,
@@ -637,11 +693,53 @@ def mla_prefill(p, cfg, x, positions, cache, *, lengths=None):
     return ctx @ p["wo"], new_cache
 
 
-def mla_decode(p, cfg, x, cache, *, ragged=False):
+def mla_prefill_chunked(p, cfg, x, cache, lengths, hist):
+    """Chunked MLA prefill: scatter each row's next chunk of compressed
+    latents (c_kv rms'd, k_rope roped — exactly what ``mla_prefill``
+    caches) at absolute positions ``hist[b]..lengths[b]``, then attend the
+    chunk queries over the row's full logical range by re-materialising
+    per-head K/V from the CACHED latents (the ``mla_apply`` math on the
+    cache instead of the activations). First chunks zero the row first —
+    see ``gqa_prefill_chunked`` for why (NaN from a quarantined previous
+    tenant would leak through decode's masked-but-multiplied lanes).
+    Returns (out [B,S,d], new_cache)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    pos = hist[:, None] + jnp.arange(S)[None, :]                 # [B,S]
+    q_nope, q_rope = _mla_q(p, cfg, x, pos)
+    c_kv, k_rope = _mla_latent(p, cfg, x, pos)
+    T = cache["c_kv"].shape[1]
+    reset = ((hist == 0) & (lengths > 0))[:, None, None]
+    c_buf = jnp.where(reset, jnp.zeros_like(cache["c_kv"]), cache["c_kv"])
+    r_buf = jnp.where(reset, jnp.zeros_like(cache["k_rope"]),
+                      cache["k_rope"])
+    valid = jnp.arange(S)[None, :] < (lengths - hist)[:, None]   # [B,S]
+    dst = jnp.where(valid, pos, T)          # invalid lanes: dropped OOB
+    bidx = jnp.arange(B)[:, None]
+    c_buf = c_buf.at[bidx, dst].set(c_kv.astype(c_buf.dtype), mode="drop")
+    r_buf = r_buf.at[bidx, dst].set(k_rope.astype(r_buf.dtype), mode="drop")
+    new_len = lengths.astype(jnp.int32)
+    kvb = (c_buf @ p["wkv_b"]).reshape(B, T, H,
+                                       m.qk_nope_head_dim + m.v_head_dim)
+    k_nope, v = kvb[..., :m.qk_nope_head_dim], kvb[..., m.qk_nope_head_dim:]
+    q = jnp.concatenate([q_nope, q_rope], -1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(r_buf[:, :, None, :],
+                                  (B, T, H, m.qk_rope_head_dim))], -1)
+    ctx = paged_prefill_attention_ref(q, k, v, hist.astype(jnp.int32),
+                                      new_len)
+    new_cache = {"c_kv": c_buf, "k_rope": r_buf, "len": new_len}
+    return ctx.reshape(B, S, -1) @ p["wo"], new_cache
+
+
+def mla_decode(p, cfg, x, cache, *, ragged=False, active=None):
     """Absorbed-matmul MLA decode: attention runs in the latent space, so the
     KV cache stores only (c_kv, k_rope) — the compressed cache that makes
     DeepSeek-V3 decode cheap. ``ragged=True`` scatters each row at its own
-    slot (continuous batching; see ``gqa_decode``)."""
+    slot (continuous batching; see ``gqa_decode``). ``active`` ([B] bool,
+    ragged-only) drops the write and freezes ``len`` for rows that are
+    mid-chunked-prefill (see ``gqa_decode``)."""
     m = cfg.mla
     B = x.shape[0]
     H = cfg.num_heads
@@ -653,9 +751,14 @@ def mla_decode(p, cfg, x, cache, *, ragged=False):
     if ragged:
         slot = cache["len"] % T if ring else jnp.minimum(cache["len"], T - 1)
         bidx = jnp.arange(B)
-        c_cache = cache["c_kv"].at[bidx, slot].set(c_kv[:, 0])
-        r_cache = cache["k_rope"].at[bidx, slot].set(k_rope[:, 0])
+        if active is not None:
+            slot = jnp.where(active, slot, T)        # inactive: dropped OOB
+        c_cache = cache["c_kv"].at[bidx, slot].set(c_kv[:, 0], mode="drop")
+        r_cache = cache["k_rope"].at[bidx, slot].set(k_rope[:, 0],
+                                                     mode="drop")
     else:
+        if active is not None:
+            raise ValueError("active mask requires ragged=True")
         # synchronized batched decode (see gqa_decode): time-axis DUS
         if ring:
             slot0 = cache["len"][0] % T              # ring buffer (windowed)
@@ -665,7 +768,8 @@ def mla_decode(p, cfg, x, cache, *, ragged=False):
                                                       slot0, 1)
         r_cache = jax.lax.dynamic_update_slice_in_dim(cache["k_rope"], k_rope,
                                                       slot0, 1)
-    new_len = cache["len"] + 1
+    new_len = cache["len"] + (jnp.int32(1) if active is None
+                              else active.astype(jnp.int32))
 
     wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim)
     w_uk = wkv_b[..., :m.qk_nope_head_dim]           # [kvr,H,nope]

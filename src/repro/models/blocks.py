@@ -90,15 +90,19 @@ def decoder_layer_apply(p, cfg, x, positions, *, use_moe: bool, causal=True,
 
 
 def decoder_layer_decode(p, cfg, x, cache, *, use_moe: bool,
-                         ragged: bool = False, paged_table=None):
+                         ragged: bool = False, paged_table=None,
+                         active=None):
     h = apply_norm(cfg.norm, p["ln1"], x)
     if paged_table is not None:
         # paged KV cache: per-row block table, GQA only (model.py gates)
-        a, cache = attn.gqa_decode_paged(p["attn"], cfg, h, cache, paged_table)
+        a, cache = attn.gqa_decode_paged(p["attn"], cfg, h, cache,
+                                         paged_table, active=active)
     elif cfg.attn_kind == "mla":
-        a, cache = attn.mla_decode(p["attn"], cfg, h, cache, ragged=ragged)
+        a, cache = attn.mla_decode(p["attn"], cfg, h, cache, ragged=ragged,
+                                   active=active)
     else:
-        a, cache = attn.gqa_decode(p["attn"], cfg, h, cache, ragged=ragged)
+        a, cache = attn.gqa_decode(p["attn"], cfg, h, cache, ragged=ragged,
+                                   active=active)
     x = x + a
     h = apply_norm(cfg.norm, p["ln2"], x)
     if use_moe:
@@ -112,18 +116,29 @@ def decoder_layer_decode(p, cfg, x, cache, *, use_moe: bool,
 
 
 def decoder_layer_prefill(p, cfg, x, positions, cache, *, use_moe: bool,
-                          lengths=None, paged=None):
+                          lengths=None, paged=None, chunk_hist=None):
     """Fused full-sequence prefill of one decoder layer: the training-shaped
     forward (blockwise/flash attention, dropless MoE) that also fills the
     decode cache. ``lengths`` ([B] int32) threads ragged per-row prompt
     lengths into the cache fill. ``paged`` = (table [B,nb], hist [B]) routes
     the paged ragged-tail prefill instead (GQA only; positions are derived
-    from ``hist`` inside). Returns (x, new_cache)."""
+    from ``hist`` inside). ``chunk_hist`` ([B] int32) routes the CHUNKED
+    dense prefill: ``x`` holds each row's next prompt chunk (absolute
+    positions chunk_hist..lengths), scattered into the dense cache at its
+    absolute slots (positions likewise derived inside). Returns
+    (x, new_cache)."""
     h = apply_norm(cfg.norm, p["ln1"], x)
     if paged is not None:
         table, hist = paged
         a, cache = attn.gqa_prefill_paged(p["attn"], cfg, h, cache, table,
                                           lengths, hist)
+    elif chunk_hist is not None:
+        if cfg.attn_kind == "mla":
+            a, cache = attn.mla_prefill_chunked(p["attn"], cfg, h, cache,
+                                                lengths, chunk_hist)
+        else:
+            a, cache = attn.gqa_prefill_chunked(p["attn"], cfg, h, cache,
+                                                lengths, chunk_hist)
     elif cfg.attn_kind == "mla":
         a, cache = attn.mla_prefill(p["attn"], cfg, h, positions, cache,
                                     lengths=lengths)

@@ -484,7 +484,12 @@ def decode_step(cfg: ModelConfig, params: PyTree, batch: Dict[str, Any],
     cache lengths: attention caches scatter each row's k/v at its own slot
     instead of one synchronized dynamic_update_slice, so a continuous-
     batching engine can run rows at different positions in ONE jitted step.
-    SSM/recurrent state layers are per-row already and ignore the flag."""
+    SSM/recurrent state layers are per-row already and ignore the flag.
+
+    ``batch["active"]`` ([B] bool, ragged attention families only): rows
+    marked inactive (slots mid-chunked-prefill) drop their cache write and
+    keep their per-row ``len`` — absent (or all-True) is value-identical
+    to the historical step."""
     fam = cfg.family
     x = _embed(cfg, params, batch["token"][:, None])     # [B,1,d]
     blk = params["blocks"]
@@ -492,20 +497,27 @@ def decode_step(cfg: ModelConfig, params: PyTree, batch: Dict[str, Any],
     # paged cache pytrees carry the engine-owned block table at the top level
     # (a host-side trace-time check — no new static argument)
     table = cache.get("table") if isinstance(cache, dict) else None
+    active = batch.get("active")
+    if active is not None and not (ragged or table is not None):
+        raise NotImplementedError(
+            "batch['active'] requires ragged decode (chunked prefill is a "
+            "continuous-batching feature)")
 
     if fam in (FAMILY_DENSE, FAMILY_MOE, FAMILY_VLM):
         if "dense" in blk:
             fn = lambda lp, h, c: B.decoder_layer_decode(lp, cfg, h, c,
                                                          use_moe=False,
                                                          ragged=ragged,
-                                                         paged_table=table)
+                                                         paged_table=table,
+                                                         active=active)
             x, nc = _decode_scan(fn, blk["dense"], cache["dense"], x)
             new_cache["dense"] = nc
         if "moe" in blk:
             fn = lambda lp, h, c: B.decoder_layer_decode(lp, cfg, h, c,
                                                          use_moe=True,
                                                          ragged=ragged,
-                                                         paged_table=table)
+                                                         paged_table=table,
+                                                         active=active)
             x, nc = _decode_scan(fn, blk["moe"], cache["moe"], x)
             new_cache["moe"] = nc
         if cfg.mtp:
@@ -623,6 +635,7 @@ def prefill_with_cache(cfg: ModelConfig, params: PyTree,
             # computed and written.
             table = cache.get("table") if isinstance(cache, dict) else None
             paged = None
+            chunk_hist = None
             if table is not None:
                 if lengths is None:
                     raise NotImplementedError(
@@ -637,16 +650,30 @@ def prefill_with_cache(cfg: ModelConfig, params: PyTree,
                 # index (lengths - hist) - 1 (the allocator caps hist at
                 # lengths - 1, so admitted rows always have a tail)
                 tail_lengths = eff_lengths - hist
+            elif batch.get("hist") is not None:
+                # dense-cache chunked prefill: x holds only each row's next
+                # prompt chunk (absolute positions hist..lengths), scattered
+                # into the dense [B,T] cache at its absolute slots
+                if lengths is None:
+                    raise NotImplementedError(
+                        "chunked prefill requires batch['lengths'] (chunks "
+                        "are always ragged)")
+                if fam == FAMILY_VLM:
+                    raise NotImplementedError(
+                        "chunked prefill does not support VLM prompts (the "
+                        "patch prefix is prefilled in one piece)")
+                chunk_hist = batch["hist"].astype(jnp.int32)
+                tail_lengths = eff_lengths - chunk_hist
             if "dense" in blk:
                 fn = lambda lp, h, c: B.decoder_layer_prefill(
                     lp, cfg, h, positions, c, use_moe=False,
-                    lengths=eff_lengths, paged=paged)
+                    lengths=eff_lengths, paged=paged, chunk_hist=chunk_hist)
                 x, nc = _decode_scan(fn, blk["dense"], cache["dense"], x)
                 new_cache["dense"] = nc
             if "moe" in blk:
                 fn = lambda lp, h, c: B.decoder_layer_prefill(
                     lp, cfg, h, positions, c, use_moe=True,
-                    lengths=eff_lengths, paged=paged)
+                    lengths=eff_lengths, paged=paged, chunk_hist=chunk_hist)
                 x, nc = _decode_scan(fn, blk["moe"], cache["moe"], x)
                 new_cache["moe"] = nc
             if cfg.mtp:

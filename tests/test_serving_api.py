@@ -1,0 +1,276 @@
+"""Wall-clock serving API: ServePolicy, chunked prefill, SLO admission,
+streaming, and the fused per-step host sync.
+
+The acceptance bar throughout is BITWISE parity: chunked prefill must
+produce token-for-token the same greedy streams as whole-prompt
+admission (dense AND paged, staggered arrivals, chunk widths that do not
+divide the prompt length), and streaming callbacks must not perturb the
+decode at all."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.engine import Request, RunSpec, ServePolicy
+from repro.engine.serve import ServeEngine
+
+SPEC = RunSpec(arch="stablelm-1.6b", reduced=True, mesh_data=1,
+               mesh_model=1)
+
+
+@pytest.fixture(scope="module")
+def dense_engine():
+    eng = ServeEngine(SPEC, batch=2, prompt_len=12, gen=8, verbose=False)
+    eng.build()
+    return eng
+
+
+@pytest.fixture(scope="module")
+def paged_engine():
+    # pool sized well above the 2-slot working set so registered prefix
+    # blocks survive across serve() calls (the warm-prefix chunked test)
+    eng = ServeEngine(SPEC, batch=2, prompt_len=12, gen=8, verbose=False,
+                      paged=True, kv_block_size=4, kv_pool_blocks=40)
+    eng.build()
+    return eng
+
+
+def _staggered(vocab, n=5, seed=0, plen=12, gen=8, rid0=0):
+    """Deterministic Poisson-staggered workload; rid0 offsets rids so two
+    serves of "the same" workload never collide in a shared history."""
+    from repro.engine import batching
+    proto = batching.synthetic_requests(n, vocab, plen, gen,
+                                        arrival="poisson", rate=0.7,
+                                        seed=seed)
+    return [Request(rid=rid0 + r.rid, prompt=list(r.prompt),
+                    max_gen=r.max_gen, arrival_step=r.arrival_step)
+            for r in proto]
+
+
+def _tok_map(res, rid0=0):
+    return {r.rid - rid0: r.tokens.tolist() for r in res["requests"]}
+
+
+# ---------------------------------------------------------------------------
+# ServePolicy resolver + deprecated kwargs
+# ---------------------------------------------------------------------------
+
+def test_legacy_kwargs_warn_and_match_policy(dense_engine):
+    """serve(max_slots=...) still works, emits ONE DeprecationWarning
+    naming the kwargs, and is bitwise identical to the ServePolicy path."""
+    vocab = dense_engine.cfg.vocab_size
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")      # no warning on the new path
+        base = dense_engine.serve(_staggered(vocab, n=3),
+                                  policy=ServePolicy(max_slots=2))
+    with pytest.warns(DeprecationWarning, match="max_slots"):
+        legacy = dense_engine.serve(_staggered(vocab, n=3, rid0=100),
+                                    max_slots=2)
+    assert _tok_map(legacy, rid0=100) == _tok_map(base)
+
+
+def test_policy_instance_plus_legacy_kwargs_is_type_error(dense_engine):
+    with pytest.raises(TypeError, match="does not combine"):
+        dense_engine.serve(policy=ServePolicy(max_slots=2), max_slots=2)
+
+
+def test_policy_validation():
+    with pytest.raises(ValueError, match="clock"):
+        ServePolicy(clock="sundial")
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        ServePolicy(prefill_chunk=-1)
+    with pytest.raises(ValueError, match="admission"):
+        ServePolicy(admission="vip")
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill: bitwise parity with whole-prompt admission
+# ---------------------------------------------------------------------------
+
+def test_chunked_prefill_bitwise_parity_dense(dense_engine):
+    """Chunk width 5 over 12-token prompts (non-multiple), staggered
+    Poisson arrivals over 2 slots: token streams must be bitwise
+    identical to whole-prompt prefill."""
+    vocab = dense_engine.cfg.vocab_size
+    base = dense_engine.serve(_staggered(vocab),
+                              policy=ServePolicy(max_slots=2))
+    chunk = dense_engine.serve(_staggered(vocab, rid0=100),
+                               policy=ServePolicy(max_slots=2,
+                                                  prefill_chunk=5))
+    assert _tok_map(chunk, rid0=100) == _tok_map(base)
+    # the chunked run really did split prompts: more prefill dispatches
+    # than admissions (12 tokens / width 5 -> 3 chunks per request)
+    assert chunk["metrics"]["prefill_calls"] > \
+        base["metrics"]["prefill_calls"]
+    assert chunk["metrics"]["prefill_chunk"] == 5
+
+
+def test_chunked_prefill_bitwise_parity_paged(paged_engine):
+    vocab = paged_engine.cfg.vocab_size
+    base = paged_engine.serve(_staggered(vocab, seed=3),
+                              policy=ServePolicy(max_slots=2))
+    chunk = paged_engine.serve(_staggered(vocab, seed=3, rid0=100),
+                               policy=ServePolicy(max_slots=2,
+                                                  prefill_chunk=5))
+    assert _tok_map(chunk, rid0=100) == _tok_map(base)
+
+
+def test_chunked_prefill_prefix_hits_skip_cached_spans(paged_engine):
+    """Re-serving identical prompts chunked must consume the prefix cache
+    (hit spans skipped -> fewer marginal prefill tokens) and stay bitwise
+    identical; blocks a chunked admission registers must also be
+    matchable by LATER chunked admissions once marked written."""
+    vocab = paged_engine.cfg.vocab_size
+    base = paged_engine.serve(_staggered(vocab, n=3, seed=7),
+                              policy=ServePolicy(max_slots=2))
+    warm = paged_engine.serve(_staggered(vocab, n=3, seed=7, rid0=100),
+                              policy=ServePolicy(max_slots=2,
+                                                 prefill_chunk=5))
+    assert _tok_map(warm, rid0=100) == _tok_map(base)
+    assert warm["metrics"]["paging"]["prefix_hit_rate"] > 0.5
+    # chunked-registered blocks feed the NEXT chunked run's prefix hits
+    warm2 = paged_engine.serve(_staggered(vocab, n=3, seed=7, rid0=200),
+                               policy=ServePolicy(max_slots=2,
+                                                  prefill_chunk=5))
+    assert _tok_map(warm2, rid0=200) == _tok_map(base)
+    assert warm2["metrics"]["paging"]["prefix_hit_rate"] > 0.5
+
+
+def test_long_prompt_does_not_stall_coresidents(dense_engine):
+    """A long prompt prefilling in chunks must not starve its co-resident:
+    the short request's first token lands BEFORE the long prompt finishes
+    prefilling, and everything still completes."""
+    vocab = dense_engine.cfg.vocab_size
+    rng = np.random.default_rng(11)
+    long_r = Request(rid=0, prompt=rng.integers(
+        1, vocab, size=12).tolist(), max_gen=4)
+    short_r = Request(rid=1, prompt=rng.integers(
+        1, vocab, size=3).tolist(), max_gen=6)
+    res = dense_engine.serve(
+        [long_r, short_r],
+        policy=ServePolicy(max_slots=2, prefill_chunk=3, clock="virtual"))
+    assert all(r.status == "ok" for r in res["requests"])
+    done = [e for e in dense_engine.events.of("prefill_done")
+            if e["rid"] == 0]
+    assert done and done[-1]["chunks"] == 4
+    # short_r (single chunk) emits at its admission iteration (t=0);
+    # long_r first emits only after its 4th chunk. ttft p50 below the
+    # long prompt's chunk count proves the interleave.
+    assert res["metrics"]["ttft"]["p50"] < done[-1]["chunks"]
+
+
+# ---------------------------------------------------------------------------
+# Fused host sync
+# ---------------------------------------------------------------------------
+
+def test_single_fused_host_transfer_per_step(dense_engine):
+    """eos scanning + health quarantine + streaming share ONE [2, B] host
+    transfer per emission iteration; with none of them armed there are
+    ZERO per-step transfers."""
+    vocab = dense_engine.cfg.vocab_size
+    free = dense_engine.serve(_staggered(vocab, n=3),
+                              policy=ServePolicy(max_slots=2))
+    assert free["metrics"]["host_syncs"] == 0
+    eng = ServeEngine(SPEC, batch=2, prompt_len=12, gen=8, verbose=False,
+                      resilience="on")
+    res = eng.serve(_staggered(vocab, n=3, rid0=100),
+                    policy=ServePolicy(max_slots=2, eos_id=0))
+    m = res["metrics"]
+    assert m["emission_iters"] > 0
+    assert m["host_syncs"] == m["emission_iters"]
+
+
+# ---------------------------------------------------------------------------
+# Streaming
+# ---------------------------------------------------------------------------
+
+def test_serve_stream_bitwise_and_full_coverage(dense_engine):
+    """serve_stream() yields every emitted token in order and the greedy
+    rows are bitwise identical to the callback-free serve."""
+    vocab = dense_engine.cfg.vocab_size
+    base = dense_engine.serve(_staggered(vocab, n=4),
+                              policy=ServePolicy(max_slots=2))
+    gen = dense_engine.serve_stream(_staggered(vocab, n=4, rid0=100),
+                                    policy=ServePolicy(max_slots=2))
+    streamed = {}
+    while True:
+        try:
+            rid, tok = next(gen)
+        except StopIteration as fin:
+            res = fin.value
+            break
+        streamed.setdefault(rid - 100, []).append(tok)
+    tb = _tok_map(base)
+    assert _tok_map(res, rid0=100) == tb
+    assert streamed == {k: v for k, v in tb.items() if v}
+
+
+def test_on_token_callback_does_not_perturb_decode(dense_engine):
+    vocab = dense_engine.cfg.vocab_size
+    base = dense_engine.serve(_staggered(vocab, n=3),
+                              policy=ServePolicy(max_slots=2))
+    seen = []
+    reqs = _staggered(vocab, n=3, rid0=100)
+    for r in reqs:
+        r.on_token = lambda rid, tok, step, wt: seen.append((rid, tok))
+    res = dense_engine.serve(reqs, policy=ServePolicy(max_slots=2))
+    tb = _tok_map(base)
+    assert _tok_map(res, rid0=100) == tb
+    got = {}
+    for rid, tok in seen:
+        got.setdefault(rid - 100, []).append(tok)
+    assert got == {k: v for k, v in tb.items() if v}
+
+
+# ---------------------------------------------------------------------------
+# Clocks + SLO admission
+# ---------------------------------------------------------------------------
+
+def _slo_workload(rid0=0):
+    """Two doomed requests (deadline < their own decode time) arriving
+    first, six feasible short ones behind them. FCFS burns both slots on
+    the doomed pair; SLO's feasibility cull skips them."""
+    reqs = []
+    for i in range(2):
+        reqs.append(Request(rid=rid0 + i, prompt=list(range(1, 13)),
+                            max_gen=8, arrival_step=0, deadline_steps=6))
+    for i in range(6):
+        reqs.append(Request(rid=rid0 + 10 + i, prompt=list(range(1, 7)),
+                            max_gen=3, arrival_step=0, deadline_steps=14))
+    return reqs
+
+
+def test_slo_admission_beats_fcfs_goodput(dense_engine):
+    fcfs = dense_engine.serve(
+        _slo_workload(),
+        policy=ServePolicy(max_slots=2, clock="virtual",
+                           admission="fcfs"))["metrics"]
+    slo = dense_engine.serve(
+        _slo_workload(rid0=100),
+        policy=ServePolicy(max_slots=2, clock="virtual",
+                           admission="slo"))["metrics"]
+    assert slo["goodput"] > fcfs["goodput"]
+    assert slo["ttft"]["p99"] <= fcfs["ttft"]["p99"]
+    assert np.isfinite(slo["ttft"]["p99"])
+
+
+def test_virtual_clock_is_deterministic(dense_engine):
+    vocab = dense_engine.cfg.vocab_size
+    runs = []
+    for rid0 in (0, 100):
+        res = dense_engine.serve(
+            _staggered(vocab, n=4, rid0=rid0),
+            policy=ServePolicy(max_slots=2, clock="virtual", step_dt=0.25,
+                               prefill_chunk=5))
+        runs.append((_tok_map(res, rid0=rid0), res["metrics"]["ttft"],
+                     res["metrics"]["goodput"]))
+    assert runs[0] == runs[1]
+
+
+def test_step_clock_metrics_report_policy(dense_engine):
+    vocab = dense_engine.cfg.vocab_size
+    m = dense_engine.serve(_staggered(vocab, n=2),
+                           policy=ServePolicy(max_slots=2))["metrics"]
+    assert m["clock"] == "step"
+    assert m["admission"] == "fcfs"
+    assert m["prefill_chunk"] == 0
